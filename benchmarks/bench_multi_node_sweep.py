@@ -1,0 +1,74 @@
+"""Fig. 6 + Fig. 7: multi-node sweep detects inter-node communication
+degradation; 2-node groups already suffice, and inflation scales
+predictably as faulty nodes are added (cluster level).
+
+Single-node sweeps CANNOT see these faults (a NIC reroute looks healthy
+from inside the node) — the published motivation for the 2-node default."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import GUARD_WORKLOAD, Table, pct
+from repro.core.sweep import SweepConfig, multi_node_sweep, single_node_sweep
+from repro.simcluster import FaultKind, FaultRates, SimCluster
+
+ZERO_RATES = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0, nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0, admission_grey_p=0)
+
+
+
+def run() -> Table:
+    t = Table("Multi-node sweep: inter-node comm validation", "fig6_fig7")
+    c = SimCluster(n_active=16, n_spare=0, workload=GUARD_WORKLOAD,
+                   rates=ZERO_RATES, seed=4)
+    # node 1: NIC down (rerouted) — single-node sweep passes, 2-node fails
+    c.injector.inject(FaultKind.NIC_DOWN, 1, device=3)
+    # node 2: degraded link
+    c.injector.inject(FaultKind.NIC_DEGRADED, 2, severity=0.7)
+
+    cfg = SweepConfig()
+    ref = c.reference().pair_step_time
+
+    for node, kind in ((1, "nic_down"), (2, "nic_degraded")):
+        s1 = single_node_sweep(c, node, cfg)
+        s2 = multi_node_sweep(c, node, buddies=[0], cfg=cfg)
+        med = float(np.median(s2.measurements["step_times"]))
+        t.add(f"node{node} ({kind}) 1-node sweep", "passes (blind)",
+              "PASS" if s1.passed else "FAIL",
+              "intra-node probes can't see inter-node links")
+        t.add(f"node{node} ({kind}) 2-node sweep", "step inflation",
+              f"{'FAIL' if not s2.passed else 'PASS'} "
+              f"(+{pct(med/ref - 1)})",
+              f"{ref:.2f}s -> {med:.2f}s")
+
+    # Fig. 6: group sizes 2/4/8 — 2-node already detects
+    for g in (2, 4, 8):
+        buddies = [n for n in range(3, 3 + g - 1)]
+        rep = multi_node_sweep(c, 1, buddies=buddies,
+                               cfg=SweepConfig(group_size=g))
+        med = float(np.median(rep.measurements["step_times"]))
+        t.add(f"{g}-node group w/ faulty node", "detectable at 2",
+              f"{'detected' if not rep.passed else 'missed'}",
+              f"group step {med:.2f}s vs ref {ref:.2f}s")
+
+    # Fig. 7: cluster-level — inflation grows with faulty-node count
+    for nbad in (0, 1, 2, 4):
+        cc = SimCluster(n_active=32, n_spare=0, workload=GUARD_WORKLOAD,
+                        rates=ZERO_RATES, seed=5)
+        for n in range(nbad):
+            cc.injector.inject(FaultKind.NIC_DEGRADED, n, severity=0.3 + 0.15 * n)
+        times = [cc.run_step()["step_time"] for _ in range(30)]
+        t.add(f"cluster w/ {nbad} faulty", "scales predictably",
+              f"{np.mean(times):.2f}s",
+              "synchronous max-composition over 32 nodes")
+    return t
+
+
+def main() -> Table:
+    t = run()
+    t.show()
+    t.save("fig6_multi_node_sweep")
+    return t
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Fig. 3 + Fig. 4 + Table 1: NIC failure -> transparent reroute.
+
+A dead adapter's traffic rides the fallback link (Table 1's GPU7 -> NIC0
+misrouting): the job does NOT fail, the fallback link carries 2x traffic
+(Fig. 4), and the step time inflates by the exposed-communication slice
+(Fig. 3's 8.7 s -> 8.4 s once fixed)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FIG3_WORKLOAD, Table
+from repro.simcluster import FaultKind, FaultRates, SimCluster
+
+ZERO_RATES = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0, nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0, admission_grey_p=0)
+
+
+
+def run() -> Table:
+    t = Table("NIC-down reroute: step inflation + traffic asymmetry",
+              "fig3_fig4_table1")
+    c = SimCluster(n_active=8, n_spare=0, workload=FIG3_WORKLOAD,
+                   rates=ZERO_RATES, seed=2)
+
+    def mean_step(steps=40):
+        return float(np.mean([c.run_step()["step_time"]
+                              for _ in range(steps)]))
+
+    healthy = mean_step()
+    # kill NIC 7 of node 3 (the paper's example: GPU7's adapter down)
+    c.injector.inject(FaultKind.NIC_DOWN, node=3, now=c.t, device=7)
+    c.fleet.nic_tx_bytes[:] = 0.0
+    degraded = mean_step()
+    tx = c.fleet.nic_tx_bytes[3].copy()
+    tx_ok = c.fleet.nic_tx_bytes[0].copy()
+    # repair and re-measure (the Fig. 3 fix)
+    c.fleet.nic_up[3, 7] = True
+    fixed = mean_step()
+
+    t.add("step healthy", "8.4 s", f"{healthy:.2f} s")
+    t.add("step w/ NIC down", "8.7 s", f"{degraded:.2f} s",
+          f"+{degraded-healthy:.2f}s (paper: +0.3s)")
+    t.add("step after fix", "8.4 s", f"{fixed:.2f} s")
+    t.add("expected NIC (GPU7)", "7", "7", "Table 1")
+    t.add("actual NIC (GPU7)", "0 (misrouted)",
+          "0" if tx[7] == 0 else "7", "dead link carries no traffic")
+    t.add("fallback link traffic", "~2x", f"{tx[0]/tx[1]:.2f}x",
+          "Fig. 4: NIC0 carries its own + the dead link's share")
+    t.add("healthy node links", "1x each",
+          f"{tx_ok.max()/tx_ok.min():.2f}x", "uniform shares elsewhere")
+    return t
+
+
+def main() -> Table:
+    t = run()
+    t.show()
+    t.save("fig3_nic_reroute")
+    return t
+
+
+if __name__ == "__main__":
+    main()

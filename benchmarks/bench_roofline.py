@@ -1,0 +1,52 @@
+"""Roofline table: per (arch x shape) single-pod roofline terms from the
+dry-run artifacts (EXPERIMENTS.md §Roofline reads this output).
+
+Run ``python -m repro.launch.dryrun --all`` first; this bench aggregates
+benchmarks/results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, Table
+
+DRYRUN_DIR = os.path.join(RESULTS_DIR, "dryrun")
+
+
+def load_cells(mesh: str = "single"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run() -> Table:
+    t = Table("Roofline terms per (arch x shape), 16x16 mesh", "roofline")
+    cells = load_cells("single")
+    if not cells:
+        t.add("no dry-run artifacts", "-", "-",
+              "run: python -m repro.launch.dryrun --all")
+        return t
+    for c in cells:
+        r = c["roofline"]
+        name = f"{c['arch']}/{c['shape']}"
+        terms = (f"c {r['compute_s']*1e3:7.1f} | m {r['memory_s']*1e3:7.1f}"
+                 f" | n {r['collective_s']*1e3:7.1f} ms")
+        t.add(name, r["dominant"][:4], terms,
+              f"useful {r['useful_ratio']:.2f} "
+              f"rf {r['roofline_fraction']:.2f} "
+              f"compile {c['compile_s']:.0f}s")
+    return t
+
+
+def main() -> Table:
+    t = run()
+    t.show()
+    t.save("roofline")
+    return t
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Shared benchmark infrastructure: calibrated workload profiles, result
+tables, and CSV emission.
+
+Calibration notes (DESIGN.md §8): hardware dynamics are fitted to the
+paper's published observations — the Table-2 throttle curve, the Fig.-3
+0.3 s reroute penalty, the Fig.-2 <=15% host-CPU effect, the §3.3 10-15%
+power deficit. Each bench prints PAPER vs REPRODUCED columns so the
+correspondence is auditable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.simcluster import FaultRates, WorkloadProfile
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# The §7 pretraining workload: healthy step 10 s (Fig. 10 "after"),
+# decomposed per §3 so each fault family has its published-size effect.
+GUARD_WORKLOAD = WorkloadProfile(
+    name="guard_pretrain", compute_s=8.0, comm_exposed_s=0.6, host_s=1.4,
+    bytes_per_link_gb=4.0, step_noise=0.01, mfu_at_healthy=0.20)
+
+# The Fig.-3 incident workload: an 8.4 s step whose exposed communication
+# slice is 0.3 s, so one NIC-down reroute (2x on the fallback link) costs
+# exactly the published +0.3 s.
+FIG3_WORKLOAD = WorkloadProfile(
+    name="fig3_job", compute_s=7.3, comm_exposed_s=0.3, host_s=0.8,
+    bytes_per_link_gb=4.0, step_noise=0.004)
+
+# Default fleet fault environment for §7-style runs.
+RATES = FaultRates()
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    paper: str
+    repro: str
+    detail: str = ""
+
+
+class Table:
+    def __init__(self, title: str, artifact: str):
+        self.title = title
+        self.artifact = artifact
+        self.rows: List[Row] = []
+        self.t0 = time.time()
+
+    def add(self, name: str, paper, repro, detail: str = "") -> None:
+        self.rows.append(Row(name, str(paper), str(repro), detail))
+
+    def show(self) -> None:
+        dur = time.time() - self.t0
+        print(f"\n== {self.title}  [{self.artifact}]  ({dur:.1f}s)")
+        w = max((len(r.name) for r in self.rows), default=10) + 2
+        print(f"  {'metric'.ljust(w)}{'paper'.rjust(14)}{'repro'.rjust(14)}"
+              f"  detail")
+        for r in self.rows:
+            print(f"  {r.name.ljust(w)}{r.paper.rjust(14)}"
+                  f"{r.repro.rjust(14)}  {r.detail}")
+
+    def csv_lines(self) -> List[str]:
+        out = []
+        for r in self.rows:
+            out.append(f"{self.artifact}/{r.name},"
+                       f"{r.paper},{r.repro},{r.detail}")
+        return out
+
+    def save(self, name: str) -> None:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        path = os.path.join(RESULTS_DIR, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump([dataclasses.asdict(r) for r in self.rows], f,
+                      indent=1)
+
+
+def pct(x: float) -> str:
+    return f"{100.0 * x:.1f}%"

@@ -1,0 +1,75 @@
+"""Render ROOFLINE.md from the dry-run JSONs (single + multi-pod)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def rows(mesh):
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN, f"*__{mesh}.json"))):
+        out.append(json.load(open(p)))
+    return out
+
+
+def main():
+    lines = ["# Roofline table (generated from the dry-run artifacts)",
+             "",
+             "Terms in seconds per step on the TPU-v5e-class target "
+             "(197 TF/s, 819 GB/s HBM, 50 GB/s/link). `useful` = "
+             "MODEL_FLOPS/HLO_FLOPs; `rf` = roofline fraction vs the "
+             "max(compute, memory-floor) ideal; `mem/chip` is the CPU-backend "
+             "compile-time estimate (args+temp) — TPU executables with "
+             "fused kernels are significantly leaner. One-sentence "
+             "bottleneck note per the §Roofline requirement.", ""]
+    for mesh, title in (("single", "16x16 single-pod (256 chips)"),
+                        ("multi", "2x16x16 multi-pod (512 chips)")):
+        lines += [f"## {title}", "",
+                  "| arch | shape | compute | memory | collective | "
+                  "dominant | useful | rf | mem/chip | what would move it |",
+                  "|---|---|---|---|---|---|---|---|---|---|"]
+        for c in rows(mesh):
+            r = c["roofline"]
+            ma = c["memory_analysis"]
+            mem_gib = (ma["argument_bytes"] + ma["temp_bytes"]) / 2**30 \
+                if ma else 0
+            note = _note(c)
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {r['compute_s']:.2f} | "
+                f"{r['memory_s']:.2f} | {r['collective_s']:.2f} | "
+                f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+                f"{r['roofline_fraction']:.2f} | {mem_gib:.1f} GiB | "
+                f"{note} |")
+        lines.append("")
+    path = os.path.join(os.path.dirname(__file__), "..", "ROOFLINE.md")
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+    print(f"wrote {os.path.abspath(path)} "
+          f"({len(rows('single'))}+{len(rows('multi'))} cells)")
+
+
+def _note(c):
+    r = c["roofline"]
+    dom = r["dominant"]
+    kind = c["kind"]
+    arch = c["arch"]
+    if dom == "collective":
+        if "moe" in arch or "llama4" in arch or "deepseek" in arch:
+            return ("EP dispatch/combine all-to-all + TP boundaries; "
+                    "overlap with expert compute moves it")
+        return ("TP-boundary all-reduces; async-collective overlap with "
+                "compute hides 50-80% on TPU")
+    if dom == "memory":
+        if kind == "decode":
+            return ("KV-cache streaming floor; batch growth or cache "
+                    "quantization moves it")
+        return ("attention-score materialization in the XLA path; the "
+                "Pallas flash kernel removes it on TPU")
+    return "MXU-bound; larger per-chip batch raises utilization"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark driver: one module per paper table/figure + the roofline
+aggregation. ``python -m benchmarks.run [--quick]`` runs everything and
+emits a CSV block (artifact/metric, paper, repro, detail)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_ablation, bench_cpu_settings,
+                        bench_detection_rates, bench_multi_node_sweep,
+                        bench_nic_reroute, bench_roofline,
+                        bench_single_node_sweep, bench_step_time,
+                        bench_temp_freq, bench_variance)
+
+MODULES = [
+    ("table2", bench_temp_freq),
+    ("fig2", bench_cpu_settings),
+    ("fig3_fig4_table1", bench_nic_reroute),
+    ("fig5", bench_single_node_sweep),
+    ("fig6_fig7", bench_multi_node_sweep),
+    ("table3", bench_detection_rates),
+    ("fig9", bench_variance),
+    ("fig10", bench_step_time),
+    ("table4", bench_ablation),
+    ("roofline", bench_roofline),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the long multi-run benches (fig9/table4)")
+    ap.add_argument("--only", help="comma-separated artifact filter")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    skip_slow = {"fig9", "table4"} if args.quick else set()
+    tables = []
+    t0 = time.time()
+    for name, mod in MODULES:
+        if only and name not in only:
+            continue
+        if name in skip_slow:
+            print(f"[bench] skip {name} (--quick)")
+            continue
+        tables.append(mod.main())
+    print(f"\n[bench] total {time.time()-t0:.1f}s")
+    print("\n# CSV: artifact/metric,paper,repro,detail")
+    for t in tables:
+        for line in t.csv_lines():
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Guard — the paper's contribution: scalable straggler detection and node
+health management for large-scale training.
+
+  telemetry       metric schema, ring buffers, Collector protocol (§4.1)
+  detector        peer-relative multi-signal temporal detection (§4.2)
+  policy          tiered response policy (§4.2)
+  monitor         online monitoring loop -> HealthEvents (§4)
+  sweep           offline single-/multi-node qualification sweeps (§5)
+  triage          remediation FSM + 3-strikes rule (§6, Fig. 8)
+  health_manager  closed loop: pools, swaps, event-driven sweeps (Fig. 1)
+"""
+from repro.core.detector import (DetectorConfig, NodeAssessment,
+                                 StragglerDetector, robust_z)
+from repro.core.health_manager import (ClusterControl, HealthManager,
+                                       ManagerStats, NodeState)
+from repro.core.monitor import HealthEvent, OnlineMonitor
+from repro.core.policy import Action, Decision, PolicyConfig, TieredPolicy
+from repro.core.sweep import (SweepBackend, SweepConfig, SweepReference,
+                              SweepReport, multi_node_sweep,
+                              qualification_sweep, single_node_sweep)
+from repro.core.telemetry import (HARDWARE_METRICS, METRIC_DIRECTION, METRICS,
+                                  Collector, Frame, RingHistory,
+                                  reduce_device_metrics)
+from repro.core.triage import (ErrorSignals, Stage, TriageConfig,
+                               TriageOutcome, TriageResult, TriageWorkflow)
+
+__all__ = [
+    "Action", "ClusterControl", "Collector", "Decision", "DetectorConfig",
+    "ErrorSignals", "Frame", "HARDWARE_METRICS", "HealthEvent",
+    "HealthManager", "METRICS", "METRIC_DIRECTION", "ManagerStats",
+    "NodeAssessment", "NodeState", "OnlineMonitor", "PolicyConfig",
+    "RingHistory", "Stage", "StragglerDetector", "SweepBackend",
+    "SweepConfig", "SweepReference", "SweepReport", "TieredPolicy",
+    "TriageConfig", "TriageOutcome", "TriageResult", "TriageWorkflow",
+    "multi_node_sweep", "qualification_sweep", "reduce_device_metrics",
+    "robust_z", "single_node_sweep",
+]

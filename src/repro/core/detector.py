@@ -1,0 +1,152 @@
+"""Peer-relative, multi-signal, temporally-filtered straggler detection (§4.2).
+
+The detector never uses absolute thresholds. Every metric is scored against
+the *peer baseline* of nodes in the same job via robust statistics
+(median / MAD z-scores), which adapts to workload characteristics and
+hardware heterogeneity for free. A node is flagged only when
+
+  1. its PRIMARY signal (step_time) shows a sustained relative slowdown, OR
+  2. multiple SUPPORTING hardware signals deviate together (pending
+     verification tier — no step impact yet),
+
+and the deviation persists for >= K of the last N evaluation windows
+(temporal filter). Hysteresis: once flagged, a node needs ``clear_windows``
+consecutive clean windows to unflag, preventing oscillation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.telemetry import (HARDWARE_METRICS, METRIC_DIRECTION, Frame,
+                                  RingHistory)
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    """Defaults are the paper's 'moderately conservative' operating point
+    (§6.1): aggressive enough to catch mild greys early (low FNR) at the
+    price of a double-digit FPR — acceptable because early remediation
+    stages are lightweight and reversible (Table 3: FPR 12.4%, FNR 7.8%)."""
+    window: int = 6              # N: evaluation windows kept for filtering
+    persistence: int = 3         # K: windows (of N) a signal must deviate
+    z_threshold: float = 3.0     # robust z beyond which a signal deviates
+    min_support: int = 2         # hardware signals required for hw-only flag
+    slowdown_floor: float = 0.025  # relative step-time excess that counts
+    stall_factor: float = 5.0    # step_time > stall_factor x median = stall
+    clear_windows: int = 3       # hysteresis: clean windows to unflag
+    mad_floor_frac: float = 0.01 # MAD floor as a fraction of the median
+
+
+@dataclasses.dataclass
+class NodeAssessment:
+    """Detector verdict for one node in one evaluation window."""
+    node_id: int
+    slowdown: float              # sustained relative step-time excess (>=0)
+    stalled: bool
+    support: List[str]           # hardware metrics in sustained deviation
+    step_deviant: bool           # primary signal sustained deviation
+    flagged: bool                # overall verdict after temporal filtering
+
+
+def robust_z(values: np.ndarray, axis: int = -1,
+             mad_floor: float = 1e-9) -> np.ndarray:
+    """Median/MAD z-score along ``axis`` (peer axis). 0.6745 ~ Φ⁻¹(3/4)."""
+    med = np.median(values, axis=axis, keepdims=True)
+    mad = np.median(np.abs(values - med), axis=axis, keepdims=True)
+    scale = np.maximum(mad / 0.6745, mad_floor)
+    return (values - med) / scale
+
+
+class StragglerDetector:
+    """Stateful fleet-wide detector; feed one Frame per evaluation window."""
+
+    def __init__(self, cfg: Optional[DetectorConfig] = None):
+        self.cfg = cfg or DetectorConfig()
+        self.history = RingHistory(self.cfg.window)
+        self._clean_streak: Dict[int, int] = {}
+        self._latched: Dict[int, bool] = {}
+
+    # ------------------------------------------------------------ core
+
+    def _deviation_matrix(self, metric: str) -> np.ndarray:
+        """(depth, N) bool: windows where node deviates unhealthily."""
+        cfg = self.cfg
+        hist = self.history.stacked(metric)              # (depth, N)
+        direction = METRIC_DIRECTION[metric]
+        med = np.median(hist, axis=1, keepdims=True)
+        floor = np.maximum(np.abs(med) * cfg.mad_floor_frac, 1e-9)
+        z = robust_z(hist, axis=1, mad_floor=floor) * direction
+        return z > cfg.z_threshold
+
+    def update(self, frame: Frame) -> List[NodeAssessment]:
+        cfg = self.cfg
+        self.history.push(frame)
+        n = len(frame.node_ids)
+        depth = len(self.history)
+        # "sustained" requires a full persistence window of history; until
+        # then only stalls can flag (fresh jobs / post-replacement re-baseline)
+        warmed = depth >= cfg.persistence
+        need = cfg.persistence if warmed else depth + 1  # unattainable early
+
+        # --- primary signal: sustained relative step-time excess
+        st_hist = self.history.stacked("step_time")      # (depth, N)
+        med = np.median(st_hist, axis=1, keepdims=True)
+        rel = st_hist / np.maximum(med, 1e-9) - 1.0
+        step_dev_w = self._deviation_matrix("step_time") & \
+            (rel > cfg.slowdown_floor)
+        dev_count = step_dev_w.sum(0)
+        step_deviant = dev_count >= need
+        # sustained slowdown magnitude: mean over deviant windows
+        slow_sum = np.where(step_dev_w, rel, 0.0).sum(0)
+        slowdown = np.where(step_deviant,
+                            slow_sum / np.maximum(dev_count, 1), 0.0)
+
+        # --- stalls: no heartbeat or grossly inflated latest step
+        last = self.history.last()
+        stalled = (~last.valid) | (
+            last.metrics["step_time"] >
+            cfg.stall_factor * np.median(last.metrics["step_time"]))
+
+        # --- supporting hardware signals (sustained)
+        support_masks = {}
+        for m in HARDWARE_METRICS:
+            if m in last.metrics:
+                dev = self._deviation_matrix(m)
+                support_masks[m] = dev.sum(0) >= need
+
+        support_count = np.zeros(n, dtype=int)
+        for mask in support_masks.values():
+            support_count += mask.astype(int)
+
+        raw_flag = stalled | step_deviant | (support_count >= cfg.min_support)
+
+        out: List[NodeAssessment] = []
+        for i, nid in enumerate(frame.node_ids):
+            nid = int(nid)
+            latched = self._latched.get(nid, False)
+            if raw_flag[i]:
+                self._clean_streak[nid] = 0
+                latched = True
+            elif latched:
+                streak = self._clean_streak.get(nid, 0) + 1
+                self._clean_streak[nid] = streak
+                if streak >= cfg.clear_windows:
+                    latched = False
+            self._latched[nid] = latched
+            out.append(NodeAssessment(
+                node_id=nid,
+                slowdown=float(slowdown[i]),
+                stalled=bool(stalled[i]),
+                support=[m for m, msk in support_masks.items() if msk[i]],
+                step_deviant=bool(step_deviant[i]),
+                flagged=latched,
+            ))
+        return out
+
+    def reset_node(self, node_id: int) -> None:
+        """Forget latch state (node replaced/repaired)."""
+        self._latched.pop(node_id, None)
+        self._clean_streak.pop(node_id, None)

@@ -1,0 +1,220 @@
+"""Closed-loop node health management (Fig. 1).
+
+Glues the pieces together: online monitoring emits HealthEvents; the manager
+applies the tiered policy's action against the cluster (swap now / swap at
+checkpoint / watch), quarantines suspects, drives the event-driven offline
+qualification (sweep -> triage -> sweep ...) and returns qualified nodes to
+the healthy pool. All substrate access goes through ``ClusterControl`` so
+the loop is identical over the simulator and a real fleet control plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Protocol, Sequence, Set
+
+from repro.core.monitor import HealthEvent, OnlineMonitor
+from repro.core.policy import Action
+from repro.core.sweep import SweepBackend, SweepConfig, qualification_sweep
+from repro.core.triage import (ErrorSignals, TriageConfig, TriageOutcome,
+                               TriageWorkflow)
+
+
+class NodeState(enum.Enum):
+    ACTIVE = "active"              # serving the training job
+    PENDING = "pending"            # in job, flagged pending-verification
+    QUARANTINED = "quarantined"    # out of job, awaiting qualification
+    HEALTHY_SPARE = "healthy_spare"
+    TERMINATED = "terminated"
+
+
+class ClusterControl(Protocol):
+    """Fleet actions the manager can take."""
+
+    def swap_node(self, old: int, new: int) -> None:
+        """Replace ``old`` with ``new`` in the job (at a restart boundary)."""
+        ...
+
+    def restart_job(self, reason: str) -> None:
+        """Restart from the last checkpoint (costs recovery time)."""
+        ...
+
+    def provision_node(self) -> int:
+        """Bring a brand-new node into the spare pool; returns its id."""
+        ...
+
+    def error_signals(self, node_id: int) -> ErrorSignals: ...
+
+    def remediate(self, node_id: int, stage: str) -> None: ...
+
+    def now(self) -> float: ...
+
+
+@dataclasses.dataclass
+class ManagerStats:
+    immediate_restarts: int = 0
+    deferred_swaps: int = 0
+    sweeps_run: int = 0
+    sweeps_failed: int = 0
+    triages_run: int = 0
+    nodes_terminated: int = 0
+    nodes_requalified: int = 0
+    human_seconds: float = 0.0
+    downtime_seconds: float = 0.0
+
+
+class HealthManager:
+    def __init__(self, control: ClusterControl, sweep_backend: SweepBackend,
+                 monitor: OnlineMonitor,
+                 sweep_cfg: Optional[SweepConfig] = None,
+                 triage_cfg: Optional[TriageConfig] = None,
+                 enhanced_sweep: bool = True,
+                 max_qualification_rounds: int = 3,
+                 pending_patience_s: float = 1800.0):
+        self.control = control
+        self.backend = sweep_backend
+        self.monitor = monitor
+        self.sweep_cfg = sweep_cfg or SweepConfig()
+        self.triage = TriageWorkflow(triage_cfg)
+        self.enhanced_sweep = enhanced_sweep
+        self.max_rounds = max_qualification_rounds
+        self.pending_patience_s = pending_patience_s
+        self.state: Dict[int, NodeState] = {}
+        self.spares: List[int] = []
+        self.deferred: List[int] = []     # swap at next checkpoint
+        self.pending_since: Dict[int, float] = {}
+        self.stats = ManagerStats()
+
+    # --------------------------------------------------------- pools
+
+    def register(self, node_id: int, state: NodeState) -> None:
+        self.state[node_id] = state
+        if state == NodeState.HEALTHY_SPARE:
+            self.spares.append(node_id)
+
+    def _take_spare(self) -> int:
+        while not self.spares:
+            nid = self.control.provision_node()
+            self.register(nid, NodeState.HEALTHY_SPARE)
+        nid = self.spares.pop(0)
+        self.state[nid] = NodeState.ACTIVE
+        return nid
+
+    # --------------------------------------------------- event handling
+
+    def handle(self, ev: HealthEvent) -> None:
+        nid = ev.decision.node_id
+        st = self.state.get(nid)
+        if st not in (NodeState.ACTIVE, NodeState.PENDING):
+            return                       # already out of the job
+        act = ev.decision.action
+        if act == Action.PENDING_VERIFICATION:
+            self.state[nid] = NodeState.PENDING
+            self.pending_since.setdefault(nid, self.control.now())
+        elif act == Action.DEFER_TO_CHECKPOINT:
+            if nid not in self.deferred:
+                self.deferred.append(nid)
+                self.stats.deferred_swaps += 1
+        elif act == Action.IMMEDIATE_RESTART:
+            self.deferred = [d for d in self.deferred if d != nid]
+            self._swap_out(nid)
+            self.control.restart_job(ev.decision.reason)
+            self.stats.immediate_restarts += 1
+
+    def on_checkpoint(self) -> int:
+        """Apply deferred mitigations at a checkpoint boundary. Nodes that
+        stayed flagged at the pending tier past the patience window are
+        pulled for offline verification too (§4.2: a flagged node leaves
+        the healthy pool and is scheduled for verification)."""
+        now = self.control.now()
+        for nid, since in list(self.pending_since.items()):
+            still_pending = self.state.get(nid) == NodeState.PENDING
+            if not still_pending or nid not in self.monitor.pending:
+                self.pending_since.pop(nid, None)
+                if still_pending:
+                    self.state[nid] = NodeState.ACTIVE   # cleared itself
+                continue
+            if now - since >= self.pending_patience_s and \
+                    nid not in self.deferred:
+                self.deferred.append(nid)
+                self.stats.deferred_swaps += 1
+        n = 0
+        for nid in self.deferred:
+            if self.state.get(nid) not in (NodeState.ACTIVE,
+                                           NodeState.PENDING):
+                continue
+            # §4.2: deferral exists to CONFIRM the diagnosis — only nodes
+            # still latched by the detector are swapped; transients that
+            # cleared themselves stay in the job
+            if not self.monitor.detector._latched.get(nid, False):
+                continue
+            self._swap_out(nid)
+            self.pending_since.pop(nid, None)
+            n += 1
+        self.deferred.clear()
+        if n:
+            self.control.restart_job(f"{n} deferred replacement(s)")
+        return n
+
+    def _swap_out(self, nid: int) -> None:
+        new = self._take_spare()
+        self.control.swap_node(nid, new)
+        self.state[nid] = NodeState.QUARANTINED
+        self.monitor.node_replaced(nid)
+
+    # ------------------------------------------------- qualification
+
+    def qualify(self, node_id: int) -> NodeState:
+        """Event-driven offline qualification of a quarantined node:
+        sweep; on failure triage; loop until requalified or terminated.
+
+        The 2-node stage needs a known-good buddy: a failure is re-tried
+        against a second buddy before it counts (disambiguates a
+        contaminated buddy from a genuinely bad node)."""
+        nb = max(self.sweep_cfg.group_size - 1, 1)
+        for _ in range(self.max_rounds):
+            rep = None
+            for attempt in range(2):
+                buddies = self.spares[attempt * nb:(attempt + 1) * nb] or \
+                    self.spares[:nb]
+                rep = qualification_sweep(self.backend, node_id, buddies,
+                                          self.sweep_cfg,
+                                          enhanced=self.enhanced_sweep)
+                self.stats.sweeps_run += 1
+                self.stats.downtime_seconds += rep.duration_s
+                if rep.passed or not buddies:
+                    break
+            if rep.passed:
+                self.state[node_id] = NodeState.HEALTHY_SPARE
+                self.spares.append(node_id)
+                self.stats.nodes_requalified += 1
+                return NodeState.HEALTHY_SPARE
+            self.stats.sweeps_failed += 1
+            res = self.triage.run(
+                node_id, self.control.error_signals(node_id),
+                self.control.now(), self.control.remediate,
+                lambda nid: single_pass(self.backend, nid, self.sweep_cfg))
+            self.stats.triages_run += 1
+            self.stats.human_seconds += res.human_s
+            self.stats.downtime_seconds += res.elapsed_s
+            if res.outcome == TriageOutcome.TERMINATED:
+                self.state[node_id] = NodeState.TERMINATED
+                self.stats.nodes_terminated += 1
+                return NodeState.TERMINATED
+            # else: returned to sweep — loop re-sweeps
+        self.state[node_id] = NodeState.TERMINATED
+        self.stats.nodes_terminated += 1
+        return NodeState.TERMINATED
+
+    def qualify_all_quarantined(self) -> None:
+        for nid, st in list(self.state.items()):
+            if st == NodeState.QUARANTINED:
+                self.qualify(nid)
+
+
+def single_pass(backend: SweepBackend, node_id: int,
+                cfg: SweepConfig) -> bool:
+    """Cheap post-remediation health check (short single-node sweep)."""
+    from repro.core.sweep import single_node_sweep
+    short = dataclasses.replace(cfg, burn_seconds=min(cfg.burn_seconds, 60.0))
+    return single_node_sweep(backend, node_id, short, enhanced=False).passed

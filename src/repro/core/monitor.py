@@ -1,0 +1,67 @@
+"""Online node-health monitoring loop (§4).
+
+``OnlineMonitor`` consumes telemetry Frames (from any Collector), runs the
+peer-relative detector and the tiered policy, and emits ``HealthEvent``s for
+the health manager to act on. It is deliberately thin: all intelligence lives
+in the detector/policy so this loop stays lightweight and non-intrusive —
+the paper's requirement for running it against production jobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.core.detector import DetectorConfig, NodeAssessment, \
+    StragglerDetector
+from repro.core.policy import Action, Decision, PolicyConfig, TieredPolicy
+from repro.core.telemetry import Frame
+
+
+@dataclasses.dataclass
+class HealthEvent:
+    t: float
+    step: int
+    decision: Decision
+    assessment: NodeAssessment
+
+
+class OnlineMonitor:
+    def __init__(self,
+                 detector_cfg: Optional[DetectorConfig] = None,
+                 policy_cfg: Optional[PolicyConfig] = None,
+                 on_event: Optional[Callable[[HealthEvent], None]] = None):
+        self.detector = StragglerDetector(detector_cfg)
+        self.policy = TieredPolicy(policy_cfg)
+        self.on_event = on_event
+        self.events: List[HealthEvent] = []
+        # nodes currently marked pending-verification (watched closely)
+        self.pending: Dict[int, float] = {}
+
+    def observe(self, frame: Frame) -> List[HealthEvent]:
+        """Process one evaluation window; returns new events."""
+        assessments = self.detector.update(frame)
+        by_id = {a.node_id: a for a in assessments}
+        new: List[HealthEvent] = []
+        for d in self.policy.decide(assessments):
+            if d.action == Action.PENDING_VERIFICATION:
+                # record once; re-emit only on escalation
+                if d.node_id in self.pending:
+                    continue
+                self.pending[d.node_id] = frame.t
+            else:
+                self.pending.pop(d.node_id, None)
+            ev = HealthEvent(frame.t, frame.step, d, by_id[d.node_id])
+            new.append(ev)
+            self.events.append(ev)
+            if self.on_event:
+                self.on_event(ev)
+        # drop pending marks for nodes that cleared
+        for nid in list(self.pending):
+            a = by_id.get(nid)
+            if a is not None and not a.flagged:
+                del self.pending[nid]
+        return new
+
+    def node_replaced(self, node_id: int) -> None:
+        self.detector.reset_node(node_id)
+        self.pending.pop(node_id, None)

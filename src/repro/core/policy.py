@@ -1,0 +1,66 @@
+"""Tiered response policy (§4.2).
+
+Training step time — the user-visible signal — decides the response tier;
+hardware metrics only ever *support* a verdict. The tiers trade mitigation
+urgency against operational disruption:
+
+  PENDING      no observable step impact (hardware signals only): keep the
+               node in the job, mark pending-verification, watch closely.
+  DEFER        moderate sustained slowdown (~10%): actionable, not urgent —
+               mitigate at the NEXT CHECKPOINT to confirm the diagnosis
+               without an extra restart.
+  IMMEDIATE    severe (>=20%) degradation or a stall: restart now with a
+               healthy replacement; the node leaves service for remediation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+from repro.core.detector import NodeAssessment
+
+
+class Action(enum.Enum):
+    NONE = "none"
+    PENDING_VERIFICATION = "pending_verification"
+    DEFER_TO_CHECKPOINT = "defer_to_checkpoint"
+    IMMEDIATE_RESTART = "immediate_restart"
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    moderate_slowdown: float = 0.10   # §4.2 "~10%"
+    severe_slowdown: float = 0.20     # §4.2 ">=20%"
+
+
+@dataclasses.dataclass
+class Decision:
+    node_id: int
+    action: Action
+    reason: str
+    slowdown: float
+
+
+class TieredPolicy:
+    def __init__(self, cfg: Optional[PolicyConfig] = None):
+        self.cfg = cfg or PolicyConfig()
+
+    def decide(self, assessments: List[NodeAssessment]) -> List[Decision]:
+        out = []
+        for a in assessments:
+            if not a.flagged:
+                continue
+            if a.stalled or a.slowdown >= self.cfg.severe_slowdown:
+                act = Action.IMMEDIATE_RESTART
+                why = "stall" if a.stalled else \
+                    f"severe slowdown {a.slowdown:.0%}"
+            elif a.slowdown >= self.cfg.moderate_slowdown:
+                act = Action.DEFER_TO_CHECKPOINT
+                why = f"moderate sustained slowdown {a.slowdown:.0%}"
+            else:
+                act = Action.PENDING_VERIFICATION
+                why = ("hardware signals: " + ",".join(a.support)
+                       if a.support else "marginal step deviation")
+            out.append(Decision(a.node_id, act, why, a.slowdown))
+        return out

@@ -1,0 +1,162 @@
+"""Offline node-sweep verification (§5).
+
+Event-driven qualification: a node flagged by online monitoring (or returning
+from repair) must pass sweeps before re-entering the healthy pool.
+
+  Single-node sweep (§5.2): sustained per-device compute throughput (matmul
+  burn — on TPU hardware this is the ``repro.kernels.sweep_burn`` Pallas
+  kernel) + pairwise intra-node interconnect bandwidth/symmetry.
+
+  Multi-node sweep (§5.3): collective-communication mini-workload on small
+  groups. 2-node sweeps against a known-good buddy are the default — the
+  paper finds most communication degradations already visible at 2 nodes;
+  4/8-node configurations are supported but offer diminishing returns.
+
+Verdicts are conservative (§5.4): a node re-enters service only if EVERY
+probe is within tolerance both of the fleet reference and of its own peers
+(intra-node symmetry); otherwise it stays quarantined for triage.
+
+The sweep talks to hardware through ``SweepBackend`` — the simulated fleet
+and the local-JAX demo backend both implement it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepReference:
+    """Fleet-expected healthy values (from qualification of known-good
+    hardware; refreshed whenever the platform generation changes)."""
+    device_tflops: float          # sustained matmul TFLOP/s per device
+    intra_bw_gbps: float          # pairwise interconnect GB/s
+    pair_step_time: float         # 2-node sweep-workload step time, s
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    # single-node
+    compute_tolerance: float = 0.07      # device within 7% of reference
+    symmetry_tolerance: float = 0.05     # device within 5% of node median
+    bw_tolerance: float = 0.10           # pair bw within 10% of reference
+    burn_seconds: float = 120.0          # per-device sustained burn
+    # multi-node
+    group_size: int = 2                  # default 2-node sweeps
+    sweep_steps: int = 50                # mini-workload steps per group
+    inflation_tolerance: float = 0.08    # step time within 8% of reference
+    # enhanced sweep = longer burns + multi-node stage (§7.2 Table 4 tier 4)
+    enhanced_burn_seconds: float = 3600.0
+
+
+class SweepBackend(Protocol):
+    """What the sweep needs from the substrate."""
+
+    def device_count(self, node_id: int) -> int: ...
+
+    def compute_probe(self, node_id: int, device: int,
+                      seconds: float) -> float:
+        """Sustained matmul throughput, TFLOP/s."""
+        ...
+
+    def intra_bw_probe(self, node_id: int, dev_a: int, dev_b: int) -> float:
+        """Pairwise intra-node interconnect bandwidth, GB/s."""
+        ...
+
+    def multi_node_probe(self, node_ids: Sequence[int],
+                         steps: int) -> np.ndarray:
+        """Step times (s) of a collective mini-workload over the group."""
+        ...
+
+    def reference(self) -> SweepReference: ...
+
+
+@dataclasses.dataclass
+class SweepReport:
+    node_id: int
+    passed: bool
+    failures: List[str]
+    duration_s: float
+    measurements: Dict[str, object]
+
+
+def single_node_sweep(backend: SweepBackend, node_id: int,
+                      cfg: Optional[SweepConfig] = None,
+                      enhanced: bool = False) -> SweepReport:
+    cfg = cfg or SweepConfig()
+    ref = backend.reference()
+    nd = backend.device_count(node_id)
+    burn = cfg.enhanced_burn_seconds if enhanced else cfg.burn_seconds
+    failures: List[str] = []
+
+    tflops = np.array([backend.compute_probe(node_id, d, burn)
+                       for d in range(nd)])
+    node_med = np.median(tflops)
+    for d in range(nd):
+        if tflops[d] < ref.device_tflops * (1 - cfg.compute_tolerance):
+            failures.append(
+                f"compute dev{d}: {tflops[d]:.1f} TF/s < "
+                f"{(1 - cfg.compute_tolerance) * ref.device_tflops:.1f}")
+        if tflops[d] < node_med * (1 - cfg.symmetry_tolerance):
+            failures.append(
+                f"asymmetry dev{d}: {tflops[d]:.1f} TF/s vs node median "
+                f"{node_med:.1f}")
+
+    # pairwise interconnect: ring + a few cross pairs covers every device
+    pairs = [(a, (a + 1) % nd) for a in range(nd)]
+    pairs += [(a, (a + nd // 2) % nd) for a in range(nd // 2)]
+    bw = {}
+    for a, b in pairs:
+        g = backend.intra_bw_probe(node_id, a, b)
+        bw[(a, b)] = g
+        if g < ref.intra_bw_gbps * (1 - cfg.bw_tolerance):
+            failures.append(
+                f"intra-bw {a}<->{b}: {g:.0f} GB/s < "
+                f"{(1 - cfg.bw_tolerance) * ref.intra_bw_gbps:.0f}")
+
+    duration = burn * nd / max(nd, 1) + 30.0 * len(pairs)
+    return SweepReport(node_id, not failures, failures, duration,
+                       {"tflops": tflops, "bw": bw})
+
+
+def multi_node_sweep(backend: SweepBackend, node_id: int,
+                     buddies: Sequence[int],
+                     cfg: Optional[SweepConfig] = None) -> SweepReport:
+    """Sweep ``node_id`` in a group with known-good ``buddies``."""
+    cfg = cfg or SweepConfig()
+    ref = backend.reference()
+    group = [node_id, *buddies][: max(cfg.group_size, 2)]
+    times = backend.multi_node_probe(group, cfg.sweep_steps)
+    med = float(np.median(times))
+    failures = []
+    if med > ref.pair_step_time * (1 + cfg.inflation_tolerance):
+        failures.append(
+            f"group step time {med:.3f}s > "
+            f"{(1 + cfg.inflation_tolerance) * ref.pair_step_time:.3f}s "
+            f"(group={group})")
+    duration = med * cfg.sweep_steps
+    return SweepReport(node_id, not failures, failures, duration,
+                       {"group": group, "step_times": times})
+
+
+def qualification_sweep(backend: SweepBackend, node_id: int,
+                        buddies: Sequence[int],
+                        cfg: Optional[SweepConfig] = None,
+                        enhanced: bool = True) -> SweepReport:
+    """Full offline qualification: single-node stage, then (enhanced only)
+    the 2-node collective stage. Conservative: all stages must pass."""
+    cfg = cfg or SweepConfig()
+    rep = single_node_sweep(backend, node_id, cfg, enhanced=enhanced)
+    if not enhanced:
+        return rep
+    if rep.passed and buddies:
+        multi = multi_node_sweep(backend, node_id, buddies, cfg)
+        rep = SweepReport(
+            node_id, rep.passed and multi.passed,
+            rep.failures + multi.failures,
+            rep.duration_s + multi.duration_s,
+            {**rep.measurements, **multi.measurements})
+    return rep

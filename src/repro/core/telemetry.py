@@ -1,0 +1,148 @@
+"""Telemetry schema, ring buffers and the Collector protocol (§4.1).
+
+Guard consumes fleet telemetry through a single narrow interface — a
+``Collector`` that yields one ``Frame`` per evaluation window. A Frame is a
+set of named, vectorized per-node metric arrays; the detector never touches
+the substrate underneath. On hardware the collector wraps the platform
+monitoring agent (DCGM-equivalent) at a 30–60 s cadence; in this repo the
+simulated fleet (``repro.simcluster``) implements the same protocol, so the
+detection stack is deployable unchanged.
+
+Metric catalogue (paper §4.1) — all per-node reductions over the node's
+``devices_per_node`` accelerators / NICs:
+
+  step_time     seconds this node took to reach the sync barrier (PRIMARY)
+  gpu_temp      hottest device temperature, °C
+  gpu_util      mean device utilization, [0, 1]
+  gpu_freq      slowest device clock, GHz
+  gpu_power     lowest device power draw, W
+  nic_errors    summed NIC error counters over the window (retx, retries)
+  nic_tx_rate   lowest per-NIC effective transmit rate, Gb/s
+  nic_up        fraction of this node's NICs that are up, [0, 1]
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, Iterable, Optional, Protocol, Sequence
+
+import numpy as np
+
+# Canonical metric names + the direction in which deviation is UNHEALTHY.
+#   +1: higher-than-peers is bad      -1: lower-than-peers is bad
+METRIC_DIRECTION: Dict[str, int] = {
+    "step_time": +1,
+    "gpu_temp": +1,
+    "gpu_util": -1,
+    "gpu_freq": -1,
+    "gpu_power": -1,
+    "nic_errors": +1,
+    "nic_tx_rate": -1,
+    "nic_up": -1,
+}
+METRICS: tuple = tuple(METRIC_DIRECTION)
+HARDWARE_METRICS: tuple = tuple(m for m in METRICS if m != "step_time")
+
+
+@dataclasses.dataclass
+class Frame:
+    """One evaluation window of fleet telemetry.
+
+    Every metric is a float array of shape (num_nodes,) aligned with
+    ``node_ids``. ``valid`` masks nodes that reported (False = no heartbeat,
+    treated as a stall by the monitor)."""
+
+    t: float                                 # sim/wall time, seconds
+    step: int                                # global training step index
+    node_ids: np.ndarray                     # (N,) int64
+    metrics: Dict[str, np.ndarray]           # name -> (N,) float64
+    valid: np.ndarray                        # (N,) bool
+
+    def __post_init__(self):
+        n = len(self.node_ids)
+        for k, v in self.metrics.items():
+            assert k in METRIC_DIRECTION, f"unknown metric {k}"
+            assert v.shape == (n,), (k, v.shape, n)
+        assert self.valid.shape == (n,)
+
+
+class Collector(Protocol):
+    """The substrate interface: one Frame per evaluation window."""
+
+    def collect(self) -> Optional[Frame]:
+        """Next telemetry frame, or None if the job has stopped."""
+        ...
+
+
+class RingHistory:
+    """Fixed-depth per-metric history of fleet frames (vectorized).
+
+    Stores the last ``depth`` frames as stacked (depth, N) arrays per metric;
+    used by the detector for temporal (K-of-N window) filtering."""
+
+    def __init__(self, depth: int):
+        self.depth = depth
+        self._frames: Deque[Frame] = deque(maxlen=depth)
+
+    def push(self, frame: Frame) -> None:
+        if self._frames:
+            last_ids = self._frames[-1].node_ids
+            if len(frame.node_ids) != len(last_ids):
+                # fleet resized: history no longer aligns — restart.
+                self._frames.clear()
+            elif not np.array_equal(frame.node_ids, last_ids):
+                # node replacement: the new node must NOT inherit its
+                # predecessor's history column (otherwise every freshly
+                # swapped-in spare is instantly "sustained deviant" and a
+                # replacement cascade follows). Backfill changed columns
+                # with the new node's current readings; everyone else keeps
+                # their window.
+                changed = frame.node_ids != last_ids
+                for f in self._frames:
+                    for m, vals in f.metrics.items():
+                        if m in frame.metrics:
+                            vals[changed] = frame.metrics[m][changed]
+                    f.valid[changed] = True
+                    f.node_ids = f.node_ids.copy()
+                    f.node_ids[changed] = frame.node_ids[changed]
+        self._frames.append(frame)
+
+    def __len__(self) -> int:
+        return len(self._frames)
+
+    @property
+    def full(self) -> bool:
+        return len(self._frames) == self.depth
+
+    def stacked(self, metric: str) -> np.ndarray:
+        """(depth_used, N) history for one metric."""
+        return np.stack([f.metrics[metric] for f in self._frames])
+
+    def stacked_valid(self) -> np.ndarray:
+        return np.stack([f.valid for f in self._frames])
+
+    def last(self) -> Frame:
+        return self._frames[-1]
+
+    def clear(self) -> None:
+        self._frames.clear()
+
+
+def reduce_device_metrics(
+    temps: np.ndarray, utils: np.ndarray, freqs: np.ndarray,
+    powers: np.ndarray, nic_err: np.ndarray, nic_tx: np.ndarray,
+    nic_up: np.ndarray,
+) -> Dict[str, np.ndarray]:
+    """Per-device (N, D) arrays -> per-node (N,) metric dict.
+
+    Reductions pick the WORST device per node (hottest / slowest / weakest),
+    because a single degraded device gates the node's collectives (§3.3)."""
+    return {
+        "gpu_temp": temps.max(axis=1),
+        "gpu_util": utils.mean(axis=1),
+        "gpu_freq": freqs.min(axis=1),
+        "gpu_power": powers.min(axis=1),
+        "nic_errors": nic_err.sum(axis=1),
+        "nic_tx_rate": nic_tx.min(axis=1),
+        "nic_up": nic_up.mean(axis=1),
+    }

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot-spots, validated in interpret mode:
+
+  flash_attention  tiled online-softmax causal/full GQA attention (prefill)
+  wkv6             chunked RWKV6 linear-attention recurrence
+  sweep_burn       MXU-aligned sustained-matmul probe (the §5.2 offline
+                   sweep's compute workload)
+"""

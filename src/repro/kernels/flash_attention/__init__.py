@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["attention", "attention_ref"]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, q_offset: int = 0):
+    """q (B, Hq, S, hd); k/v (B, Hkv, T, hd) -> (B, Hq, S, hd), fp32 math."""
+    B, Hq, S, hd = q.shape
+    _, Hkv, T, _ = k.shape
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, S, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qf, kf) / math.sqrt(hd)
+    if causal:
+        qpos = q_offset + jnp.arange(S)
+        mask = jnp.arange(T)[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgst,bhtd->bhgsd", p, vf)
+    return o.reshape(B, Hq, S, hd).astype(q.dtype)

@@ -1,0 +1,6 @@
+from repro.kernels.sweep_burn.ops import LocalJaxSweepBackend, measure_tflops
+from repro.kernels.sweep_burn.ref import burn_ref
+from repro.kernels.sweep_burn.sweep_burn import burn, burn_flops
+
+__all__ = ["LocalJaxSweepBackend", "burn", "burn_flops", "burn_ref",
+           "measure_tflops"]

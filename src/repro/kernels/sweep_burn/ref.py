@@ -1,0 +1,14 @@
+"""Oracle for the burn kernel: the same chained-rescaled matmul in jnp."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def burn_ref(a, b, *, iters: int = 64):
+    def body(_, x):
+        y = (x @ b).astype(jnp.float32)
+        scale = jax.lax.rsqrt(jnp.mean(jnp.square(y)) + 1e-12)
+        return y * scale
+
+    return jax.lax.fori_loop(0, iters, body, a.astype(jnp.float32))

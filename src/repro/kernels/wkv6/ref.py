@@ -1,0 +1,36 @@
+"""Oracle for the WKV6 kernel: the model's own XLA chunked implementation
+(repro.models.rwkv6.wkv_chunked), plus a naive O(S) sequential recurrence
+for double-checking both."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import wkv_chunked
+
+
+def wkv6_ref(r, k, v, logw, u, s0):
+    """Kernel layout (B, H, S, hd) -> model layout and back."""
+    to_model = lambda x: jnp.moveaxis(x, 1, 2)     # (B, S, H, hd)
+    y, s = wkv_chunked(to_model(r), to_model(k), to_model(v),
+                       to_model(logw), u, s0)
+    return jnp.moveaxis(y, 2, 1).astype(jnp.float32), s
+
+
+def wkv6_naive(r, k, v, logw, u, s0):
+    """Token-by-token recurrence (the mathematical definition)."""
+    B, H, S, hd = r.shape
+    rf, kf, vf, lw = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+
+    def step(state, xs):
+        rt, kt, vt, lwt = xs                       # (B, H, hd)
+        att = state + uf[None, :, :, None] * kt[..., None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, att)
+        state = jnp.exp(lwt)[..., None] * state + \
+            kt[..., None] * vt[..., None, :]
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (rf, kf, vf, lw))
+    state, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2), state

@@ -1,0 +1,475 @@
+"""Static analysis of post-SPMD compiled HLO text.
+
+XLA's built-in ``cost_analysis()`` counts each ``while`` body ONCE, so for a
+scan-over-layers model it under-reports FLOPs/bytes/collectives by ~the
+layer count. This module parses ``compiled.as_text()`` into a computation
+call graph, extracts trip counts from while conditions, and accumulates
+
+  - dot FLOPs (2 x output x contraction, wherever the dot lives, including
+    inside fusions and remat'd backward bodies),
+  - HBM-traffic proxy (operand + result bytes of every materializing
+    instruction in control computations — fusions account their own I/O),
+  - per-collective transfer bytes (max of operand/result, counting *-start
+    of async pairs once),
+
+each weighted by the product of enclosing loop trip counts. The result is
+the per-device cost of ONE step of the compiled program — the roofline
+inputs for EXPERIMENTS.md §Roofline — plus a per-computation FLOPs
+breakdown used by the §Perf iteration loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([a-z][\w\-]*)\((.*)$")
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "after-all", "iota",
+               "partition-id", "replica-id"}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 1
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                      # operand list + attrs (raw tail)
+
+    @property
+    def operands(self) -> List[str]:
+        head = self.rest.split(")", 1)[0]
+        return _OPERAND_RE.findall(head)
+
+    @property
+    def out_bytes(self) -> int:
+        return _shape_bytes(self.type_str)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: Dict[str, Instr]
+
+    def int_constants(self) -> List[int]:
+        out = []
+        for i in self.instrs.values():
+            if i.opcode == "constant":
+                m = _CONST_RE.search("constant(" + i.rest)
+                if m:
+                    out.append(int(m.group(1)))
+        return out
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEAD_RE.match(line.strip())
+            if m and line.rstrip().endswith("{") and "->" in line:
+                cur = Computation(m.group(2), bool(m.group(1)), {})
+                if m.group(1):
+                    entry = m.group(2)
+        else:
+            if line.startswith("}") or line.strip() == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                cur.instrs[m.group(1)] = Instr(m.group(1), m.group(2),
+                                               m.group(3), m.group(4))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+# ----------------------------------------------------------------- costs
+
+
+def _dot_flops(comp: Computation, instr: Instr) -> float:
+    out_elems = _shape_elems(instr.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    cdims = [int(x) for x in m.group(1).split(",") if x] if m else []
+    ops = instr.operands
+    contract = 1
+    if ops:
+        lhs = comp.instrs.get(ops[0])
+        if lhs is not None:
+            sm = _SHAPE_RE.search(lhs.type_str)
+            if sm:
+                dims = [int(x) for x in sm.group(2).split(",") if x]
+                for c in cdims:
+                    if c < len(dims):
+                        contract *= dims[c]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(comp: Computation, instr: Instr) -> float:
+    # output elems x 2 x (kernel spatial x in-channels): approximate from
+    # rhs shape product / out-channel dim — rare in this repo (stub fronts)
+    ops = instr.operands
+    out_elems = _shape_elems(instr.type_str)
+    if len(ops) >= 2:
+        rhs = comp.instrs.get(ops[1])
+        if rhs is not None:
+            sm = _SHAPE_RE.search(rhs.type_str)
+            if sm:
+                dims = [int(x) for x in sm.group(2).split(",") if x]
+                k = 1
+                for d in dims[:-1]:
+                    k *= d
+                return 2.0 * out_elems * k
+    return 2.0 * out_elems
+
+
+def _local_costs(comp: Computation) -> Dict[str, float]:
+    flops = 0.0
+    for i in comp.instrs.values():
+        if i.opcode == "dot":
+            flops += _dot_flops(comp, i)
+        elif i.opcode == "convolution":
+            flops += _conv_flops(comp, i)
+    return {"flops": flops}
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)|^(\d+)\)")
+_SLICING = ("dynamic-slice", "slice", "gather")
+
+
+_TRANSPARENT = ("convert", "bitcast", "copy", "negate", "transpose")
+
+
+def _fusion_operand_bytes(comps: Dict[str, "Computation"],
+                          instr: Instr) -> Tuple[float, float]:
+    """(read_bytes, write_bytes) for a fusion, looking inside the called
+    computation:
+
+      - a parameter consumed (through transparent convert/bitcast chains)
+        only by slicing ops costs the slice outputs, not the whole buffer;
+      - a whole-result dynamic-update-slice makes the fusion in-place: it
+        writes the update slice, and the aliased full-size input is free.
+
+    Both rules compare ELEMENT counts (dtype round-trips through f32 that
+    XLA materializes on CPU are free on the real target)."""
+    m = _CALLS_RE.search(instr.rest)
+    called = comps.get(m.group(1)) if m else None
+    if called is None:
+        return (0.0, instr.out_bytes)
+    params: Dict[int, Instr] = {}
+    for i in called.instrs.values():
+        if i.opcode == "parameter":
+            pm = re.match(r"(\d+)\)", i.rest)
+            if pm:
+                params[int(pm.group(1))] = i
+
+    def effective_uses(name: str) -> List[Instr]:
+        """Transitive uses, looking through transparent unary ops."""
+        out, frontier = [], [name]
+        seen = set()
+        while frontier:
+            n = frontier.pop()
+            for j in called.instrs.values():
+                if n in j.operands and j.name not in seen:
+                    seen.add(j.name)
+                    if j.opcode in _TRANSPARENT:
+                        frontier.append(j.name)
+                    else:
+                        out.append(j)
+        return out
+
+    result_elems = _shape_elems(instr.type_str)
+    # detect the in-place whole-result DUS and its update operand
+    dus_update_bytes = None
+    dus_buffer_param: Optional[str] = None
+    for j in called.instrs.values():
+        if j.opcode == "dynamic-update-slice" and \
+                _shape_elems(j.type_str) == result_elems:
+            ops = j.operands
+            upd = called.instrs.get(ops[1]) if len(ops) > 1 else None
+            if upd is not None:
+                dus_update_bytes = upd.out_bytes
+                # walk operand 0 back through transparent ops to a parameter
+                src = ops[0]
+                while src in called.instrs and \
+                        called.instrs[src].opcode in _TRANSPARENT and \
+                        called.instrs[src].operands:
+                    src = called.instrs[src].operands[0]
+                if src in called.instrs and \
+                        called.instrs[src].opcode == "parameter":
+                    dus_buffer_param = src
+            break
+
+    reads = 0.0
+    for idx in range(len(instr.operands)):
+        p = params.get(idx)
+        if p is None:
+            continue
+        if dus_buffer_param is not None and p.name == dus_buffer_param:
+            reads += dus_update_bytes or 0.0     # aliased in-place read
+            continue
+        uses = effective_uses(p.name)
+        if uses and all(j.opcode in _SLICING for j in uses):
+            reads += sum(j.out_bytes for j in uses)
+        else:
+            reads += p.out_bytes
+    writes = dus_update_bytes if dus_update_bytes is not None \
+        else instr.out_bytes
+    return reads, writes
+
+
+def _local_traffic(comp: Computation,
+                   comps: Optional[Dict[str, "Computation"]] = None,
+                   fused: bool = False) -> float:
+    """HBM-traffic model per executed instance of this computation.
+
+    Op-aware: dynamic-update-slice is in-place (costs the update slice,
+    read+write); slicing/gather ops cost the bytes actually moved (output),
+    not the whole source buffer; `copy` of loop carries is alias-elided on
+    TPU and skipped; fusions are introspected (_fusion_operand_bytes).
+
+    ``fused=False`` (upper bound): every op also re-reads its operands —
+    the CPU-HLO unfused reality. ``fused=True`` (TPU estimate): assume
+    producer->consumer fusion, so each intermediate hits HBM once (output
+    write + one read by its consumer ≈ 2x outputs; operand re-reads are
+    counted only for dots, whose inputs genuinely stream from HBM)."""
+    total = 0.0
+    comps = comps or {}
+    for i in comp.instrs.values():
+        op = i.opcode
+        if op in _NO_TRAFFIC or op == "copy" or op.endswith("-done"):
+            continue
+        if op == "fusion":
+            r, w = _fusion_operand_bytes(comps, i)
+            total += (w * 2.0) if fused else (r + w)
+            continue
+        if op == "dynamic-update-slice":
+            ops = i.operands
+            upd = comp.instrs.get(ops[1]) if len(ops) > 1 else None
+            total += 2 * (upd.out_bytes if upd else i.out_bytes)
+            continue
+        if op in ("dynamic-slice", "slice", "gather", "broadcast",
+                  "reduce", "reduce-window"):
+            total += 2 * i.out_bytes     # read moved bytes + write result
+            if op in ("reduce", "reduce-window") and not fused:
+                # unfused reductions read their full operand
+                src = comp.instrs.get(i.operands[0]) if i.operands else None
+                total += (src.out_bytes if src else 0) - i.out_bytes
+            continue
+        total += i.out_bytes
+        if fused and op not in ("dot", "convolution", "concatenate"):
+            continue
+        for name in i.operands:
+            src = comp.instrs.get(name)
+            if src is not None and src.opcode != "constant":
+                total += src.out_bytes
+    return total
+
+
+def _local_dot_traffic(comp: Computation) -> float:
+    """Operand+result bytes of dot ops only — the fused-ideal lower bound
+    on HBM traffic (a perfectly fused TPU program streams matmul operands
+    and fuses everything else)."""
+    total = 0.0
+    for i in comp.instrs.values():
+        if i.opcode not in ("dot", "convolution"):
+            continue
+        total += i.out_bytes
+        for op in i.operands:
+            src = comp.instrs.get(op)
+            if src is not None:
+                total += src.out_bytes
+    return total
+
+
+def _local_collectives(comp: Computation) -> Dict[str, float]:
+    out: Dict[str, float] = defaultdict(float)
+    for i in comp.instrs.values():
+        base = i.opcode[:-6] if i.opcode.endswith("-start") else i.opcode
+        if base not in COLLECTIVES or i.opcode.endswith("-done"):
+            continue
+        in_bytes = 0
+        for op in i.operands:
+            src = comp.instrs.get(op)
+            if src is not None:
+                in_bytes += src.out_bytes
+        out[base] += max(i.out_bytes, in_bytes)
+    return dict(out)
+
+
+# ------------------------------------------------------------ call graph
+
+
+def _edges(comp: Computation) -> List[Tuple[str, float, str]]:
+    """(child, multiplicity factor, kind) for every call-like edge."""
+    out = []
+    for i in comp.instrs.values():
+        if i.opcode == "while":
+            m = _WHILE_RE.search(i.rest)
+            if m:
+                out.append((m.group(1), 1.0, "embedded"))   # cond (cheap)
+                out.append((m.group(2), -1.0, "while"))     # body: trip TBD
+        elif i.opcode == "conditional":
+            m = _BRANCH_RE.search(i.rest)
+            if m:
+                for b in _OPERAND_RE.findall(m.group(1)):
+                    out.append((b, 1.0, "control"))
+        else:
+            m = _CALLS_RE.search(i.rest)
+            if m:
+                kind = "control" if i.opcode == "call" else "embedded"
+                out.append((m.group(1), 1.0, kind))
+    return out
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> float:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1.0
+    cands = cond.int_constants()
+    # the loop bound also hides in fusion-called compare computations
+    for child, _, _ in _edges(cond):
+        sub = comps.get(child)
+        if sub:
+            cands += sub.int_constants()
+    return float(max(cands)) if cands else 1.0
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float                        # per device, per step
+    traffic_bytes: float                # per device, TPU-fused estimate
+    traffic_bytes_upper: float          # unfused upper bound
+    dot_traffic_bytes: float            # dot-streaming lower bound
+    collective_bytes: float             # per device
+    collective_breakdown: Dict[str, float]
+    flops_by_comp: Dict[str, float]     # top contributors
+    coll_by_comp: Dict[str, float]
+    trip_counts: Dict[str, float]
+
+
+def analyze(text: str) -> ModuleCost:
+    comps, entry = parse_module(text)
+    mult: Dict[str, float] = defaultdict(float)
+    kind_of: Dict[str, str] = {entry: "control"}
+    mult[entry] = 1.0
+
+    # topological propagation (call graph is a DAG in HLO)
+    order: List[str] = []
+    seen = set()
+
+    def topo(name: str):
+        if name in seen or name not in comps:
+            return
+        seen.add(name)
+        for child, _, _ in _edges(comps[name]):
+            topo(child)
+        order.append(name)
+
+    topo(entry)
+    for name in reversed(order):
+        c = comps[name]
+        for child, f, kind in _edges(c):
+            if kind == "while":
+                f = _trip_count(comps, _while_cond_of(c, child))
+            mult[child] += mult[name] * f
+            if kind in ("while", "control"):
+                kind_of[child] = "control"
+            else:
+                kind_of.setdefault(child, "embedded")
+
+    flops_total = 0.0
+    traffic_total = 0.0
+    traffic_upper = 0.0
+    dot_traffic_total = 0.0
+    coll_total: Dict[str, float] = defaultdict(float)
+    flops_by: Dict[str, float] = {}
+    coll_by: Dict[str, float] = {}
+    trips: Dict[str, float] = {}
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        f = _local_costs(c)["flops"] * m
+        if f:
+            flops_by[name] = f
+        flops_total += f
+        dot_traffic_total += _local_dot_traffic(c) * m
+        if kind_of.get(name) == "control":
+            traffic_total += _local_traffic(c, comps, fused=True) * m
+            traffic_upper += _local_traffic(c, comps, fused=False) * m
+            for k, v in _local_collectives(c).items():
+                coll_total[k] += v * m
+                coll_by[name] = coll_by.get(name, 0.0) + v * m
+        if m > 1:
+            trips[name] = m
+    return ModuleCost(
+        flops=flops_total, traffic_bytes=traffic_total,
+        traffic_bytes_upper=traffic_upper,
+        dot_traffic_bytes=dot_traffic_total,
+        collective_bytes=float(sum(coll_total.values())),
+        collective_breakdown=dict(coll_total),
+        flops_by_comp=dict(sorted(flops_by.items(),
+                                  key=lambda kv: -kv[1])[:20]),
+        coll_by_comp=dict(sorted(coll_by.items(),
+                                 key=lambda kv: -kv[1])[:20]),
+        trip_counts=trips)
+
+
+def _while_cond_of(comp: Computation, body_name: str) -> str:
+    for i in comp.instrs.values():
+        if i.opcode == "while":
+            m = _WHILE_RE.search(i.rest)
+            if m and m.group(2) == body_name:
+                return m.group(1)
+    return ""

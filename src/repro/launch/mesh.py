@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state, so smoke tests keep their single CPU device and
+only the dry-run (which sets XLA_FLAGS before any jax import) sees the 512
+placeholder devices.
+
+Mesh layout: 16x16 within a pod ("data" x "model": FSDP/DP over data, TP/EP
+over model), and a leading "pod" axis (pure DP — cross-pod traffic is only
+the gradient all-reduce, riding DCN) for the 2-pod, 512-chip configuration.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_cpu_mesh():
+    """1x1 mesh over the local device — same axis names, so the identical
+    sharded code paths run in smoke tests."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

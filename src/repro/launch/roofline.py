@@ -1,0 +1,145 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+Three terms, in seconds, per training/serving step on the target hardware
+(TPU v5e class):
+
+  compute    = HLO_FLOPs   / (chips x 197e12 FLOP/s)
+  memory     = HLO_bytes   / (chips x 819e9  B/s HBM)
+  collective = coll_bytes  / (chips x 50e9   B/s ICI link)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``. Collective
+bytes are NOT in cost_analysis: we parse the post-SPMD per-device HLO
+(``compiled.as_text()``) and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute /
+ragged-all-to-all op. MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE)
+gives the useful-work ratio that flags remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# `%x = bf16[8,128,4096]{2,1,0} all-gather(...)`  (also matches fusion-free
+# start/done pairs; we count only the *-start or the plain op, not *-done)
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|([a-z0-9]+)\[([0-9,]*)\][^ ]*)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind summed operand (output) bytes in the per-device
+    module. Tuple-shaped results (e.g. all-reduce-start) sum their parts."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        kind = m.group(3)
+        lhs = line.split("=", 1)[1]
+        lhs = lhs[: lhs.index(kind)]
+        total = sum(_nbytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(lhs))
+        out[kind] += total
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # global, all chips
+    hlo_bytes: float             # global HBM traffic (upper-bound proxy)
+    coll_bytes_per_chip: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float           # 6·N(active)·D tokens-based
+    peak_mem_bytes: Optional[float] = None
+    hlo_bytes_lower: float = 0.0  # global dot-only traffic (fused ideal)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_chip / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of roofline this step achieves: the ideal step time is
+        bounded below by BOTH the useful-FLOPs compute time and the
+        irreducible (dot-streaming) HBM time — decode steps are legitimately
+        bandwidth-bound, so the memory floor is part of the roofline."""
+        ideal = max(self.model_flops / (self.chips * PEAK_FLOPS),
+                    self.hlo_bytes_lower / (self.chips * HBM_BW))
+        return ideal / self.step_bound_s if self.step_bound_s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "peak_mem_bytes": self.peak_mem_bytes,
+            "hlo_bytes_lower": self.hlo_bytes_lower,
+            "memory_lower_s": self.hlo_bytes_lower / (self.chips * HBM_BW),
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Useful FLOPs per step: 6·N·D for training (fwd+bwd), 2·N·D for
+    inference (fwd only), N = active params (MoE), D = tokens this step.
+    Decode steps process global_batch tokens."""
+    n = cfg.active_param_count()
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n * shape.tokens

@@ -1,0 +1,113 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains a REDUCED config end-to-end (the ~100M-class
+example driver); on a real TPU slice the same entrypoint with ``--full``
+and a production mesh trains the assigned config. Guard is wired in as the
+per-step hook: step times stream into the online monitor, and an
+IMMEDIATE-tier event restarts from the last checkpoint — the closed loop of
+Fig. 1 at single-host scale.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import DetectorConfig, OnlineMonitor, PolicyConfig
+from repro.core.telemetry import Frame
+from repro.models.model import Model
+from repro.train import (AdamWConfig, CheckpointManager, DataConfig,
+                         SyntheticLM, TrainConfig, Trainer)
+
+
+class GuardStepHook:
+    """Adapts trainer step timing to Guard telemetry frames.
+
+    Single-host stand-in: each step contributes one 'node' sample; on a real
+    deployment every host reports its own barrier time into the fleet frame.
+    """
+
+    def __init__(self, window: int = 6):
+        self.monitor = OnlineMonitor(
+            DetectorConfig(window=6, persistence=4),
+            PolicyConfig())
+        self.window = window
+        self._buf = []
+        self.restarts = 0
+
+    def __call__(self, step: int, wall_s: float, metrics) -> bool:
+        self._buf.append(wall_s)
+        if len(self._buf) < self.window:
+            return False
+        frame = Frame(
+            t=float(step), step=step,
+            node_ids=np.arange(1, dtype=np.int64),
+            metrics={"step_time": np.asarray([np.mean(self._buf)])},
+            valid=np.ones(1, bool))
+        self._buf.clear()
+        # peer-relative detection needs peers; at single-host scale this
+        # exercises the plumbing (stall detection still works)
+        events = self.monitor.observe(frame)
+        for ev in events:
+            if ev.decision.action.value == "immediate_restart":
+                self.restarts += 1
+                return True
+        return False
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full published config (TPU-scale)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-interval", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    print(f"[train] {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
+          f"params={cfg.param_count()/1e6:.1f}M")
+
+    model = Model(cfg)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq_len, args.batch,
+                                  seed=args.seed))
+    hook = GuardStepHook()
+    trainer = Trainer(
+        model, data,
+        TrainConfig(steps=args.steps, ckpt_interval=args.ckpt_interval,
+                    microbatch=args.microbatch,
+                    opt=AdamWConfig(peak_lr=args.lr,
+                                    warmup_steps=max(args.steps // 20, 1),
+                                    total_steps=args.steps)),
+        ckpt=CheckpointManager(args.ckpt_dir),
+        hook=hook, seed=args.seed)
+
+    def log(step, m):
+        if step % 10 == 0 or step == 1:
+            print(f"  step {step:5d}  loss {m['loss']:.4f}  "
+                  f"gnorm {m['grad_norm']:.3f}  lr {m['lr']:.2e}")
+
+    out = trainer.run(on_metrics=log)
+    losses = [h["loss"] for h in out["history"]]
+    walls = [h["wall_s"] for h in out["history"]]
+    print(f"[train] done: {out['final_step']} steps, "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+          f"median step {np.median(walls)*1e3:.0f} ms, "
+          f"guard restarts {hook.restarts}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

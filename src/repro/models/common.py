@@ -1,0 +1,106 @@
+"""Param-tree utilities: annotated initialization with logical sharding axes.
+
+Every parameter leaf is created as ``Annot(value, axes)`` where ``axes`` is a
+tuple of logical axis names (see ``repro.dist.api.DEFAULT_RULES``). A single
+``split`` call at the end of ``init`` separates the value tree from the axes
+tree, so values and sharding metadata can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Annot:
+    """A param leaf annotated with logical sharding axes.
+
+    Registered as a pytree node whose *child* is the value and whose
+    *aux data* is the axes tuple — so jax transforms (vmap for layer
+    stacking, eval_shape for the allocation-free dry-run) pass through it
+    while the sharding metadata rides along statically.
+    """
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Tuple[Optional[str], ...]):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Annot({self.value!r}, axes={self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    Annot,
+    lambda a: ((a.value,), a.axes),
+    lambda aux, ch: Annot(ch[0], aux),
+)
+
+
+def is_annot(x) -> bool:
+    return isinstance(x, Annot)
+
+
+def dense(key, in_dim: int, out_dim: int, axes, *, scale: Optional[float] = None,
+          dtype=jnp.float32) -> Annot:
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    v = jax.random.normal(key, (in_dim, out_dim), dtype) * jnp.asarray(scale, dtype)
+    return Annot(v, tuple(axes))
+
+
+def zeros(shape, axes, dtype=jnp.float32) -> Annot:
+    return Annot(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def ones(shape, axes, dtype=jnp.float32) -> Annot:
+    return Annot(jnp.ones(shape, dtype), tuple(axes))
+
+
+def normal(key, shape, axes, *, scale=0.02, dtype=jnp.float32) -> Annot:
+    return Annot(jax.random.normal(key, shape, dtype) * jnp.asarray(scale, dtype),
+                 tuple(axes))
+
+
+def split(tree):
+    """Annotated tree -> (values, axes). Trees share one treedef."""
+    values = jax.tree.map(lambda a: a.value, tree, is_leaf=is_annot)
+    axes = jax.tree.map(lambda a: a.axes, tree, is_leaf=is_annot)
+    return values, axes
+
+
+def stack_layers(tree):
+    """Mark every Annot in a vmap-stacked layer tree with a leading
+    (unsharded) 'layer' axis."""
+    return jax.tree.map(
+        lambda a: Annot(a.value, ("layer",) + a.axes),
+        tree, is_leaf=is_annot)
+
+
+def keygen(key):
+    """Infinite stream of fresh PRNG keys."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+def cast(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+
+    def c(self, tree):
+        return cast(tree, self.compute_dtype)
+
+
+def pad_vocab(vocab_size: int, multiple: int = 128) -> int:
+    """Megatron-style vocab padding: TPU-lane friendly and TP-divisible."""
+    return ((vocab_size + multiple - 1) // multiple) * multiple

@@ -1,0 +1,175 @@
+"""Shared neural-net layers: norms, RoPE / M-RoPE, gated MLPs, embeddings."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.api import constraint
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------- norms
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def group_norm(x, scale, bias, num_groups, eps=1e-5):
+    """GroupNorm over the last dim (used by RWKV's ln_x)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    xg = x.astype(jnp.float32).reshape(*lead, num_groups, d // num_groups)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    y = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def _rope_angles(positions, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., head_dim//2), fp32."""
+    half = head_dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x (B, S, H, hd); positions (B, S). GPT-NeoX half-split convention."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)   # (B, S, hd/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections: Tuple[int, ...], theta: float):
+    """M-RoPE (qwen2-vl): positions3 (3, B, S); sections sum == head_dim//2.
+
+    Frequency slots are assigned to (temporal, height, width) sections; each
+    slot rotates by the position of its section.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+    )                                                  # (half,)
+    # per-slot position: select section's position stream
+    pos = positions3.astype(jnp.float32)               # (3, B, S)
+    pos_sel = pos[sec_id, :, :]                        # (half, B, S)
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)             # (B, S, half)
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos_sel * freq                               # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- MLPs
+
+
+def init_mlp(keys, d_model: int, d_ff: int, act: str):
+    """Gated MLPs keep gate/up as SEPARATE matrices: splitting a fused
+    (2F) projection whose output dim is TP-sharded forces a
+    collective-permute reshard of the halves (each half lives on the other
+    half of the TP group) — 0.65 TB/chip/step on the 110B cell."""
+    p = {}
+    if act in ("swiglu", "geglu"):
+        p["wg"] = cm.dense(next(keys), d_model, d_ff, ("fsdp", "ff"))
+        p["wu"] = cm.dense(next(keys), d_model, d_ff, ("fsdp", "ff"))
+    else:
+        p["wi"] = cm.dense(next(keys), d_model, d_ff, ("fsdp", "ff"))
+    p["wo"] = cm.dense(next(keys), d_ff, d_model, ("ff", "fsdp"))
+    return p
+
+
+def apply_mlp(p, x, act: str):
+    """x (B, S, D) -> (B, S, D)."""
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+        if act == "gelu":
+            h = jax.nn.gelu(h)
+        elif act == "relu_sq":
+            h = jnp.square(jax.nn.relu(h))
+        else:
+            raise ValueError(act)
+    h = constraint(h, "act_batch", None, "act_ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def init_embed(keys, vocab_padded: int, d_model: int, tie: bool):
+    p = {"tok": cm.normal(next(keys), (vocab_padded, d_model),
+                          ("vocab", "fsdp"), scale=0.02)}
+    if not tie:
+        p["head"] = cm.dense(next(keys), d_model, vocab_padded,
+                             ("fsdp", "vocab"))
+    return p
+
+
+def embed_tokens(p, tokens, compute_dtype):
+    out = jnp.take(p["tok"].astype(compute_dtype), tokens, axis=0)
+    return out
+
+
+def logits_from_hidden(p, x, vocab_size: int, tie: bool):
+    """x (..., D) -> logits (..., V_padded) with padded slots masked."""
+    if tie:
+        w = p["tok"].astype(x.dtype).T
+    else:
+        w = p["head"].astype(x.dtype)
+    logits = x @ w
+    vp = logits.shape[-1]
+    if vp != vocab_size:
+        pad_mask = (jnp.arange(vp) >= vocab_size)
+        logits = logits + (pad_mask * jnp.asarray(-1e9, x.dtype))
+    return logits
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Streaming-safe CE over a (possibly vocab-sharded) logits tensor.
+
+    logits (B, S, Vp) any float dtype; labels (B, S) int32, -1 = masked.
+    Avoids materializing fp32 logits or a one-hot: the correct-class logit is
+    an iota-compare reduction and logsumexp reduces in fp32 accumulators.
+    """
+    vp = logits.shape[-1]
+    lmax = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - lmax).astype(jnp.float32)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + lmax[..., 0].astype(jnp.float32)
+    onehot_sel = (jnp.arange(vp)[None, None, :] == labels[..., None])
+    correct = jnp.sum(jnp.where(onehot_sel, logits.astype(jnp.float32), 0.0), axis=-1)
+    nll = lse - correct
+    mask = (labels >= 0) & (labels < vocab_size)
+    nll = jnp.where(mask, nll, 0.0)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)

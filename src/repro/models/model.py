@@ -1,0 +1,642 @@
+"""Unified model API over all assigned architecture families.
+
+``Model(cfg)`` exposes:
+
+  init(key)                 -> annotated param tree (values carry logical axes)
+  train_loss(params, batch) -> (loss, metrics)        [train_4k]
+  prefill(params, batch)    -> (last_logits, cache)   [prefill_32k]
+  decode_step(params, tokens, cache) -> (logits, cache)  [decode_32k/long_500k]
+  init_cache(batch, cache_len) -> cache pytree (zeros)
+
+Families: dense/vlm (RoPE/M-RoPE GQA transformer), moe (GQA + routed
+experts), ssm (RWKV6), hybrid (Griffin RG-LRU + local attention), audio
+(whisper encoder-decoder; mel frontend is a stub — precomputed frames).
+
+Layers are scan-stacked (one traced body per layer kind -> compact HLO that
+partitions quickly on the 512-device dry-run mesh) and remat'd according to
+``Model.remat`` ("full" | "none").
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.dist import api as dist
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models import rglru
+from repro.models import rwkv6
+from repro.models import transformer as tfm
+from repro.models.layers import (apply_mlp, cross_entropy, embed_tokens,
+                                 init_embed, init_mlp, layer_norm,
+                                 logits_from_hidden, rms_norm)
+
+MAX_DECODE_LEN = 32_768       # learned-pos-emb table length (whisper decode)
+
+
+def _stack_inits(fn, n: int):
+    """Run an init fn n times and stack the Annot trees on a 'layer' axis."""
+    trees = [fn() for _ in range(n)]
+    if n == 1:
+        return jax.tree.map(
+            lambda a: cm.Annot(a.value[None], ("layer",) + a.axes),
+            trees[0], is_leaf=cm.is_annot)
+
+    def stack(*leaves):
+        vals = jnp.stack([l.value for l in leaves])
+        return cm.Annot(vals, ("layer",) + leaves[0].axes)
+
+    return jax.tree.map(stack, *trees, is_leaf=cm.is_annot)
+
+
+def _maybe_remat(fn, mode: str):
+    if mode == "full":
+        return jax.checkpoint(fn)
+    return fn
+
+
+# =====================================================================
+# Model
+# =====================================================================
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, policy: Optional[cm.Policy] = None,
+                 remat: str = "full", fsdp_gather: bool = True):
+        self.cfg = cfg
+        self.policy = policy or cm.Policy()
+        self.remat = remat
+        # ZeRO-3 JIT weight gather before use (see dist.gather_fsdp); can
+        # be disabled to reproduce the naive GSPMD baseline in §Perf
+        self.fsdp_gather = fsdp_gather
+        self.vocab_padded = cm.pad_vocab(cfg.vocab_size)
+        self._axes_cache = None
+
+    def _axes(self, key: str, strip_layer: bool = False):
+        """Logical-axes subtree for one param group (lazy, eval_shape)."""
+        if self._axes_cache is None:
+            self._axes_cache = self.param_axes()
+        sub = self._axes_cache[key]
+        if not strip_layer:
+            return sub
+        return jax.tree.map(
+            lambda ax: ax[1:] if ax and ax[0] == "layer" else ax,
+            sub, is_leaf=dist._is_axes_leaf)
+
+    def _gather(self, lp, key: str, strip_layer: bool = False):
+        if not self.fsdp_gather or dist.current() is None:
+            return lp
+        return dist.gather_fsdp(lp, self._axes(key, strip_layer))
+
+    # ------------------------------------------------------------ init
+
+    def init(self, key):
+        cfg = self.cfg
+        keys = cm.keygen(key)
+        p: Dict[str, Any] = {
+            "embed": init_embed(keys, self.vocab_padded, cfg.d_model,
+                                cfg.tie_embeddings),
+            "ln_f": cm.zeros((cfg.d_model,), (None,)),
+        }
+        if cfg.family == "ssm":
+            p["ln0"] = cm.zeros((cfg.d_model,), (None,))
+            p["layers"] = _stack_inits(
+                lambda: rwkv6.init_block(keys, cfg), cfg.num_layers)
+        elif cfg.family == "hybrid":
+            n_units, rem = self._hybrid_units()
+            p["units"] = _stack_inits(
+                lambda: self._init_hybrid_unit(keys), n_units)
+            if rem:
+                p["tail"] = [self._init_hybrid_layer(keys, kind)
+                             for kind in self._hybrid_tail_kinds()]
+        elif cfg.is_encoder_decoder:
+            p["enc_layers"] = _stack_inits(
+                lambda: tfm.init_encoder_layer(keys, cfg), cfg.encoder_layers)
+            p["ln_enc"] = cm.zeros((cfg.d_model,), (None,))
+            p["dec_layers"] = _stack_inits(
+                lambda: tfm.init_decoder_layer(keys, cfg, moe_layer=False,
+                                               cross=True), cfg.num_layers)
+            if cfg.learned_pos_emb:
+                p["pos_enc"] = cm.normal(keys.__next__(),
+                                         (cfg.encoder_seq_len, cfg.d_model),
+                                         (None, "fsdp"), scale=0.02)
+                p["pos_dec"] = cm.normal(keys.__next__(),
+                                         (MAX_DECODE_LEN, cfg.d_model),
+                                         (None, "fsdp"), scale=0.02)
+        elif cfg.moe:
+            n_dense = 1 if cfg.moe.first_layer_dense else 0
+            if n_dense:
+                p["dense0"] = tfm.init_decoder_layer(
+                    keys, cfg, moe_layer=False, dense_d_ff=cfg.moe.dense_d_ff)
+            p["layers"] = _stack_inits(
+                lambda: tfm.init_decoder_layer(keys, cfg, moe_layer=True),
+                cfg.num_layers - n_dense)
+        else:  # dense / vlm
+            p["layers"] = _stack_inits(
+                lambda: tfm.init_decoder_layer(keys, cfg, moe_layer=False),
+                cfg.num_layers)
+        return p
+
+    def init_params(self, key):
+        """init + split -> (values, axes)."""
+        return cm.split(self.init(key))
+
+    def param_axes(self):
+        """Axes tree without materializing values (via eval_shape)."""
+        tree = jax.eval_shape(self.init, jax.random.key(0))
+        return jax.tree.map(lambda a: a.axes, tree, is_leaf=cm.is_annot)
+
+    def param_shapes(self):
+        tree = jax.eval_shape(self.init, jax.random.key(0))
+        return jax.tree.map(lambda a: a.value, tree, is_leaf=cm.is_annot)
+
+    # ------------------------------------------------------ hybrid helpers
+
+    def _hybrid_units(self) -> Tuple[int, int]:
+        pat = len(self.cfg.block_pattern)
+        return self.cfg.num_layers // pat, self.cfg.num_layers % pat
+
+    def _hybrid_tail_kinds(self):
+        pat = self.cfg.block_pattern
+        _, rem = self._hybrid_units()
+        return [pat[i % len(pat)] for i in range(rem)]
+
+    def _init_hybrid_layer(self, keys, kind: str):
+        cfg = self.cfg
+        if kind == "attn":
+            return tfm.init_decoder_layer(keys, cfg, moe_layer=False)
+        return {
+            "ln_rec": cm.zeros((cfg.d_model,), (None,)),
+            "rec": rglru.init_rec_block(keys, cfg),
+            "ln_mlp": cm.zeros((cfg.d_model,), (None,)),
+            "mlp": init_mlp(keys, cfg.d_model, cfg.d_ff, cfg.act),
+        }
+
+    def _init_hybrid_unit(self, keys):
+        return {f"l{i}_{kind}": self._init_hybrid_layer(keys, kind)
+                for i, kind in enumerate(self.cfg.block_pattern)}
+
+    # --------------------------------------------------------- embedding
+
+    def _embed(self, p, tokens, batch=None):
+        cfg = self.cfg
+        x = embed_tokens(self._gather(p["embed"], "embed"), tokens,
+                         self.policy.compute_dtype)
+        if cfg.family == "hybrid":                       # gemma convention
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if batch is not None and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(x.dtype)   # (B, P, D) stub
+            x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+        return dist.constraint(x, "act_batch", "act_seq", "act_embed")
+
+    def _positions(self, batch, B, S):
+        if self.cfg.mrope_sections:
+            return batch["positions"]                     # (3, B, S)
+        pos = batch.get("positions") if batch else None
+        if pos is None:
+            pos = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+        return pos
+
+    # =================================================================
+    # forward (train / prefill)
+    # =================================================================
+
+    def _forward(self, params, batch, *, collect_cache: bool):
+        """Shared train/prefill body -> (hidden (B,S,D), aux, cache)."""
+        cfg = self.cfg
+        p = self.policy.c(params)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        fam = cfg.family
+
+        if fam == "ssm":
+            return self._forward_rwkv(p, tokens, collect_cache)
+        if fam == "hybrid":
+            return self._forward_hybrid(p, tokens, collect_cache)
+        if cfg.is_encoder_decoder:
+            return self._forward_encdec(p, batch, collect_cache)
+
+        x = self._embed(p, tokens, batch)
+        positions = self._positions(batch, B, S)
+        aux_total = jnp.zeros((), jnp.float32)
+        caches = []
+
+        if cfg.moe and cfg.moe.first_layer_dense:
+            x, _, c = tfm.decoder_layer(self._gather(p["dense0"], "dense0"),
+                                        cfg, x, positions,
+                                        collect_cache=collect_cache)
+            caches.append(c)
+
+        def body(x, lp):
+            lp = self._gather(lp, "layers", strip_layer=True)
+            x, aux, c = tfm.decoder_layer(lp, cfg, x, positions,
+                                          collect_cache=collect_cache)
+            return x, (aux, c)
+
+        x, (auxs, scanned_cache) = jax.lax.scan(
+            _maybe_remat(body, self.remat if not collect_cache else "none"),
+            x, p["layers"])
+        aux_total = aux_total + jnp.sum(auxs)
+
+        cache = None
+        if collect_cache:
+            cache = {"layers": scanned_cache}
+            if caches:
+                cache["dense0"] = caches[0]
+        return x, aux_total, cache
+
+    def _forward_rwkv(self, p, tokens, collect_cache):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._embed(p, tokens)
+        x = layer_norm(x, 1.0 + p["ln0"], jnp.zeros_like(p["ln0"]),
+                       cfg.norm_eps)
+        H = cfg.d_model // cfg.rwkv_head_dim
+        hd = cfg.rwkv_head_dim
+
+        def body(x, lp):
+            lp = self._gather(lp, "layers", strip_layer=True)
+            s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+            x, st, last = rwkv6.block(lp, cfg, x, s0,
+                                      collect_last=collect_cache)
+            return x, (st, last) if collect_cache else None
+
+        x, ys = jax.lax.scan(
+            _maybe_remat(body, self.remat if not collect_cache else "none"),
+            x, p["layers"])
+        cache = None
+        if collect_cache:
+            states, lasts = ys
+            cache = {"wkv": states, "x_tm": lasts[0], "x_cm": lasts[1]}
+        return x, jnp.zeros((), jnp.float32), cache
+
+    def _forward_hybrid(self, p, tokens, collect_cache):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = self._embed(p, tokens)
+        positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+        W = cfg.window
+        w = cfg.lru_width or cfg.d_model
+        K = cfg.conv_width
+
+        def one_layer(lp, kind, x):
+            if kind == "attn":
+                x, _, c = tfm.decoder_layer(lp, cfg, x, positions,
+                                            window=W,
+                                            collect_cache=collect_cache)
+                if collect_cache:
+                    k, v = c
+
+                    def to_ring(t):
+                        # ring layout: slot i holds position pos with
+                        # pos % W == i.  S % W == 0 keeps slots aligned;
+                        # S < W right-pads (warmup masking covers the rest).
+                        if t.shape[2] < W:
+                            return jnp.pad(
+                                t, ((0, 0), (0, 0),
+                                    (0, W - t.shape[2]), (0, 0)))
+                        assert t.shape[2] % W == 0, (t.shape, W)
+                        return t[:, :, -W:]
+                    c = (to_ring(k), to_ring(v))
+                return x, c
+            h = rms_norm(x, lp["ln_rec"], cfg.norm_eps)
+            h0 = jnp.zeros((B, w), jnp.float32)
+            out, h_last, conv_st = rglru.rec_block(
+                lp["rec"], cfg, h, h0, collect_state=collect_cache)
+            x = x + out
+            h2 = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+            x = x + apply_mlp(lp["mlp"], h2, cfg.act)
+            c = {"h": h_last, "conv": conv_st} if collect_cache else None
+            return x, c
+
+        def unit_body(x, up):
+            up = self._gather(up, "units", strip_layer=True)
+            cs = {}
+            for i, kind in enumerate(cfg.block_pattern):
+                x, c = one_layer(up[f"l{i}_{kind}"], kind, x)
+                if collect_cache:
+                    cs[f"l{i}_{kind}"] = c
+            return x, cs if collect_cache else None
+
+        x, unit_caches = jax.lax.scan(
+            _maybe_remat(unit_body, self.remat if not collect_cache
+                         else "none"), x, p["units"])
+        tail_caches = []
+        tail_p = self._gather(p["tail"], "tail") if "tail" in p else []
+        for lp, kind in zip(tail_p, self._hybrid_tail_kinds()):
+            x, c = one_layer(lp, kind, x)
+            tail_caches.append(c)
+        cache = None
+        if collect_cache:
+            cache = {"units": unit_caches, "tail": tail_caches}
+        return x, jnp.zeros((), jnp.float32), cache
+
+    def _forward_encdec(self, p, batch, collect_cache):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        frames = batch["enc_frames"].astype(self.policy.compute_dtype)
+        enc = frames + p["pos_enc"].astype(frames.dtype)[None]
+
+        def enc_body(x, lp):
+            lp = self._gather(lp, "enc_layers", strip_layer=True)
+            return tfm.encoder_layer(lp, cfg, x), None
+
+        enc, _ = jax.lax.scan(_maybe_remat(enc_body, self.remat),
+                              enc, p["enc_layers"])
+        enc = layer_norm(enc, 1.0 + p["ln_enc"], jnp.zeros_like(p["ln_enc"]),
+                         cfg.norm_eps)
+
+        x = self._embed(p, tokens)
+        x = x + p["pos_dec"].astype(x.dtype)[None, :S]
+        positions = jnp.arange(S, dtype=jnp.int32)[None].repeat(B, 0)
+
+        def dec_body(x, lp):
+            lp = self._gather(lp, "dec_layers", strip_layer=True)
+            x, aux, c = tfm.decoder_layer(lp, cfg, x, positions,
+                                          enc_out=enc,
+                                          collect_cache=collect_cache)
+            return x, c
+
+        x, caches = jax.lax.scan(
+            _maybe_remat(dec_body, self.remat if not collect_cache
+                         else "none"), x, p["dec_layers"])
+        cache = {"layers": caches} if collect_cache else None
+        return x, jnp.zeros((), jnp.float32), cache
+
+    # ----------------------------------------------------------- train
+
+    def train_loss(self, params, batch):
+        cfg = self.cfg
+        x, aux, _ = self._forward(params, batch, collect_cache=False)
+        x = rms_norm(x, params["ln_f"].astype(x.dtype), cfg.norm_eps) \
+            if cfg.family != "audio" else \
+            layer_norm(x, 1.0 + params["ln_f"].astype(x.dtype),
+                       jnp.zeros_like(params["ln_f"]).astype(x.dtype),
+                       cfg.norm_eps)
+        x = dist.constraint(x, "act_batch", "act_seq", "act_embed")
+        logits = logits_from_hidden(
+            self._gather(self.policy.c(params["embed"]), "embed"), x,
+            cfg.vocab_size, cfg.tie_embeddings)
+        logits = dist.constraint(logits, "act_batch", "act_seq", "act_vocab")
+        ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        aux_w = cfg.moe.router_aux_loss if cfg.moe else 0.0
+        loss = ce + aux_w * aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    # --------------------------------------------------------- prefill
+
+    def _final_logits(self, params, x_last):
+        cfg = self.cfg
+        lnf = params["ln_f"].astype(x_last.dtype)
+        if cfg.family == "audio":
+            x_last = layer_norm(x_last, 1.0 + lnf, jnp.zeros_like(lnf),
+                                cfg.norm_eps)
+        else:
+            x_last = rms_norm(x_last, lnf, cfg.norm_eps)
+        return logits_from_hidden(
+            self._gather(self.policy.c(params["embed"]), "embed"), x_last,
+            cfg.vocab_size, cfg.tie_embeddings)
+
+    def prefill(self, params, batch):
+        """-> (last-token logits (B, Vp), cache)."""
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x, _, cache = self._forward(params, batch, collect_cache=True)
+        logits = self._final_logits(params, x[:, -1])
+        cache = dict(cache)
+        cache["pos"] = jnp.full((), S, jnp.int32)
+        return logits, cache
+
+    # ---------------------------------------------------------- decode
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        """Zero-filled decode cache (also the dry-run ShapeDtypeStruct via
+        eval_shape)."""
+        cfg = self.cfg
+        B = batch_size
+        hd = cfg.resolved_head_dim
+        nkv = cfg.num_kv_heads
+        d = cfg.d_model
+        zero = functools.partial(jnp.zeros)
+
+        if cfg.family == "ssm":
+            H = d // cfg.rwkv_head_dim
+            rhd = cfg.rwkv_head_dim
+            L = cfg.num_layers
+            return {
+                "wkv": zero((L, B, H, rhd, rhd), jnp.float32),
+                "x_tm": zero((L, B, d), jnp.float32),
+                "x_cm": zero((L, B, d), jnp.float32),
+                "pos": jnp.zeros((), jnp.int32),
+            }
+        kv_dtype = self.policy.compute_dtype
+        if cfg.family == "hybrid":
+            W = cfg.window
+            w = cfg.lru_width or d
+            K = cfg.conv_width
+            n_units, _ = self._hybrid_units()
+
+            def layer_cache(kind, lead=()):
+                if kind == "attn":
+                    return (zero(lead + (B, nkv, W, hd), kv_dtype),
+                            zero(lead + (B, nkv, W, hd), kv_dtype))
+                return {"h": zero(lead + (B, w), jnp.float32),
+                        "conv": zero(lead + (B, K - 1, w), jnp.float32)}
+
+            units = {f"l{i}_{kind}": layer_cache(kind, (n_units,))
+                     for i, kind in enumerate(cfg.block_pattern)}
+            tail = [layer_cache(kind) for kind in self._hybrid_tail_kinds()]
+            return {"units": units, "tail": tail,
+                    "pos": jnp.zeros((), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            L = cfg.num_layers
+            T = cfg.encoder_seq_len
+            return {"layers": (
+                        zero((L, B, nkv, cache_len, hd), kv_dtype),
+                        zero((L, B, nkv, cache_len, hd), kv_dtype),
+                        zero((L, B, nkv, T, hd), kv_dtype),
+                        zero((L, B, nkv, T, hd), kv_dtype)),
+                    "pos": jnp.zeros((), jnp.int32)}
+        L = cfg.num_layers - (1 if cfg.moe and cfg.moe.first_layer_dense
+                              else 0)
+        cache = {"layers": (zero((L, B, nkv, cache_len, hd), kv_dtype),
+                            zero((L, B, nkv, cache_len, hd), kv_dtype)),
+                 "pos": jnp.zeros((), jnp.int32)}
+        if cfg.moe and cfg.moe.first_layer_dense:
+            cache["dense0"] = (zero((B, nkv, cache_len, hd), kv_dtype),
+                               zero((B, nkv, cache_len, hd), kv_dtype))
+        return cache
+
+    def cache_dims(self):
+        """Logical sharding dims for every cache leaf, mirroring the
+        init_cache structure. Decode distribution strategy: batch over
+        (pod, data); KV cache *sequence* over 'model' (flash-decoding
+        partial attention — small-kv-head GQA can't head-shard); recurrent
+        state width over 'model'."""
+        cfg = self.cfg
+        B = ("act_batch",)
+        if cfg.family == "ssm":
+            return {
+                "wkv": (None, "act_batch", "act_heads", None, None),
+                "x_tm": (None, "act_batch", None),
+                "x_cm": (None, "act_batch", None),
+                "pos": (),
+            }
+        kv = (None, "act_batch", None, "act_kv_seq", None)
+        if cfg.family == "hybrid":
+            def layer_dims(kind, lead):
+                pre = (None,) * lead
+                if kind == "attn":
+                    return (pre + ("act_batch", None, "act_kv_seq", None),) * 2
+                return {"h": pre + ("act_batch", "act_ff"),
+                        "conv": pre + ("act_batch", None, "act_ff")}
+
+            units = {f"l{i}_{kind}": layer_dims(kind, 1)
+                     for i, kind in enumerate(cfg.block_pattern)}
+            tail = [layer_dims(kind, 0)
+                    for kind in self._hybrid_tail_kinds()]
+            return {"units": units, "tail": tail, "pos": ()}
+        if cfg.is_encoder_decoder:
+            return {"layers": (kv, kv, kv, kv), "pos": ()}
+        out = {"layers": (kv, kv), "pos": ()}
+        if cfg.moe and cfg.moe.first_layer_dense:
+            out["dense0"] = (kv[1:], kv[1:])
+        return out
+
+    def decode_step(self, params, tokens, cache):
+        """tokens (B,) int32 -> (logits (B, Vp), new cache)."""
+        cfg = self.cfg
+        p = self.policy.c(params)
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        x = embed_tokens(p["embed"], tokens, self.policy.compute_dtype)
+        if cfg.family == "hybrid":
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        x = dist.constraint(x, "act_batch", "act_embed")
+
+        if cfg.family == "ssm":
+            def body(x, xs):
+                lp, st = xs
+                x, st = rwkv6.block_step(lp, cfg, x, st)
+                return x, st
+
+            state = {"wkv": cache["wkv"], "x_tm": cache["x_tm"],
+                     "x_cm": cache["x_cm"]}
+            x, new_state = jax.lax.scan(body, x, (p["layers"], state))
+            new_cache = dict(new_state)
+        elif cfg.family == "hybrid":
+            def one_step(lp, kind, x, c):
+                if kind == "attn":
+                    x, kc, vc = tfm.decoder_layer_step(
+                        lp, cfg, x, c[0], c[1], pos, window=cfg.window)
+                    return x, (kc, vc)
+                h = rms_norm(x, lp["ln_rec"], cfg.norm_eps)
+                out, st = rglru.rec_block_step(lp["rec"], cfg, h, c)
+                x = x + out
+                h2 = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+                x = x + _mlp_step_act(lp["mlp"], h2, cfg.act)
+                return x, st
+
+            def unit_body(x, xs):
+                up, ucache = xs
+                new = {}
+                for i, kind in enumerate(cfg.block_pattern):
+                    key = f"l{i}_{kind}"
+                    x, new[key] = one_step(up[key], kind, x, ucache[key])
+                return x, new
+
+            x, new_units = jax.lax.scan(unit_body, x,
+                                        (p["units"], cache["units"]))
+            new_tail = []
+            for lp, kind, c in zip(p.get("tail", []),
+                                   self._hybrid_tail_kinds(), cache["tail"]):
+                x, nc = one_step(lp, kind, x, c)
+                new_tail.append(nc)
+            new_cache = {"units": new_units, "tail": new_tail}
+        elif cfg.is_encoder_decoder:
+            x = x + p["pos_dec"].astype(x.dtype)[pos]
+
+            def body(x, xs):
+                lp, kc, vc, ck, cv = xs
+                x, kc, vc = tfm.decoder_layer_step(lp, cfg, x, kc, vc, pos,
+                                                   enc_kv=(ck, cv))
+                return x, (kc, vc)
+
+            kc, vc, ck, cv = cache["layers"]
+            x, (nk, nv) = jax.lax.scan(body, x,
+                                       (p["dec_layers"], kc, vc, ck, cv))
+            new_cache = {"layers": (nk, nv, ck, cv)}
+        else:
+            new_cache = {}
+            if cfg.moe and cfg.moe.first_layer_dense:
+                kc, vc = cache["dense0"]
+                x, kc, vc = tfm.decoder_layer_step(p["dense0"], cfg, x,
+                                                   kc, vc, pos)
+                new_cache["dense0"] = (kc, vc)
+
+            def body(x, xs):
+                lp, kc, vc = xs
+                x, kc, vc = tfm.decoder_layer_step(lp, cfg, x, kc, vc, pos)
+                return x, (kc, vc)
+
+            kc, vc = cache["layers"]
+            x, new_kv = jax.lax.scan(body, x, (p["layers"], kc, vc))
+            new_cache["layers"] = new_kv
+
+        logits = self._final_logits(params, x)
+        new_cache["pos"] = pos + 1
+        return logits, new_cache
+
+
+def _mlp_step_act(p, x, act):
+    from repro.models.transformer import _mlp_step
+    return _mlp_step(p, x, act)
+
+
+# =====================================================================
+# input specs (dry-run stand-ins; no allocation)
+# =====================================================================
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig,
+                policy: Optional[cm.Policy] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train/prefill -> {"batch": {...}}; decode -> {"tokens", "cache"}.
+    """
+    policy = policy or cm.Policy()
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+
+    def lm_batch(with_labels: bool):
+        b = {"tokens": sds((B, S), jnp.int32)}
+        if with_labels:
+            b["labels"] = sds((B, S), jnp.int32)
+        if cfg.mrope_sections:
+            b["positions"] = sds((3, B, S), jnp.int32)
+            b["patch_embeds"] = sds((B, min(256, S), cfg.d_model),
+                                    policy.compute_dtype)
+        if cfg.is_encoder_decoder:
+            b["enc_frames"] = sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                  policy.compute_dtype)
+        return b
+
+    if shape.kind in ("train", "prefill"):
+        return {"batch": lm_batch(with_labels=shape.kind == "train")}
+
+    # decode: one new token against a cache of length seq_len
+    model = Model(cfg, policy)
+    cache = jax.eval_shape(
+        functools.partial(model.init_cache, B, S))
+    if cfg.mrope_sections:
+        # decode positions are derived from cache["pos"]; nothing extra
+        pass
+    return {"tokens": sds((B,), jnp.int32), "cache": cache}

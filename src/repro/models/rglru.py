@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block + Griffin/RecurrentGemma layer pattern.
+
+The recurrent block is: two input projections (gate branch + recurrence
+branch), a short temporal conv, the Real-Gated LRU
+    a_t = exp(-c * softplus(Λ) * sigmoid(W_a x_t)),
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t),
+computed over the sequence with `lax.associative_scan` (O(log S) depth — no
+sequential dependency in the HLO), and an output projection gated by
+GeLU(gate branch). Pattern per config: ("rec", "rec", "attn") repeating.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import api as dist
+from repro.models import common as cm
+
+_C = 8.0  # Griffin's fixed scaling inside the decay exponent
+
+
+def init_rec_block(keys, cfg):
+    d, w = cfg.d_model, (cfg.lru_width or cfg.d_model)
+    p = {
+        "wx": cm.dense(next(keys), d, w, ("fsdp", "lru")),   # recurrence branch
+        "wg": cm.dense(next(keys), d, w, ("fsdp", "lru")),   # gate branch
+        "conv": cm.normal(next(keys), (cfg.conv_width, w), (None, "lru"),
+                          scale=1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": cm.zeros((w,), ("lru",)),
+        "wa": cm.normal(next(keys), (w,), ("lru",), scale=0.1),  # input gate W_a (diag)
+        "wi": cm.normal(next(keys), (w,), ("lru",), scale=0.1),  # input gate W_i (diag)
+        "lam": cm.Annot(jnp.full((w,), 0.65), ("lru",)),      # Λ init: a ≈ .9
+        "wo": cm.dense(next(keys), w, d, ("lru", "fsdp")),
+    }
+    return p
+
+
+def _conv1d(x, kernel, bias, state=None):
+    """Causal depthwise temporal conv. x (B,S,W); kernel (K,W).
+
+    state (B,K-1,W) carries the last K-1 inputs for decode; returns
+    (y, new_state) when state is given."""
+    K = kernel.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+            for i in range(K))
+    y = y + bias.astype(x.dtype)
+    if state is None:
+        return y
+    return y, xp[:, -(K - 1):].astype(jnp.float32)
+
+
+def _gates(p, xb):
+    """log-decay (fp32, <0) and input gate for the LRU. xb (B,S,W)."""
+    xf = xb.astype(jnp.float32)
+    ra = jax.nn.sigmoid(xf * p["wa"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * ra
+    gate_i = jax.nn.sigmoid(xf * p["wi"].astype(jnp.float32))
+    return log_a, gate_i
+
+
+def rg_lru(p, xb, h0):
+    """xb (B,S,W) conv output; h0 (B,W) fp32 carry. Associative scan over S."""
+    log_a, gate_i = _gates(p, xb)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = beta * gate_i * xb.astype(jnp.float32)
+    # fold the incoming state into the first element
+    bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    A, H = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return H.astype(xb.dtype), H[:, -1]
+
+
+def rg_lru_step(p, xb, h0):
+    """One decode step. xb (B,W); h0 (B,W) fp32."""
+    log_a, gate_i = _gates(p, xb[:, None])
+    log_a, gate_i = log_a[:, 0], gate_i[:, 0]
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * h0 + beta * gate_i * xb.astype(jnp.float32)
+    return h.astype(xb.dtype), h
+
+
+def rec_block(p, cfg, x, h0, *, collect_state: bool = False):
+    """Recurrent temporal block (train/prefill). x (B,S,D).
+
+    Returns (out, h_last, conv_state) — conv_state is the last K-1 raw conv
+    inputs (decode seed; None unless ``collect_state``)."""
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["wg"]))
+    xb = jnp.einsum("bsd,dw->bsw", x, p["wx"])
+    xb = dist.constraint(xb, "act_batch", None, "act_ff")
+    conv_state = None
+    if collect_state:
+        K = p["conv"].shape[0]
+        conv_state = xb[:, -(K - 1):].astype(jnp.float32)
+    xbc = _conv1d(xb, p["conv"], p["conv_b"])
+    y, h_last = rg_lru(p, xbc, h0)
+    out = jnp.einsum("bsw,wd->bsd", y * gate, p["wo"])
+    return out, h_last, conv_state
+
+
+def rec_block_step(p, cfg, x, state):
+    """Decode step. x (B,D); state dict(h (B,W) fp32, conv (B,K-1,W) fp32)."""
+    gate = jax.nn.gelu(jnp.einsum("bd,dw->bw", x, p["wg"]))
+    xb = jnp.einsum("bd,dw->bw", x, p["wx"])
+    xb2, conv_state = _conv1d(xb[:, None], p["conv"], p["conv_b"],
+                              state["conv"])
+    y, h = rg_lru_step(p, xb2[:, 0], state["h"])
+    out = jnp.einsum("bw,wd->bd", y * gate, p["wo"])
+    return out, {"h": h, "conv": conv_state}

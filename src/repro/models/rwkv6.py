@@ -1,0 +1,222 @@
+"""RWKV6 (Finch): attention-free linear recurrence with data-dependent decay.
+
+Training/prefill use a *chunked* formulation (parallel within chunks of
+``CHUNK`` tokens, `lax.scan` carrying the (B,H,dk,dv) wkv state across
+chunks) — the same algorithm the Pallas kernel (`repro.kernels.wkv6`)
+implements with VMEM tiling; this module is the XLA path and the kernel's
+reference semantics. Decode is a single O(1) state update, which is why this
+arch runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import api as dist
+from repro.models import common as cm
+from repro.models.layers import group_norm, layer_norm
+
+CHUNK = 32
+_CLAMP = 25.0   # exponent clamp for intra-chunk relative decays (fp32-safe)
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def init_block(keys, cfg):
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    p = {
+        "ln1": cm.zeros((d,), (None,)),
+        "ln2": cm.zeros((d,), (None,)),
+        "tm": {
+            "mu_x": cm.normal(next(keys), (d,), (None,), scale=0.1),
+            "mu_rkvgw": cm.normal(next(keys), (5, d), (None, None), scale=0.1),
+            "w1": cm.dense(next(keys), d, 5 * LORA_MIX, ("fsdp", None)),
+            "w2": cm.normal(next(keys), (5, LORA_MIX, d), (None, None, "fsdp"),
+                            scale=0.01),
+            "dw0": cm.Annot(jnp.full((d,), -3.0), (None,)),   # decay ~ .95
+            "dw1": cm.dense(next(keys), d, LORA_DECAY, ("fsdp", None)),
+            "dw2": cm.normal(next(keys), (LORA_DECAY, d), (None, "fsdp"),
+                             scale=0.01),
+            "u": cm.normal(next(keys), (H, hd), ("heads", None), scale=0.1),
+            "wr": cm.dense(next(keys), d, d, ("fsdp", "heads")),
+            "wk": cm.dense(next(keys), d, d, ("fsdp", "heads")),
+            "wv": cm.dense(next(keys), d, d, ("fsdp", "heads")),
+            "wg": cm.dense(next(keys), d, d, ("fsdp", "heads")),
+            "wo": cm.dense(next(keys), d, d, ("heads", "fsdp")),
+            "ln_x_s": cm.ones((d,), (None,)),
+            "ln_x_b": cm.zeros((d,), (None,)),
+        },
+        "cm": {
+            "mu_k": cm.normal(next(keys), (d,), (None,), scale=0.1),
+            "mu_r": cm.normal(next(keys), (d,), (None,), scale=0.1),
+            "wk": cm.dense(next(keys), d, cfg.d_ff, ("fsdp", "ff")),
+            "wv": cm.dense(next(keys), cfg.d_ff, d, ("ff", "fsdp")),
+            "wr": cm.dense(next(keys), d, d, ("fsdp", None)),
+        },
+    }
+    return p
+
+
+def _ddlerp(tm, x, sx):
+    """Data-dependent token-shift interpolation -> (xr, xk, xv, xg, xw)."""
+    xxx = x + sx * tm["mu_x"].astype(x.dtype)
+    t = jnp.tanh(jnp.einsum("bsd,dk->bsk", xxx, tm["w1"]))
+    B, S, _ = t.shape
+    t = t.reshape(B, S, 5, LORA_MIX)
+    mix = jnp.einsum("bsrk,rkd->bsrd", t, tm["w2"].astype(x.dtype))
+    mus = tm["mu_rkvgw"].astype(x.dtype)               # (5, d)
+    outs = [x + sx * (mus[i] + mix[:, :, i]) for i in range(5)]
+    return outs  # r, k, v, g, w order
+
+
+def _decay_logw(tm, xw):
+    """Data-dependent per-channel log-decay (negative, fp32)."""
+    lo = jnp.einsum("bsd,dk->bsk", xw.astype(jnp.float32),
+                    tm["dw1"].astype(jnp.float32))
+    dd = jnp.einsum("bsk,kd->bsd", jnp.tanh(lo), tm["dw2"].astype(jnp.float32))
+    return -jnp.exp(tm["dw0"].astype(jnp.float32) + dd)   # (B,S,D) < 0
+
+
+def wkv_chunked(r, k, v, logw, u, state):
+    """Chunked WKV6. r/k/v (B,S,H,hd) compute dtype; logw (B,S,H,hd) fp32;
+    u (H,hd); state (B,H,hd,hd) fp32. Returns (y (B,S,H,hd), state)."""
+    B, S, H, hd = r.shape
+    C = CHUNK if S % CHUNK == 0 else S
+    nc = S // C
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(B, nc, C, H, hd), 1, 0)
+
+    rc, kc, vc, lwc = map(to_chunks, (r.astype(jnp.float32),
+                                      k.astype(jnp.float32),
+                                      v.astype(jnp.float32), logw))
+    uf = u.astype(jnp.float32)
+
+    def body(S_prev, args):
+        rr, kk, vv, lw = args                          # (B,C,H,hd)
+        clw = jnp.cumsum(lw, axis=1)                   # inclusive
+        ecl = clw - lw                                 # exclusive
+        q_ = rr * jnp.exp(jnp.clip(ecl, -_CLAMP, _CLAMP))
+        k_ = kk * jnp.exp(jnp.clip(-clw, -_CLAMP, _CLAMP))
+        A = jnp.einsum("bthk,bshk->bhts", q_, k_)      # (B,H,C,C)
+        mask = jnp.tril(jnp.ones((C, C), bool), -1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        diag = jnp.einsum("bthk,bthk->bth", rr, uf[None, None] * kk)
+        y = jnp.einsum("bhts,bshv->bthv", A, vv)
+        y = y + diag[..., None] * vv
+        y = y + jnp.einsum("bthk,bhkv->bthv",
+                           rr * jnp.exp(jnp.clip(ecl, -_CLAMP, _CLAMP)), S_prev)
+        total = clw[:, -1]                             # (B,H,hd)
+        kdecay = kk * jnp.exp(jnp.clip(total[:, None] - clw, -_CLAMP, _CLAMP))
+        S_new = (jnp.exp(jnp.clip(total, -_CLAMP, _CLAMP))[..., None] * S_prev
+                 + jnp.einsum("bshk,bshv->bhkv", kdecay, vv))
+        return S_new, y
+
+    state, ys = jax.lax.scan(body, state.astype(jnp.float32),
+                             (rc, kc, vc, lwc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    return y, state
+
+
+def wkv_step(r, k, v, logw, u, state):
+    """Single decode step. r/k/v (B,H,hd); logw (B,H,hd) fp32; state fp32."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    y = jnp.einsum("bhk,bhkv->bhv", rf, state) + \
+        jnp.sum(rf * u.astype(jnp.float32)[None] * kf, -1, keepdims=True) * vf
+    state = jnp.exp(logw)[..., None] * state + kf[..., None] * vf[:, :, None]
+    return y, state
+
+
+def time_mix(p, cfg, x, sx, state):
+    """x (B,S,D) train/prefill (sx = shifted-x minus x); state (B,H,hd,hd)."""
+    B, S, d = x.shape
+    H = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    tm = p["tm"]
+    xr, xk, xv, xg, xw = _ddlerp(tm, x, sx)
+    r = jnp.einsum("bsd,dh->bsh", xr, tm["wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", xk, tm["wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,dh->bsh", xv, tm["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,dh->bsh", xg, tm["wg"]))
+    logw = _decay_logw(tm, xw).reshape(B, S, H, hd)
+    r = dist.constraint(r, "act_batch", None, "act_heads", None)
+    k = dist.constraint(k, "act_batch", None, "act_heads", None)
+    v = dist.constraint(v, "act_batch", None, "act_heads", None)
+    y, state = wkv_chunked(r, k, v, logw, tm["u"], state)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = group_norm(y, tm["ln_x_s"], tm["ln_x_b"], num_groups=H) * g
+    out = jnp.einsum("bsh,hd->bsd", y, tm["wo"])
+    return out, state
+
+
+def channel_mix(p, x, sx, act_unused=None):
+    pc = p["cm"]
+    xk = x + sx * pc["mu_k"].astype(x.dtype)
+    xr = x + sx * pc["mu_r"].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, pc["wk"])
+    k = jnp.square(jax.nn.relu(k))
+    k = dist.constraint(k, "act_batch", None, "act_ff")
+    kv = jnp.einsum("bsf,fd->bsd", k, pc["wv"])
+    return jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, pc["wr"])) * kv
+
+
+def shift(x):
+    """Token shift: x_{t-1} (zeros at t=0)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def block(p, cfg, x, wkv_state, *, collect_last: bool = False):
+    """One RWKV6 block (train/prefill).
+
+    Returns (x, new_state, last) where ``last`` is the (x_tm, x_cm) pair of
+    last-token post-norm activations needed to seed the decode token shift
+    (None unless ``collect_last``)."""
+    h = layer_norm(x, 1.0 + p["ln1"], jnp.zeros_like(p["ln1"]), cfg.norm_eps)
+    sx = shift(h) - h
+    dt, wkv_state = time_mix(p, cfg, h, sx, wkv_state)
+    x = x + dt
+    h2 = layer_norm(x, 1.0 + p["ln2"], jnp.zeros_like(p["ln2"]), cfg.norm_eps)
+    sx2 = shift(h2) - h2
+    x = x + channel_mix(p, h2, sx2)
+    last = None
+    if collect_last:
+        last = (h[:, -1].astype(jnp.float32), h2[:, -1].astype(jnp.float32))
+    return x, wkv_state, last
+
+
+def block_step(p, cfg, x, state):
+    """One decode step. x (B,D); state dict(wkv, x_tm, x_cm)."""
+    B, d = x.shape
+    H = d // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    tm = p["tm"]
+    h = layer_norm(x, 1.0 + p["ln1"], jnp.zeros_like(p["ln1"]), cfg.norm_eps)
+    sx = state["x_tm"].astype(h.dtype) - h
+    h3, sx3 = h[:, None], sx[:, None]
+    xr, xk, xv, xg, xw = _ddlerp(tm, h3, sx3)
+    r = jnp.einsum("bsd,dh->bsh", xr, tm["wr"]).reshape(B, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", xk, tm["wk"]).reshape(B, H, hd)
+    v = jnp.einsum("bsd,dh->bsh", xv, tm["wv"]).reshape(B, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,dh->bsh", xg, tm["wg"]))[:, 0]
+    logw = _decay_logw(tm, xw).reshape(B, H, hd)
+    y, wkv = wkv_step(r, k, v, logw, tm["u"], state["wkv"])
+    y = y.reshape(B, d).astype(x.dtype)
+    y = group_norm(y, tm["ln_x_s"], tm["ln_x_b"], num_groups=H) * g
+    x = x + jnp.einsum("bh,hd->bd", y, tm["wo"])
+
+    h2 = layer_norm(x, 1.0 + p["ln2"], jnp.zeros_like(p["ln2"]), cfg.norm_eps)
+    sx2 = state["x_cm"].astype(h2.dtype) - h2
+    pc = p["cm"]
+    xk2 = h2 + sx2 * pc["mu_k"].astype(h2.dtype)
+    xr2 = h2 + sx2 * pc["mu_r"].astype(h2.dtype)
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bd,df->bf", xk2, pc["wk"])))
+    x = x + jax.nn.sigmoid(jnp.einsum("bd,de->be", xr2, pc["wr"])) * \
+        jnp.einsum("bf,fd->bd", kk, pc["wv"])
+    new_state = {"wkv": wkv, "x_tm": h.astype(jnp.float32),
+                 "x_cm": h2.astype(jnp.float32)}
+    return x, new_state

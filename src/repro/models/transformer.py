@@ -1,0 +1,191 @@
+"""Attention-transformer blocks: decoder layer (dense or MoE FFN), encoder
+layer, and cross-attention decoder layer (whisper). Layer params are
+scan-stacked; bodies are remat'd by the model assembly."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import api as dist
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import moe as moe_mod
+from repro.models.layers import apply_mlp, init_mlp, layer_norm, rms_norm
+
+
+def init_decoder_layer(keys, cfg, *, moe_layer: bool, dense_d_ff: int = 0,
+                       cross: bool = False):
+    p = {
+        "ln_attn": cm.zeros((cfg.d_model,), (None,)),
+        "attn": attn.init_attention(keys, cfg),
+        "ln_mlp": cm.zeros((cfg.d_model,), (None,)),
+    }
+    if moe_layer:
+        p["moe"] = moe_mod.init_moe(keys, cfg)
+    else:
+        p["mlp"] = init_mlp(keys, cfg.d_model,
+                            dense_d_ff or cfg.d_ff, cfg.act)
+    if cross:
+        p["ln_cross"] = cm.zeros((cfg.d_model,), (None,))
+        p["cross"] = attn.init_attention(keys, cfg, cross=True)
+    return p
+
+
+def _norm(cfg, x, scale):
+    if cfg.family == "audio":  # whisper uses LayerNorm
+        return layer_norm(x, 1.0 + scale, jnp.zeros_like(scale), cfg.norm_eps)
+    return rms_norm(x, scale, cfg.norm_eps)
+
+
+def project_cross_kv(p, cfg, enc_out):
+    """Per-layer cross-attention K/V from encoder output, cache layout
+    (B,Hkv,T,hd)."""
+    B, T, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("btd,dh->bth", enc_out, p["wk"]) \
+        .reshape(B, T, cfg.num_kv_heads, hd)
+    v = jnp.einsum("btd,dh->bth", enc_out, p["wv"]) \
+        .reshape(B, T, cfg.num_kv_heads, hd)
+    return jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)
+
+
+def decoder_layer(p, cfg, x, positions, *, causal=True, window=0,
+                  enc_out=None, collect_cache=False):
+    """Train/prefill decoder layer. x (B,S,D). Returns (x, aux, cache_kv)."""
+    h = _norm(cfg, x, p["ln_attn"])
+    q, k, v = attn.project_qkv(p["attn"], cfg, h, positions,
+                               rope=not cfg.learned_pos_emb)
+    if window:
+        o = attn.local_attention(q, k, v, window=window)
+    else:
+        o = attn.full_attention(q, k, v, causal=causal)
+    x = x + attn.out_projection(p["attn"], o)
+
+    cross_cache = None
+    if enc_out is not None:
+        h = _norm(cfg, x, p["ln_cross"])
+        qc = jnp.einsum("bsd,dh->bsh", h, p["cross"]["wq"])
+        B, S, _ = h.shape
+        qc = qc.reshape(B, S, cfg.num_heads, cfg.resolved_head_dim)
+        kc, vc = project_cross_kv(p["cross"], cfg, enc_out)
+        oc = attn.cross_attention(qc, jnp.moveaxis(kc, 1, 2),
+                                  jnp.moveaxis(vc, 1, 2))
+        x = x + attn.out_projection(p["cross"], oc)
+        cross_cache = (kc, vc)
+
+    h = _norm(cfg, x, p["ln_mlp"])
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        d, aux = moe_mod.apply_moe(p["moe"], cfg, h)
+    else:
+        d = apply_mlp(p["mlp"], h, cfg.act)
+    x = x + d
+    x = dist.constraint(x, "act_batch", "act_seq_ckpt", "act_embed")
+    cache = None
+    if collect_cache:
+        # (B,S,Hkv,hd) -> (B,Hkv,S,hd) cache layout
+        cache = (jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2))
+        if cross_cache is not None:
+            cache = cache + cross_cache
+    return x, aux, cache
+
+
+def decoder_layer_step(p, cfg, x, kcache, vcache, pos, *, window=0,
+                       enc_kv=None):
+    """Decode-step layer. x (B,D); caches (B,Hkv,Sc,hd). Returns
+    (x, kcache, vcache)."""
+    B, d = x.shape
+    hd = cfg.resolved_head_dim
+    h = _norm(cfg, x, p["ln_attn"])[:, None]          # (B,1,D)
+    if cfg.mrope_sections:
+        positions = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q, k, v = attn.project_qkv(p["attn"], cfg, h, positions,
+                               rope=not cfg.learned_pos_emb)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]               # (B,H*,hd)
+    if window:
+        o, kcache, vcache = _ring_decode(q, kcache, vcache, k, v, pos, window)
+    else:
+        o, kcache, vcache = attn.decode_attention(q, kcache, vcache, k, v, pos)
+    x = x + jnp.einsum("bh,hd->bd", o.reshape(B, -1), p["attn"]["wo"])
+
+    if enc_kv is not None:
+        hc = _norm(cfg, x, p["ln_cross"])
+        qc = jnp.einsum("bd,dh->bh", hc, p["cross"]["wq"]) \
+            .reshape(B, cfg.num_heads, hd)
+        oc = _plain_decode_attn(qc, enc_kv[0], enc_kv[1])
+        x = x + jnp.einsum("bh,hd->bd", oc.reshape(B, -1), p["cross"]["wo"])
+
+    h = _norm(cfg, x, p["ln_mlp"])
+    if "moe" in p:
+        dlt, _ = moe_mod.apply_moe(p["moe"], cfg, h[:, None])
+        dlt = dlt[:, 0]
+    else:
+        dlt = _mlp_step(p["mlp"], h, cfg.act)
+    return x + dlt, kcache, vcache
+
+
+def _mlp_step(p, x, act):
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("bd,df->bf", x, p["wg"])
+        u = jnp.einsum("bd,df->bf", x, p["wu"])
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        h = g * u
+    else:
+        h = jnp.einsum("bd,df->bf", x, p["wi"])
+        h = jax.nn.gelu(h) if act == "gelu" else jnp.square(jax.nn.relu(h))
+    return jnp.einsum("bf,fd->bd", h, p["wo"])
+
+
+def _plain_decode_attn(q, k, v):
+    """q (B,Hq,hd), fixed k/v (B,Hkv,T,hd) (cross attention, no mask)."""
+    B, Hq, hd = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg, k,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(float(hd))
+    p_ = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhgt,bhtd->bhgd", p_, v).reshape(B, Hq, hd)
+
+
+def _ring_decode(q, kc, vc, knew, vnew, pos, window):
+    """Sliding-window ring-buffer decode attention (griffin local attn)."""
+    B, Hkv, W, hd = kc.shape
+    slot = jnp.mod(pos, W)
+
+    def ins(c, new):
+        return jax.lax.dynamic_update_slice(c, new[:, :, None, :],
+                                            (0, 0, slot, 0))
+    kc, vc = ins(kc, knew), ins(vc, vnew)
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg, kc,
+                   preferred_element_type=jnp.float32) / jnp.sqrt(float(hd))
+    valid = jnp.arange(W) <= pos                      # warmup masking
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p_ = jax.nn.softmax(s, axis=-1).astype(vc.dtype)
+    o = jnp.einsum("bhgs,bhsd->bhgd", p_, vc).reshape(B, Hq, hd)
+    return o, kc, vc
+
+
+def init_encoder_layer(keys, cfg):
+    return {
+        "ln_attn": cm.zeros((cfg.d_model,), (None,)),
+        "attn": attn.init_attention(keys, cfg),
+        "ln_mlp": cm.zeros((cfg.d_model,), (None,)),
+        "mlp": init_mlp(keys, cfg.d_model, cfg.d_ff, cfg.act),
+    }
+
+
+def encoder_layer(p, cfg, x):
+    h = _norm(cfg, x, p["ln_attn"])
+    q, k, v = attn.project_qkv(p["attn"], cfg, h, rope=False)
+    o = attn.full_attention(q, k, v, causal=False, chunk=2048)
+    x = x + attn.out_projection(p["attn"], o)
+    h = _norm(cfg, x, p["ln_mlp"])
+    return x + apply_mlp(p["mlp"], h, cfg.act)

@@ -1,0 +1,17 @@
+"""Simulated fleet: hardware dynamics, fault injection, synchronous step
+composition and the multi-week run simulator. Everything above this layer
+(Guard's detection/triage/sweep logic) is substrate-independent."""
+from repro.simcluster.cluster import SWEEP_PROFILE, SimCluster, \
+    WorkloadProfile
+from repro.simcluster.faults import (FaultInjector, FaultKind, FaultRates,
+                                     GREY_KINDS)
+from repro.simcluster.node import (Fleet, HWConfig, THROTTLE_CURVE_C,
+                                   THROTTLE_CURVE_GHZ, freq_at_temp)
+from repro.simcluster.runtime import RunConfig, RunResult, Tier, simulate_run
+
+__all__ = [
+    "FaultInjector", "FaultKind", "FaultRates", "Fleet", "GREY_KINDS",
+    "HWConfig", "RunConfig", "RunResult", "SWEEP_PROFILE", "SimCluster",
+    "THROTTLE_CURVE_C", "THROTTLE_CURVE_GHZ", "Tier", "WorkloadProfile",
+    "freq_at_temp", "simulate_run",
+]

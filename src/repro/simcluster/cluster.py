@@ -1,0 +1,243 @@
+"""Synchronous-job step-time composition + Guard substrate adapters.
+
+``SimCluster`` owns the fleet, the fault injector and the active node set,
+and composes per-step node barrier times the way a hybrid-parallel job does:
+
+  node_time = compute/compute_factor + comm_exposed/(comm_factor/congestion)
+              + host/host_factor + noise
+  step_time = max over active nodes            (synchronous collectives)
+
+It implements all three Guard substrate protocols — telemetry ``Collector``,
+``SweepBackend`` and ``ClusterControl`` — so the identical detection stack
+runs over the simulator and (with different adapters) over real hardware.
+
+The workload profile can be seeded from the *real* compiled model's roofline
+terms via ``WorkloadProfile.from_roofline`` so the simulation's
+compute/comm/host split matches the architecture being trained.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.sweep import SweepReference
+from repro.core.telemetry import Frame, reduce_device_metrics
+from repro.simcluster.faults import FaultInjector, FaultKind, FaultRates
+from repro.simcluster.node import Fleet, HWConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """Healthy per-step time decomposition of one training step."""
+    name: str = "guard_pretrain"
+    compute_s: float = 8.0          # device-gated compute
+    comm_exposed_s: float = 0.6     # non-overlapped inter-node collectives
+    host_s: float = 1.4             # data loading / checkpoint / coordination
+    bytes_per_link_gb: float = 4.0  # per-step per-link transmit (Fig. 4)
+    step_noise: float = 0.01        # lognormal sigma on node barrier times
+    mfu_at_healthy: float = 0.20    # job MFU when every node is healthy
+
+    @property
+    def healthy_step_s(self) -> float:
+        return self.compute_s + self.comm_exposed_s + self.host_s
+
+    @classmethod
+    def from_roofline(cls, name: str, compute_term_s: float,
+                      memory_term_s: float, collective_term_s: float,
+                      host_s: float = 1.0, overlap: float = 0.7,
+                      mfu: float = 0.2) -> "WorkloadProfile":
+        """Seed the sim split from a compiled step's roofline terms:
+        the device-gated part is max(compute, memory); a fraction
+        ``overlap`` of collective time hides under compute."""
+        return cls(
+            name=name,
+            compute_s=max(compute_term_s, memory_term_s),
+            comm_exposed_s=collective_term_s * (1.0 - overlap),
+            host_s=host_s,
+            mfu_at_healthy=mfu,
+        )
+
+
+# 2-node offline-sweep mini workload (§5.3): collective-heavy by design so
+# link problems dominate the measurement.
+SWEEP_PROFILE = WorkloadProfile(
+    name="node_sweep", compute_s=0.6, comm_exposed_s=0.5, host_s=0.1,
+    step_noise=0.01)
+
+
+class SimCluster:
+    """N-node synchronous training job over a simulated fleet."""
+
+    def __init__(self, n_active: int, n_spare: int = 16,
+                 reserve: Optional[int] = None,
+                 workload: Optional[WorkloadProfile] = None,
+                 hw: Optional[HWConfig] = None,
+                 rates: Optional[FaultRates] = None,
+                 window_steps: int = 6,
+                 seed: int = 0):
+        reserve = reserve if reserve is not None else max(n_active // 2, 32)
+        total = n_active + n_spare + reserve
+        self.fleet = Fleet(total, hw, seed=seed)
+        self.injector = FaultInjector(self.fleet, rates, seed=seed + 1)
+        self.workload = workload or WorkloadProfile()
+        self.window_steps = window_steps
+        self.rng = np.random.RandomState(seed + 2)
+
+        self.active = list(range(n_active))
+        self.spares = list(range(n_active, n_active + n_spare))
+        self._unprovisioned = list(range(n_active + n_spare, total))
+
+        self.t = 0.0
+        self.step = 0
+        self.restarts: List[dict] = []
+        self._win_node_times: List[np.ndarray] = []
+        self._win_alive: List[np.ndarray] = []
+
+    # ------------------------------------------------------------ stepping
+
+    def node_barrier_times(self) -> np.ndarray:
+        """(n_active,) seconds for each node to finish the current step."""
+        w = self.workload
+        idx = np.asarray(self.active)
+        comp = w.compute_s / self.fleet.node_compute_factor()[idx]
+        commf = self.fleet.node_comm_factor()[idx] / \
+            self.injector.congestion_factor[idx]
+        comm = w.comm_exposed_s / np.maximum(commf, 1e-9)
+        host = w.host_s / self.fleet.host_factor[idx]
+        noise = np.exp(self.rng.normal(0.0, w.step_noise, len(idx)))
+        return (comp + comm + host) * noise
+
+    def run_step(self) -> dict:
+        """Advance the job by one training step; returns the step record."""
+        idx = np.asarray(self.active)
+        alive = self.fleet.alive[idx]
+        times = self.node_barrier_times()
+        step_time = float(times.max())
+        crashed = not alive.all()
+
+        dt = step_time if not crashed else 60.0
+        self.injector.tick(self.t, dt, idx)
+        self.fleet.advance_thermals(dt)
+        self.fleet.account_traffic(self.workload.bytes_per_link_gb)
+        self.t += dt
+        if not crashed:
+            self.step += 1
+            self._win_node_times.append(times)
+            self._win_alive.append(alive)
+        return {"t": self.t, "step": self.step, "step_time": step_time,
+                "crashed": crashed, "node_times": times}
+
+    def crashed_nodes(self) -> List[int]:
+        return [n for n in self.active if not self.fleet.alive[n]]
+
+    def advance_idle(self, seconds: float) -> None:
+        """Advance wall time without training (restart/recovery windows)."""
+        idx = np.asarray(self.active) if self.active else np.arange(0)
+        self.injector.tick(self.t, seconds, idx)
+        self.fleet.advance_thermals(seconds)
+        self.t += seconds
+
+    # --------------------------------------------------- telemetry Collector
+
+    def collect(self) -> Optional[Frame]:
+        """Aggregate the last window of steps into a telemetry Frame."""
+        if not self._win_node_times:
+            return None
+        idx = np.asarray(self.active)
+        times = np.stack(self._win_node_times)        # (W, N)
+        valid = np.stack(self._win_alive).all(axis=0) & self.fleet.alive[idx]
+        self._win_node_times.clear()
+        self._win_alive.clear()
+        sensors = self.fleet.read_sensors()
+        metrics = reduce_device_metrics(
+            sensors["temp"][idx], sensors["util"][idx],
+            sensors["freq"][idx], sensors["power"][idx],
+            sensors["nic_err"][idx], sensors["nic_tx"][idx],
+            sensors["nic_up"][idx])
+        metrics["step_time"] = times.mean(axis=0)
+        # error counters are cumulative — report the window delta
+        self._prev_err = getattr(self, "_prev_err",
+                                 np.zeros_like(self.fleet.nic_err_count))
+        delta = self.fleet.nic_err_count - self._prev_err
+        self._prev_err = self.fleet.nic_err_count.copy()
+        metrics["nic_errors"] = delta[idx].sum(axis=1)
+        return Frame(t=self.t, step=self.step,
+                     node_ids=idx.astype(np.int64),
+                     metrics=metrics, valid=valid)
+
+    # ------------------------------------------------------- SweepBackend
+
+    def device_count(self, node_id: int) -> int:
+        return self.fleet.d
+
+    def compute_probe(self, node_id: int, device: int,
+                      seconds: float) -> float:
+        # longer burns average away sensor noise and surface slow thermal
+        # ramps: let the node reach its thermal target first
+        frac = min(seconds / self.fleet.hw.temp_tau_s, 5.0)
+        t_eff = self.fleet.temp_c[node_id, device] + \
+            (1 - math.exp(-frac)) * (self.fleet.temp_target[node_id, device]
+                                     - self.fleet.temp_c[node_id, device])
+        saved = self.fleet.temp_c[node_id, device]
+        self.fleet.temp_c[node_id, device] = t_eff
+        try:
+            return self.fleet.probe_device_tflops(node_id, device)
+        finally:
+            self.fleet.temp_c[node_id, device] = saved
+
+    def intra_bw_probe(self, node_id: int, dev_a: int, dev_b: int) -> float:
+        return self.fleet.probe_intra_bw(node_id, dev_a, dev_b)
+
+    def multi_node_probe(self, node_ids: Sequence[int],
+                         steps: int) -> np.ndarray:
+        """2/4/8-node collective mini-workload (§5.3)."""
+        idx = np.asarray(list(node_ids))
+        w = SWEEP_PROFILE
+        comp = w.compute_s / self.fleet.node_compute_factor()[idx]
+        comm = w.comm_exposed_s / np.maximum(
+            self.fleet.node_comm_factor()[idx], 1e-9)
+        host = w.host_s / self.fleet.host_factor[idx]
+        per_node = comp + comm + host
+        base = per_node.max()
+        noise = np.exp(self.rng.normal(0.0, w.step_noise, steps))
+        return base * noise
+
+    def reference(self) -> SweepReference:
+        return SweepReference(
+            device_tflops=self.fleet.hw.base_tflops,
+            intra_bw_gbps=self.fleet.hw.intra_bw_gbps,
+            pair_step_time=SWEEP_PROFILE.healthy_step_s,
+        )
+
+    # ------------------------------------------------------ ClusterControl
+
+    def swap_node(self, old: int, new: int) -> None:
+        i = self.active.index(old)
+        self.active[i] = new
+        if new in self.spares:
+            self.spares.remove(new)
+
+    def restart_job(self, reason: str) -> None:
+        self.restarts.append({"t": self.t, "step": self.step,
+                              "reason": reason})
+        self._win_node_times.clear()
+        self._win_alive.clear()
+
+    def provision_node(self) -> int:
+        if not self._unprovisioned:
+            raise RuntimeError("simulated provisioning pool exhausted")
+        nid = self._unprovisioned.pop(0)
+        self.injector.seed_admission_grey(nid, self.t)
+        return nid
+
+    def error_signals(self, node_id: int):
+        return self.injector.node_error_signals(node_id)
+
+    def remediate(self, node_id: int, stage: str) -> None:
+        self.injector.remediate(node_id, stage)
+
+    def now(self) -> float:
+        return self.t

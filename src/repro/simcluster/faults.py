@@ -1,0 +1,248 @@
+"""Fault catalogue and injection model.
+
+Each fault kind reproduces a §3 degradation pattern:
+
+  THERMAL       cooling deficiency -> device temp target rises -> Table-2
+                downclocking (compute straggler)
+  POWER         power-delivery deficit: 10-15% low draw, full utilization,
+                reduced sustained FLOPS (§3.3)
+  MEM_ECC       marginal memory: stalls, reduced effective bandwidth
+  NIC_DOWN      adapter dead; traffic reroutes via link 0 (§3.2, Table 1)
+  NIC_DEGRADED  lossy/downtrained link: reduced bandwidth + error counters
+  HOST_CPU      bad CPU allocation/frequency settings (Fig. 2)
+  CONGESTION    transient fabric congestion: short comm spikes, NOT a node
+                fault (the detector must not quarantine for these)
+  FAIL_STOP     hard crash — the fail-fast class traditional checks catch
+
+Grey (fail-slow) faults carry an ESCALATION clock: unmitigated, a degrading
+component eventually hard-fails. This is what gives proactive removal its
+MTTF benefit (§7.2): pulling a grey node early prevents the later crash.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.simcluster.node import Fleet
+
+
+class FaultKind(enum.Enum):
+    THERMAL = "thermal"
+    POWER = "power"
+    MEM_ECC = "mem_ecc"
+    NIC_DOWN = "nic_down"
+    NIC_DEGRADED = "nic_degraded"
+    HOST_CPU = "host_cpu"
+    CONGESTION = "congestion"
+    FAIL_STOP = "fail_stop"
+
+
+GREY_KINDS = (FaultKind.THERMAL, FaultKind.POWER, FaultKind.MEM_ECC,
+              FaultKind.NIC_DOWN, FaultKind.NIC_DEGRADED, FaultKind.HOST_CPU)
+
+# which remediation stages can clear which fault kinds (triage FSM model)
+REMEDIATION_FIX: Dict[str, tuple] = {
+    "gpu_reset": (FaultKind.THERMAL,),            # driver reset re-seats clocks
+    "nic_reset": (FaultKind.NIC_DEGRADED,),
+    "reboot": (FaultKind.THERMAL, FaultKind.NIC_DEGRADED, FaultKind.HOST_CPU,
+               FaultKind.MEM_ECC),
+    "reimage": (FaultKind.THERMAL, FaultKind.NIC_DEGRADED, FaultKind.HOST_CPU,
+                FaultKind.MEM_ECC, FaultKind.NIC_DOWN),
+}
+# probability each stage actually clears an eligible fault
+REMEDIATION_P = {"gpu_reset": 0.5, "nic_reset": 0.5, "reboot": 0.6,
+                 "reimage": 0.8}
+
+
+@dataclasses.dataclass
+class Fault:
+    fid: int
+    kind: FaultKind
+    node: int
+    device: int                      # device/link index (-1: node-level)
+    severity: float                  # kind-specific magnitude in [0, 1]
+    t_start: float
+    t_end: Optional[float]           # None = persistent until remediated
+    escalate_at: Optional[float]     # grey -> fail-stop time (None = never)
+    active: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRates:
+    """Poisson arrival rates, events per node-hour (fitted so an unmanaged
+    multi-week run degrades the way §3/§7 describes: total grey arrival
+    ~3.3e-3/node-h, background hard-failure ~4.7e-4/node-h)."""
+    thermal: float = 1.0e-3
+    power: float = 0.6e-3
+    mem_ecc: float = 0.4e-3
+    nic_down: float = 0.4e-3
+    nic_degraded: float = 0.6e-3
+    host_cpu: float = 0.3e-3
+    congestion: float = 3.0e-2       # transient, short-lived
+    fail_stop: float = 4.7e-4        # background hard-failure rate
+    # mean time for an unmitigated grey fault to escalate to fail-stop
+    escalation_mean_s: float = 90 * 3600.0
+    # fraction of freshly provisioned nodes that are grey on arrival
+    # (they passed burn-in — §5.1)
+    admission_grey_p: float = 0.08
+
+    def rate_of(self, kind: FaultKind) -> float:
+        return {
+            FaultKind.THERMAL: self.thermal,
+            FaultKind.POWER: self.power,
+            FaultKind.MEM_ECC: self.mem_ecc,
+            FaultKind.NIC_DOWN: self.nic_down,
+            FaultKind.NIC_DEGRADED: self.nic_degraded,
+            FaultKind.HOST_CPU: self.host_cpu,
+            FaultKind.CONGESTION: self.congestion,
+            FaultKind.FAIL_STOP: self.fail_stop,
+        }[kind]
+
+
+class FaultInjector:
+    def __init__(self, fleet: Fleet, rates: Optional[FaultRates] = None,
+                 seed: int = 1):
+        self.fleet = fleet
+        self.rates = rates or FaultRates()
+        self.rng = np.random.RandomState(seed)
+        self.faults: List[Fault] = []
+        self._next_id = itertools.count()
+        # transient congestion multiplies a node's comm time
+        self.congestion_factor = np.ones(fleet.n)
+
+    # --------------------------------------------------------- creation
+
+    def inject(self, kind: FaultKind, node: int, now: float = 0.0,
+               severity: Optional[float] = None,
+               device: Optional[int] = None) -> Fault:
+        """Deterministic manual fault injection (benchmarks/tests)."""
+        return self._mk(kind, node, now, severity, device)
+
+    def _mk(self, kind: FaultKind, node: int, now: float,
+            severity: Optional[float] = None,
+            device: Optional[int] = None) -> Fault:
+        r = self.rates
+        dev = int(self.rng.randint(self.fleet.d)) if device is None \
+            else int(device)
+        sev = severity if severity is not None else float(
+            np.clip(self.rng.beta(2, 3), 0.05, 0.95))
+        t_end = None
+        esc = None
+        if kind == FaultKind.CONGESTION:
+            t_end = now + float(self.rng.uniform(30, 180))
+        elif kind in GREY_KINDS:
+            esc = now + float(self.rng.exponential(r.escalation_mean_s))
+        f = Fault(next(self._next_id), kind, node, dev, sev, now, t_end, esc)
+        self.faults.append(f)
+        self._apply(f)
+        return f
+
+    def _apply(self, f: Fault) -> None:
+        fl = self.fleet
+        k, n, d, s = f.kind, f.node, f.device, f.severity
+        if k == FaultKind.THERMAL:
+            # severity -> target temperature 65..90 °C
+            fl.temp_target[n, d] = 65.0 + 25.0 * s
+        elif k == FaultKind.POWER:
+            fl.power_factor[n, d] = 1.0 - (0.08 + 0.12 * s)   # 8-20% deficit
+        elif k == FaultKind.MEM_ECC:
+            fl.mem_factor[n, d] = 1.0 - (0.05 + 0.15 * s)
+        elif k == FaultKind.NIC_DOWN:
+            fl.nic_up[n, d] = False
+            fl.nic_err_count[n, d] += 1000
+        elif k == FaultKind.NIC_DEGRADED:
+            fl.nic_quality[n, d] = 1.0 - (0.2 + 0.5 * s)
+        elif k == FaultKind.HOST_CPU:
+            fl.host_factor[n] = 1.0 - (0.2 + 0.4 * s)
+        elif k == FaultKind.CONGESTION:
+            self.congestion_factor[n] *= (1.0 + 0.5 + 1.5 * s)
+        elif k == FaultKind.FAIL_STOP:
+            fl.alive[n] = False
+
+    def _revert(self, f: Fault) -> None:
+        fl = self.fleet
+        k, n, d = f.kind, f.node, f.device
+        if k == FaultKind.THERMAL:
+            fl.temp_target[n, d] = fl.hw.load_temp_c
+        elif k == FaultKind.POWER:
+            fl.power_factor[n, d] = 1.0
+        elif k == FaultKind.MEM_ECC:
+            fl.mem_factor[n, d] = 1.0
+        elif k == FaultKind.NIC_DOWN:
+            fl.nic_up[n, d] = True
+        elif k == FaultKind.NIC_DEGRADED:
+            fl.nic_quality[n, d] = 1.0
+        elif k == FaultKind.HOST_CPU:
+            fl.host_factor[n] = 1.0
+        elif k == FaultKind.CONGESTION:
+            pass  # factor rebuilt every tick
+        f.active = False
+
+    # ------------------------------------------------------------ tick
+
+    def tick(self, now: float, dt_s: float, active_nodes: np.ndarray) -> None:
+        """Sample arrivals over [now, now+dt) and expire/escalate faults
+        (expiry/escalation evaluated at the interval END)."""
+        hours = dt_s / 3600.0
+        t_end = now + dt_s
+        for kind in FaultKind:
+            lam = self.rates.rate_of(kind) * hours * len(active_nodes)
+            for _ in range(self.rng.poisson(lam)):
+                node = int(self.rng.choice(active_nodes))
+                self._mk(kind, node, now)
+
+        self.congestion_factor[:] = 1.0
+        for f in self.faults:
+            if not f.active:
+                continue
+            if f.t_end is not None and t_end >= f.t_end:
+                self._revert(f)
+            elif f.kind == FaultKind.CONGESTION:
+                self._apply(f)           # rebuild transient factor
+            elif f.escalate_at is not None and t_end >= f.escalate_at:
+                self._revert(f)
+                self._mk(FaultKind.FAIL_STOP, f.node, t_end, severity=1.0)
+
+    # ----------------------------------------------------- queries/ops
+
+    def active_faults(self, node: Optional[int] = None) -> List[Fault]:
+        return [f for f in self.faults if f.active and
+                (node is None or f.node == node)]
+
+    def node_error_signals(self, node: int):
+        """Actionable evidence for triage routing."""
+        from repro.core.triage import ErrorSignals
+        gpu = nic = False
+        for f in self.active_faults(node):
+            if f.kind in (FaultKind.THERMAL, FaultKind.MEM_ECC):
+                gpu = True
+            if f.kind in (FaultKind.NIC_DOWN, FaultKind.NIC_DEGRADED):
+                nic = True
+        return ErrorSignals(gpu_errors=gpu, nic_errors=nic)
+
+    def remediate(self, node: int, stage: str) -> None:
+        """Apply a triage stage: eligible faults clear with stage-specific
+        probability (models the paper's escalating-invasiveness ladder)."""
+        eligible = REMEDIATION_FIX.get(stage, ())
+        p = REMEDIATION_P.get(stage, 0.5)
+        for f in self.active_faults(node):
+            if f.kind in eligible and self.rng.rand() < p:
+                self._revert(f)
+
+    def clear_node(self, node: int) -> None:
+        """Node replaced: all its faults go with the hardware."""
+        for f in self.active_faults(node):
+            self._revert(f)
+
+    def seed_admission_grey(self, node: int, now: float) -> Optional[Fault]:
+        """Fresh hardware that passed burn-in may still be grey (§5.1)."""
+        if self.rng.rand() < self.rates.admission_grey_p:
+            kind = self.rng.choice(
+                [FaultKind.THERMAL, FaultKind.POWER, FaultKind.MEM_ECC,
+                 FaultKind.NIC_DEGRADED])
+            return self._mk(kind, node, now)
+        return None

@@ -1,0 +1,166 @@
+"""Vectorized fleet hardware model.
+
+State is struct-of-arrays over (num_nodes, devices_per_node): device
+temperature, power factor, memory factor, per-link NIC state, plus per-node
+host-CPU factor. The dynamics are fitted to the paper's published numbers:
+
+  - Table 2 thermal-throttle curve: temp -> core clock (piecewise linear),
+  - §3.3 power-deficit observation: 10-15% low power -> reduced sustained
+    throughput at normal utilization/frequency,
+  - §3.2 / Fig. 3-4 NIC-down reroute: a dead link's traffic rides the
+    fallback link (link 0), doubling its traffic and doubling the node's
+    exposed communication time,
+  - Fig. 2 host-CPU setting effect: up to 15% step-time impact.
+
+Hardware constants are the TPU-v5e adaptation targets used throughout the
+repo (197 bf16 TFLOP/s per chip, ~50 GB/s per ICI link); "node" = 8 chips,
+matching the paper's 8-accelerator node granularity for health accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+# Table 2 (paper): temperature -> core frequency. Extended flat below and
+# linearly degrading above the published range.
+THROTTLE_CURVE_C = np.array([0.0, 50.0, 60.0, 69.0, 77.0, 95.0])
+THROTTLE_CURVE_GHZ = np.array([1.93, 1.93, 1.93, 1.78, 1.38, 0.90])
+
+
+def freq_at_temp(temp_c: np.ndarray) -> np.ndarray:
+    """Piecewise-linear Table-2 throttle curve."""
+    return np.interp(temp_c, THROTTLE_CURVE_C, THROTTLE_CURVE_GHZ)
+
+
+@dataclasses.dataclass(frozen=True)
+class HWConfig:
+    devices_per_node: int = 8
+    base_tflops: float = 197.0        # bf16 peak per chip (v5e target)
+    base_freq_ghz: float = 1.93
+    idle_temp_c: float = 50.0
+    load_temp_c: float = 58.0         # healthy steady-state under load
+    base_power_w: float = 350.0
+    link_gbps: float = 50.0           # per inter-node link (ICI-class)
+    intra_bw_gbps: float = 400.0      # intra-node pairwise interconnect
+    temp_tau_s: float = 180.0         # first-order thermal lag
+    sensor_temp_sigma: float = 0.8    # °C
+    sensor_rate_sigma: float = 0.01   # relative, throughput probes
+
+
+class Fleet:
+    """Vectorized hardware state for N nodes x D devices."""
+
+    def __init__(self, num_nodes: int, hw: Optional[HWConfig] = None,
+                 seed: int = 0):
+        self.hw = hw or HWConfig()
+        self.n = num_nodes
+        self.d = self.hw.devices_per_node
+        self.rng = np.random.RandomState(seed)
+        n, d = self.n, self.d
+        # --- mutable hardware state
+        self.temp_c = np.full((n, d), self.hw.load_temp_c)
+        self.temp_target = np.full((n, d), self.hw.load_temp_c)
+        self.power_factor = np.ones((n, d))     # <1: power-delivery deficit
+        self.mem_factor = np.ones((n, d))       # <1: ECC/bandwidth stalls
+        self.nic_up = np.ones((n, d), bool)     # one link per device
+        self.nic_quality = np.ones((n, d))      # <1: degraded link
+        self.host_factor = np.ones((n,))        # <1: bad CPU settings
+        self.alive = np.ones((n,), bool)
+        # cumulative per-link transmit counters (Fig. 4 accounting)
+        self.nic_tx_bytes = np.zeros((n, d))
+        self.nic_err_count = np.zeros((n, d))
+
+    # ------------------------------------------------------------ dynamics
+
+    def advance_thermals(self, dt_s: float) -> None:
+        """First-order lag of device temperature toward its target."""
+        alpha = 1.0 - np.exp(-dt_s / self.hw.temp_tau_s)
+        self.temp_c += alpha * (self.temp_target - self.temp_c)
+
+    # ------------------------------------------------------- performance
+
+    def device_freq(self) -> np.ndarray:
+        return freq_at_temp(self.temp_c)
+
+    def device_compute_factor(self) -> np.ndarray:
+        """(N, D) sustained-throughput fraction of healthy peak."""
+        f = self.device_freq() / self.hw.base_freq_ghz
+        return f * self.power_factor * self.mem_factor
+
+    def node_compute_factor(self) -> np.ndarray:
+        """(N,) — intra-node collectives gate on the slowest device."""
+        return self.device_compute_factor().min(axis=1)
+
+    def node_comm_factor(self) -> np.ndarray:
+        """(N,) effective inter-node communication speed fraction.
+
+        Per-device links carry equal traffic shares in parallel; a DOWN
+        link's traffic is rerouted through link 0 (§3.2), so link 0 carries
+        (1 + n_down) shares. Node comm time scales with the busiest link's
+        share divided by its quality."""
+        shares = self._link_shares()
+        flow_time = shares / np.maximum(self.nic_quality, 1e-9)
+        worst = flow_time.max(axis=1)                   # healthy == 1.0
+        # all links down -> node effectively stalled on comm
+        worst = np.where(self.nic_up.any(axis=1), worst, 1e3)
+        return 1.0 / np.maximum(worst, 1e-9)
+
+    def _link_shares(self) -> np.ndarray:
+        """(N, D) traffic shares per link: every down link's share rides the
+        first UP link (the §3.2 fallback path)."""
+        up = self.nic_up
+        n_down = (~up).sum(axis=1)
+        shares = np.where(up, 1.0, 0.0)
+        has_up = up.any(axis=1)
+        fallback = np.argmax(up, axis=1)                # first up link
+        rows = np.arange(self.n)[has_up]
+        shares[rows, fallback[has_up]] += n_down[has_up]
+        return shares
+
+    def account_traffic(self, bytes_per_link: float) -> None:
+        """Add one step's transmit volume to the per-link counters."""
+        self.nic_tx_bytes += self._link_shares() * bytes_per_link
+
+    # --------------------------------------------------------- telemetry
+
+    def read_sensors(self) -> dict:
+        """Noisy per-device sensor readout (what DCGM-equivalent reports)."""
+        hw = self.hw
+        temp = self.temp_c + self.rng.normal(
+            0, hw.sensor_temp_sigma, self.temp_c.shape)
+        freq = freq_at_temp(temp)
+        # utilization stays high even for power-limited nodes (§3.3) —
+        # that's exactly why util alone is insufficient
+        util = np.clip(self.rng.normal(0.97, 0.01, self.temp_c.shape), 0, 1)
+        util = util * np.where(self.mem_factor < 0.99, 0.97, 1.0)
+        power = hw.base_power_w * self.power_factor * \
+            np.clip(freq / hw.base_freq_ghz, 0.5, 1.0) * \
+            self.rng.normal(1.0, 0.01, self.temp_c.shape)
+        tx_rate = hw.link_gbps * self.nic_quality * self.nic_up * \
+            self.rng.normal(1.0, 0.01, self.temp_c.shape)
+        return {
+            "temp": temp,
+            "freq": freq,
+            "util": util,
+            "power": power,
+            "nic_err": self.nic_err_count.copy(),
+            "nic_tx": tx_rate,
+            "nic_up": self.nic_up.astype(float),
+        }
+
+    # ------------------------------------------------------- probes
+
+    def probe_device_tflops(self, node: int, device: int) -> float:
+        """Sustained matmul burn measurement (sweep compute probe)."""
+        f = self.device_compute_factor()[node, device]
+        noise = self.rng.normal(1.0, self.hw.sensor_rate_sigma)
+        return float(self.hw.base_tflops * f * noise)
+
+    def probe_intra_bw(self, node: int, a: int, b: int) -> float:
+        """Pairwise intra-node bandwidth; a marginal memory/link device
+        drags the pair."""
+        q = min(self.mem_factor[node, a], self.mem_factor[node, b])
+        noise = self.rng.normal(1.0, self.hw.sensor_rate_sigma)
+        return float(self.hw.intra_bw_gbps * q * noise)

@@ -1,0 +1,316 @@
+"""Multi-week training-run simulator — the §7 evaluation substrate.
+
+``simulate_run`` drives a synchronous job over the simulated fleet under one
+of the four ablation tiers of Table 4:
+
+  BURNIN            NCCL/burn-in only: fail-stop crashes are handled
+                    (replace + restart); grey nodes persist until a human
+                    notices the slowdown and hand-debugs, or the fault
+                    escalates into a crash.
+  NODE_SWEEP        + offline single-node sweep: spares/repairs are swept
+                    before (re-)entering service, and human investigations
+                    can use sweep tooling (faster, more accurate).
+  ONLINE            + Guard online monitoring: peer-relative detection with
+                    the tiered policy drives automated quarantine/swap.
+  ENHANCED          + enhanced sweep: multi-node (2-node) collective stage
+                    and long sustained burns in qualification/admission —
+                    comm-level greys stop bouncing back into the job.
+
+Outputs: MTTF (mean active time between job-interrupting hardware
+failures), MFU (model-FLOPs utilization: completed-step FLOPs over elapsed
+wall time), mean human hours per incident, plus full step-time and event
+traces for the figure-level benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.detector import DetectorConfig
+from repro.core.health_manager import HealthManager, NodeState
+from repro.core.monitor import OnlineMonitor
+from repro.core.policy import PolicyConfig
+from repro.core.sweep import SweepConfig, single_node_sweep
+from repro.simcluster.cluster import SimCluster, WorkloadProfile
+from repro.simcluster.faults import FaultRates
+
+
+class Tier(enum.IntEnum):
+    BURNIN = 1
+    NODE_SWEEP = 2
+    ONLINE = 3
+    ENHANCED = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    tier: Tier = Tier.ENHANCED
+    n_nodes: int = 128
+    n_spare: int = 12
+    duration_h: float = 72.0
+    window_steps: int = 6                # evaluation window (≈60 s of steps)
+    checkpoint_interval_steps: int = 90  # 15 min at the healthy step
+    crash_detect_s: float = 120.0
+    restart_overhead_s: float = 600.0
+    provision_delay_s: float = 1800.0
+    # crash recovery: with no tooling a hard failure needs hours of manual
+    # diagnosis before the job is back; Guard tiers automate it away
+    crash_recovery_s: Dict[int, float] = dataclasses.field(
+        default_factory=lambda: {1: 7_200.0, 2: 2_700.0, 3: 600.0,
+                                 4: 600.0})
+    crash_human_h: Dict[int, float] = dataclasses.field(
+        default_factory=lambda: {1: 3.0, 2: 1.5, 3: 0.25, 4: 0.25})
+    # manual grey hunting pauses/perturbs the job in the untooled tiers
+    hunt_downtime_s: Dict[int, float] = dataclasses.field(
+        default_factory=lambda: {1: 5_400.0, 2: 2_700.0})
+    # grey population a long-unmanaged cluster has accumulated at t=0
+    initial_grey_p: float = 0.10
+    # manual grey-hunting model (tiers 1-2 have no online detection)
+    manual_trigger_ratio: float = 1.12   # hour-mean step/healthy to notice
+    manual_delay_h: Dict[int, float] = dataclasses.field(
+        default_factory=lambda: {1: 6.0, 2: 3.0})
+    manual_hours: Dict[int, float] = dataclasses.field(
+        default_factory=lambda: {1: 5.0, 2: 1.8})
+    manual_success_p: Dict[int, float] = dataclasses.field(
+        default_factory=lambda: {1: 0.75, 2: 0.92})
+    # automated-tier residual human attention per incident (approve swap,
+    # ticket hygiene): online needs more eyes than enhanced
+    auto_human_h: Dict[int, float] = dataclasses.field(
+        default_factory=lambda: {3: 0.9, 4: 0.35})
+    workload: WorkloadProfile = dataclasses.field(
+        default_factory=WorkloadProfile)
+    rates: FaultRates = dataclasses.field(default_factory=FaultRates)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RunResult:
+    tier: Tier
+    elapsed_h: float
+    active_h: float
+    steps: int
+    crashes: int
+    mttf_h: float
+    mfu: float
+    mean_step_s: float
+    p95_step_s: float
+    human_hours: float
+    incidents: int
+    human_h_per_incident: float
+    guard_restarts: int
+    deferred_swaps: int
+    nodes_terminated: int
+    step_times: np.ndarray
+    events: List[dict]
+
+
+def _admission_check(cluster: SimCluster, nid: int, tier: Tier,
+                     sweep_cfg: SweepConfig) -> bool:
+    """Qualify a freshly provisioned node before it becomes a spare."""
+    if tier == Tier.BURNIN:
+        return True                      # burn-in passes grey nodes (§5.1)
+    enhanced = tier == Tier.ENHANCED
+    rep = single_node_sweep(cluster, nid, sweep_cfg, enhanced=enhanced)
+    if rep.passed and enhanced:
+        from repro.core.sweep import multi_node_sweep
+        buddies = cluster.spares[:1]
+        if buddies:
+            rep = multi_node_sweep(cluster, nid, buddies, sweep_cfg)
+    if not rep.passed:
+        cluster.injector.clear_node(nid)  # sim shorthand for RMA/replace
+    return True
+
+
+def simulate_run(cfg: RunConfig) -> RunResult:
+    rng = np.random.RandomState(cfg.seed + 7)
+    cluster = SimCluster(cfg.n_nodes, cfg.n_spare,
+                         workload=cfg.workload, rates=cfg.rates,
+                         window_steps=cfg.window_steps, seed=cfg.seed)
+    sweep_cfg = SweepConfig()
+    use_online = cfg.tier >= Tier.ONLINE
+    enhanced = cfg.tier == Tier.ENHANCED
+
+    monitor = OnlineMonitor(DetectorConfig(), PolicyConfig())
+    manager = HealthManager(cluster, cluster, monitor,
+                            sweep_cfg=sweep_cfg,
+                            enhanced_sweep=enhanced)
+    for nid in cluster.active:
+        manager.register(nid, NodeState.ACTIVE)
+    for nid in cluster.spares:
+        manager.register(nid, NodeState.HEALTHY_SPARE)
+    # pre-existing grey population (the state of the world Guard inherits)
+    for nid in cluster.active:
+        if rng.rand() < cfg.initial_grey_p:
+            from repro.simcluster.faults import GREY_KINDS
+            kind = GREY_KINDS[rng.randint(len(GREY_KINDS))]
+            cluster.injector.inject(kind, nid, now=0.0)
+    cluster.fleet.advance_thermals(3600.0)
+
+    duration_s = cfg.duration_h * 3600.0
+    healthy_step = cfg.workload.healthy_step_s
+    last_ckpt_step = 0
+    step_times: List[float] = []
+    events: List[dict] = []
+    crashes = 0
+    human_hours = 0.0
+    incidents = 0
+    downtime_s = 0.0
+    slow_since: Optional[float] = None
+    hour_buf: List[float] = []
+
+    def provision_one(charge_job: bool) -> None:
+        nonlocal downtime_s
+        nid = cluster.provision_node()
+        if charge_job:
+            # pool ran dry mid-incident: the job waits for delivery
+            cluster.advance_idle(cfg.provision_delay_s)
+            downtime_s += cfg.provision_delay_s
+        _admission_check(cluster, nid, cfg.tier, sweep_cfg)
+        cluster.spares.append(nid)
+        manager.register(nid, NodeState.HEALTHY_SPARE)
+        if nid not in manager.spares:
+            manager.spares.append(nid)
+
+    def top_up_spares() -> None:
+        # background warm-pool maintenance: provisioning overlaps the job
+        while len(cluster.spares) < cfg.n_spare:
+            provision_one(charge_job=False)
+
+    def take_spare() -> int:
+        while not cluster.spares:
+            provision_one(charge_job=True)
+        nid = cluster.spares[0]
+        return nid
+
+    def restart(lost_reason: str, rewind: bool) -> None:
+        nonlocal last_ckpt_step, downtime_s
+        cluster.advance_idle(cfg.restart_overhead_s)
+        downtime_s += cfg.restart_overhead_s
+        if rewind:
+            lost = cluster.step - last_ckpt_step
+            cluster.step = last_ckpt_step
+        cluster.restart_job(lost_reason)
+
+    while cluster.t < duration_s:
+        rec = cluster.run_step()
+
+        # ---------------- crash path (fail-stop)
+        if rec["crashed"]:
+            crashes += 1
+            incidents += 1
+            recovery = cfg.crash_recovery_s[int(cfg.tier)]
+            cluster.advance_idle(cfg.crash_detect_s + recovery)
+            downtime_s += cfg.crash_detect_s + recovery
+            human_hours += cfg.crash_human_h[int(cfg.tier)]
+            # batch handling: every node found dead during this recovery
+            # window is swapped in the same restart
+            while cluster.crashed_nodes():
+                for bad in cluster.crashed_nodes():
+                    spare = take_spare()
+                    manager.state[spare] = NodeState.ACTIVE
+                    if spare in manager.spares:
+                        manager.spares.remove(spare)
+                    cluster.swap_node(bad, spare)
+                    cluster.injector.clear_node(bad)  # hw leaves with node
+                    manager.state[bad] = NodeState.TERMINATED
+                    monitor.node_replaced(bad)
+            restart("fail-stop crash", rewind=True)
+            events.append({"t": cluster.t, "kind": "crash"})
+            continue
+
+        step_times.append(rec["step_time"])
+        hour_buf.append(rec["step_time"])
+
+        # ---------------- online monitoring (tiers 3-4)
+        if use_online and cluster.step % cfg.window_steps == 0:
+            frame = cluster.collect()
+            if frame is not None:
+                for ev in monitor.observe(frame):
+                    events.append({"t": cluster.t, "kind": "health_event",
+                                   "action": ev.decision.action.value,
+                                   "node": ev.decision.node_id,
+                                   "reason": ev.decision.reason})
+                    pre = manager.stats.immediate_restarts
+                    manager.handle(ev)
+                    if manager.stats.immediate_restarts > pre:
+                        incidents += 1
+                        human_hours += cfg.auto_human_h[int(cfg.tier)]
+                        restart(ev.decision.reason, rewind=True)
+
+        # ---------------- checkpoint boundary
+        if cluster.step > 0 and \
+                cluster.step % cfg.checkpoint_interval_steps == 0:
+            last_ckpt_step = cluster.step
+            if use_online:
+                n = manager.on_checkpoint()
+                if n:
+                    incidents += n
+                    human_hours += n * cfg.auto_human_h[int(cfg.tier)]
+                    restart("deferred swaps", rewind=False)
+            # offline qualification runs in parallel with the job
+            manager.qualify_all_quarantined()
+            human_hours += _drain_manager_human(manager)
+            top_up_spares()
+
+        # ---------------- manual grey hunting (tiers 1-2)
+        if not use_online and len(hour_buf) * healthy_step >= 3600.0:
+            hour_mean = float(np.mean(hour_buf))
+            hour_buf.clear()
+            if hour_mean > cfg.manual_trigger_ratio * healthy_step:
+                if slow_since is None:
+                    slow_since = cluster.t
+                delay = cfg.manual_delay_h[int(cfg.tier)] * 3600.0
+                if cluster.t - slow_since >= delay:
+                    slow_since = None
+                    incidents += 1
+                    human_hours += cfg.manual_hours[int(cfg.tier)]
+                    hunt_dt = cfg.hunt_downtime_s[int(cfg.tier)]
+                    cluster.advance_idle(hunt_dt)
+                    downtime_s += hunt_dt
+                    times = cluster.node_barrier_times()
+                    worst = cluster.active[int(np.argmax(times))]
+                    if rng.rand() < cfg.manual_success_p[int(cfg.tier)]:
+                        spare = take_spare()
+                        cluster.spares.remove(spare)
+                        cluster.swap_node(worst, spare)
+                        if cfg.tier >= Tier.NODE_SWEEP:
+                            rep = single_node_sweep(cluster, worst, sweep_cfg)
+                            if not rep.passed:
+                                cluster.injector.clear_node(worst)
+                        else:
+                            cluster.injector.clear_node(worst)
+                        restart("manual grey-node replacement", rewind=False)
+                        events.append({"t": cluster.t, "kind": "manual_swap",
+                                       "node": worst})
+            else:
+                slow_since = None
+
+    # ----------------------------------------------------------- metrics
+    st = np.asarray(step_times)
+    elapsed_h = cluster.t / 3600.0
+    active_h = max(elapsed_h - downtime_s / 3600.0, 1e-9)
+    steps = len(st)
+    mttf_h = active_h / max(crashes, 1)
+    # MFU: completed useful FLOPs over total elapsed time
+    mfu = cfg.workload.mfu_at_healthy * (steps * healthy_step) / cluster.t
+    return RunResult(
+        tier=cfg.tier, elapsed_h=elapsed_h, active_h=active_h, steps=steps,
+        crashes=crashes, mttf_h=mttf_h, mfu=float(mfu),
+        mean_step_s=float(st.mean()) if steps else float("nan"),
+        p95_step_s=float(np.percentile(st, 95)) if steps else float("nan"),
+        human_hours=human_hours, incidents=max(incidents, 1),
+        human_h_per_incident=human_hours / max(incidents, 1),
+        guard_restarts=manager.stats.immediate_restarts,
+        deferred_swaps=manager.stats.deferred_swaps,
+        nodes_terminated=manager.stats.nodes_terminated,
+        step_times=st, events=events)
+
+
+def _drain_manager_human(manager: HealthManager) -> float:
+    """Convert newly accumulated manager human-seconds into hours once."""
+    h = manager.stats.human_seconds / 3600.0
+    manager.stats.human_seconds = 0.0
+    return h

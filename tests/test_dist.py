@@ -1,0 +1,121 @@
+"""Distribution-layer tests: logical-axis resolution, divisibility
+fallback, sharded-vs-single-device numerical equivalence on a CPU mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, reduced
+from repro.dist import api as dist
+from repro.launch.mesh import make_cpu_mesh
+from repro.models.model import Model
+from repro.train import AdamWConfig, init_opt_state, make_train_step
+from repro.train.data import DataConfig, SyntheticLM
+
+
+class TestSpecResolution:
+    def setup_method(self):
+        self.mesh = make_cpu_mesh()
+        self.ctx = dist.DistContext(self.mesh)
+
+    def test_basic_mapping(self):
+        spec = self.ctx.spec(("fsdp", "tp"))
+        assert spec == P("data", "model")
+
+    def test_divisibility_fallback(self):
+        # 12 heads on a model=1 CPU mesh always divides; fake a bigger mesh
+        spec = self.ctx.spec(("heads", None), shape=(12, 64))
+        assert spec == P("model", None)   # 12 % 1 == 0
+
+    def test_none_replicates(self):
+        assert self.ctx.spec((None, None)) == P(None, None)
+
+    def test_duplicate_axis_suppressed(self):
+        # two dims mapping to the same mesh axis: second one replicates
+        spec = self.ctx.spec(("tp", "ff"))
+        assert spec == P("model", None)
+
+    def test_constraint_noop_without_context(self):
+        dist.set_context(None)
+        x = jnp.ones((4, 4))
+        y = dist.constraint(x, "act_batch", None)
+        assert y is x
+
+
+class TestDivisibilityFallbackBigMesh:
+    def test_whisper_heads_replicate_on_16(self):
+        """12 heads don't divide a 16-way model axis -> replicated."""
+        import os
+        # simulate the rule logic without devices: use a fake mesh shape
+        ctx = dist.DistContext(make_cpu_mesh())
+        # direct unit check of the divisibility branch
+        spec = ctx.spec(("heads",), shape=(12,))
+        assert spec == P("model")  # divides on 1-wide CPU mesh
+        # the real 16-wide check is exercised by the dry-run (whisper cells)
+
+
+class TestShardedEquivalence:
+    @pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-moe-16b",
+                                      "rwkv6-7b", "recurrentgemma-9b"])
+    def test_train_step_matches_unsharded(self, arch):
+        cfg = reduced(get_config(arch))
+        model = Model(cfg)
+        data = SyntheticLM(DataConfig(cfg.vocab_size, 16, 2))
+        params, axes = model.init_params(jax.random.key(0))
+        opt = init_opt_state(params)
+        batch = data.batch_at(0)
+        step = make_train_step(model, AdamWConfig())
+
+        _, _, m_plain = jax.jit(step)(params, opt, batch)
+
+        mesh = make_cpu_mesh()
+        with mesh, dist.use_mesh(mesh):
+            step_fn = make_train_step(model, AdamWConfig())
+            _, _, m_mesh = jax.jit(step_fn)(params, opt, batch)
+
+        assert float(m_plain["loss"]) == pytest.approx(
+            float(m_mesh["loss"]), rel=1e-4), arch
+
+    def test_decode_matches_unsharded(self):
+        cfg = reduced(get_config("glm4-9b"))
+        model = Model(cfg)
+        params, _ = model.init_params(jax.random.key(2))
+        cache = model.init_cache(2, 32)
+        tok = jnp.asarray([3, 5], jnp.int32)
+        logits_plain, _ = jax.jit(model.decode_step)(params, tok, cache)
+        mesh = make_cpu_mesh()
+        with mesh, dist.use_mesh(mesh):
+            logits_mesh, _ = jax.jit(model.decode_step)(params, tok, cache)
+        np.testing.assert_allclose(np.asarray(logits_plain, np.float32),
+                                   np.asarray(logits_mesh, np.float32),
+                                   atol=1e-2, rtol=1e-3)
+
+
+class TestHLOAnalysis:
+    def test_scan_trip_count_multiplies_flops(self):
+        from repro.launch.hlo_analysis import analyze
+
+        def f(a):
+            def body(c, _):
+                return c @ c, None
+            c, _ = jax.lax.scan(body, a, None, length=7)
+            return jnp.sum(c)
+
+        compiled = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+        mc = analyze(compiled.as_text())
+        per_mm = 2 * 64 ** 3
+        assert mc.flops == pytest.approx(7 * per_mm, rel=0.05)
+
+    def test_collectives_counted(self):
+        from repro.launch.hlo_analysis import analyze
+        mesh = make_cpu_mesh()
+
+        def f(x):
+            return jnp.sum(x)
+
+        compiled = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((64,), jnp.float32)).compile()
+        mc = analyze(compiled.as_text())
+        assert mc.collective_bytes >= 0.0   # no mesh: none expected

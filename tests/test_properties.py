@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.detector import DetectorConfig, StragglerDetector, robust_z
+from repro.core.telemetry import Frame
+from repro.simcluster import FaultKind, FaultRates, SimCluster, freq_at_temp
+from repro.train.data import DataConfig, SyntheticLM
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+
+
+def frame(step, times):
+    n = len(times)
+    return Frame(t=float(step), step=step,
+                 node_ids=np.arange(n, dtype=np.int64),
+                 metrics={"step_time": np.asarray(times, float)},
+                 valid=np.ones(n, bool))
+
+
+# ------------------------------------------------------------- detector
+
+
+@given(st.integers(8, 64), st.floats(1.0, 100.0), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_robust_z_shift_invariant(n, base, seed):
+    rng = np.random.RandomState(seed)
+    v = rng.normal(0, 1, n)
+    z1 = robust_z(v)
+    z2 = robust_z(v + base)
+    np.testing.assert_allclose(z1, z2, atol=1e-6)
+
+
+@given(st.integers(8, 40), st.floats(0.3, 3.0), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_uniform_fleet_never_flagged(n, scale, seed):
+    """Identical nodes (pure iid noise) must not produce step flags."""
+    rng = np.random.RandomState(seed)
+    det = StragglerDetector(DetectorConfig(window=6, persistence=3))
+    flagged = False
+    for w in range(10):
+        times = 10.0 * scale * (1 + rng.normal(0, 0.005, n))
+        res = det.update(frame(w, times))
+        flagged |= any(a.step_deviant for a in res)
+    assert not flagged
+
+
+@given(st.integers(8, 40), st.floats(0.15, 0.8), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_big_sustained_straggler_always_flagged(n, excess, seed):
+    rng = np.random.RandomState(seed)
+    det = StragglerDetector()
+    bad = seed % n
+    for w in range(8):
+        times = 10.0 * (1 + rng.normal(0, 0.005, n))
+        times[bad] *= 1 + excess
+        res = det.update(frame(w, times))
+    assert res[bad].flagged
+    # estimated slowdown within 30% of injected
+    assert abs(res[bad].slowdown - excess) / excess < 0.3
+
+
+# ------------------------------------------------------------- simcluster
+
+
+@given(st.floats(0.0, 120.0))
+@settings(max_examples=50, deadline=None)
+def test_throttle_curve_bounded(temp):
+    f = float(freq_at_temp(np.array([temp]))[0])
+    assert 0.9 <= f <= 1.93
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_comm_factor_bounds(seed):
+    """Comm factor is in (0, 1]: reroute can only slow a node down."""
+    rng = np.random.RandomState(seed)
+    c = SimCluster(n_active=8, n_spare=0, rates=QUIET, seed=seed)
+    for _ in range(rng.randint(1, 6)):
+        kind = [FaultKind.NIC_DOWN, FaultKind.NIC_DEGRADED][rng.randint(2)]
+        c.injector.inject(kind, int(rng.randint(8)),
+                          severity=float(rng.rand()),
+                          device=int(rng.randint(8)))
+    f = c.fleet.node_comm_factor()
+    assert np.all(f <= 1.0 + 1e-9) and np.all(f > 0)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_traffic_conservation_under_reroute(seed):
+    """Total transmitted bytes are preserved by rerouting (traffic moves,
+    it doesn't disappear) while any link is up."""
+    rng = np.random.RandomState(seed)
+    c = SimCluster(n_active=4, n_spare=0, rates=QUIET, seed=seed)
+    n_down = rng.randint(0, 7)
+    for d in rng.choice(8, n_down, replace=False):
+        c.injector.inject(FaultKind.NIC_DOWN, 1, device=int(d))
+    c.fleet.account_traffic(1.0)
+    total = c.fleet.nic_tx_bytes.sum(axis=1)
+    np.testing.assert_allclose(total, 8.0)
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_step_time_lower_bounded_by_healthy(seed):
+    """Faults can only ever slow the job down."""
+    rng = np.random.RandomState(seed)
+    c = SimCluster(n_active=8, n_spare=0, rates=QUIET, seed=seed)
+    healthy = c.workload.healthy_step_s
+    for _ in range(rng.randint(0, 4)):
+        kind = list(FaultKind)[rng.randint(6)]
+        c.injector.inject(kind, int(rng.randint(8)),
+                          severity=float(rng.rand()))
+    c.fleet.advance_thermals(3600)
+    t = c.node_barrier_times()
+    assert t.max() >= healthy * 0.95
+
+
+# ------------------------------------------------------------- data
+
+
+@given(st.integers(0, 50), st.integers(1, 4))
+@settings(max_examples=15, deadline=None)
+def test_data_determinism_and_sharding(step, shards):
+    cfg = DataConfig(vocab_size=1024, seq_len=32, global_batch=8)
+    data = SyntheticLM(cfg)
+    full = data.batch_at(step)
+    again = data.batch_at(step)
+    np.testing.assert_array_equal(full["tokens"], again["tokens"])
+    if 8 % shards == 0:
+        parts = [data.batch_at(step, s, shards)["tokens"]
+                 for s in range(shards)]
+        np.testing.assert_array_equal(np.concatenate(parts), full["tokens"])
+    assert full["tokens"].min() >= 0
+    assert full["tokens"].max() < cfg.vocab_size
+    np.testing.assert_array_equal(full["labels"][:, :-1],
+                                  full["tokens"][:, 1:])

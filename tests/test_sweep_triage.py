@@ -1,0 +1,138 @@
+"""Unit tests for the offline sweeps (§5) and the triage FSM (§6)."""
+import numpy as np
+import pytest
+
+from repro.core import (ErrorSignals, SweepConfig, TriageConfig,
+                        TriageOutcome, TriageWorkflow, multi_node_sweep,
+                        qualification_sweep, single_node_sweep)
+from repro.simcluster import FaultKind, FaultRates, SimCluster, \
+    WorkloadProfile
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+
+
+def cluster(seed=0, n=8):
+    return SimCluster(n_active=n, n_spare=0, rates=QUIET, seed=seed)
+
+
+class TestSingleNodeSweep:
+    def test_healthy_node_passes(self):
+        c = cluster()
+        rep = single_node_sweep(c, 0, SweepConfig())
+        assert rep.passed, rep.failures
+
+    def test_power_fault_fails_compute(self):
+        c = cluster()
+        c.injector.inject(FaultKind.POWER, 1, severity=0.8, device=4)
+        rep = single_node_sweep(c, 1, SweepConfig())
+        assert not rep.passed
+        assert any("dev4" in f for f in rep.failures)
+
+    def test_slow_thermal_needs_sustained_burn(self):
+        c = cluster()
+        c.injector.inject(FaultKind.THERMAL, 2, severity=0.9, device=0)
+        # temp hasn't ramped yet: short burn passes, enhanced catches it
+        short = single_node_sweep(c, 2, SweepConfig(burn_seconds=5.0))
+        long = single_node_sweep(c, 2, SweepConfig(), enhanced=True)
+        assert short.passed
+        assert not long.passed
+
+    def test_mem_fault_breaks_bw_symmetry(self):
+        c = cluster()
+        c.injector.inject(FaultKind.MEM_ECC, 3, severity=0.9, device=2)
+        rep = single_node_sweep(c, 3, SweepConfig())
+        assert not rep.passed
+
+
+class TestMultiNodeSweep:
+    def test_nic_fault_invisible_to_single_node(self):
+        c = cluster()
+        c.injector.inject(FaultKind.NIC_DOWN, 1, device=5)
+        assert single_node_sweep(c, 1, SweepConfig()).passed
+        rep = multi_node_sweep(c, 1, buddies=[0], cfg=SweepConfig())
+        assert not rep.passed
+
+    def test_healthy_pair_passes(self):
+        c = cluster()
+        rep = multi_node_sweep(c, 0, buddies=[4], cfg=SweepConfig())
+        assert rep.passed, rep.failures
+
+    def test_qualification_is_conservative(self):
+        c = cluster()
+        c.injector.inject(FaultKind.NIC_DEGRADED, 2, severity=0.8, device=1)
+        basic = qualification_sweep(c, 2, buddies=[0], enhanced=False)
+        full = qualification_sweep(c, 2, buddies=[0], enhanced=True)
+        assert basic.passed        # single-node only: blind to the link
+        assert not full.passed     # enhanced adds the 2-node stage
+
+
+class TestTriage:
+    def test_no_actionable_errors_early_terminates(self):
+        tw = TriageWorkflow()
+        res = tw.run(7, ErrorSignals(), now=0.0,
+                     remediate=lambda n, s: None, verify=lambda n: True)
+        assert res.outcome == TriageOutcome.TERMINATED
+        assert res.stages_run == []
+
+    def test_gpu_path_escalates_until_verified(self):
+        tw = TriageWorkflow()
+        fixed_at = {"count": 0}
+
+        def remediate(node, stage):
+            fixed_at["count"] += 1
+
+        def verify(node):
+            return fixed_at["count"] >= 2    # healthy after second stage
+
+        res = tw.run(1, ErrorSignals(gpu_errors=True), now=0.0,
+                     remediate=remediate, verify=verify)
+        assert res.outcome == TriageOutcome.RETURNED_TO_SWEEP
+        assert res.stages_run == ["gpu_reset", "reboot"]
+        assert res.elapsed_s > 0 and res.human_s > 0
+
+    def test_exhausted_stages_terminate(self):
+        tw = TriageWorkflow()
+        res = tw.run(2, ErrorSignals(nic_errors=True), now=0.0,
+                     remediate=lambda n, s: None, verify=lambda n: False)
+        assert res.outcome == TriageOutcome.TERMINATED
+        assert res.stages_run == ["nic_reset", "reboot", "reimage"]
+
+    def test_three_strikes_in_week(self):
+        tw = TriageWorkflow(TriageConfig(strike_limit=3))
+        day = 86_400.0
+        r1 = tw.run(5, ErrorSignals(gpu_errors=True), now=0.0,
+                    remediate=lambda n, s: None, verify=lambda n: True)
+        r2 = tw.run(5, ErrorSignals(gpu_errors=True), now=2 * day,
+                    remediate=lambda n, s: None, verify=lambda n: True)
+        assert r1.outcome == r2.outcome == TriageOutcome.RETURNED_TO_SWEEP
+        r3 = tw.run(5, ErrorSignals(gpu_errors=True), now=4 * day,
+                    remediate=lambda n, s: None, verify=lambda n: True)
+        assert r3.outcome == TriageOutcome.TERMINATED
+        assert "strikes" in r3.reason
+
+    def test_strikes_expire_outside_window(self):
+        tw = TriageWorkflow(TriageConfig(strike_limit=3))
+        week = 7 * 86_400.0
+        for i in range(4):    # one strike every 4 days: never 3 in a week
+            res = tw.run(6, ErrorSignals(gpu_errors=True), now=i * week / 1.6,
+                         remediate=lambda n, s: None, verify=lambda n: True)
+        assert res.outcome == TriageOutcome.RETURNED_TO_SWEEP
+
+
+class TestRemediationModel:
+    def test_reimage_clears_host_fault(self):
+        c = cluster(seed=3)
+        c.injector.inject(FaultKind.HOST_CPU, 1, severity=0.8)
+        assert c.fleet.host_factor[1] < 1.0
+        for _ in range(10):                # p=0.8 per attempt
+            c.injector.remediate(1, "reimage")
+        assert c.fleet.host_factor[1] == 1.0
+
+    def test_gpu_reset_does_not_fix_nic(self):
+        c = cluster(seed=4)
+        c.injector.inject(FaultKind.NIC_DOWN, 2, device=3)
+        for _ in range(10):
+            c.injector.remediate(2, "gpu_reset")
+        assert not c.fleet.nic_up[2, 3]

@@ -1,0 +1,133 @@
+"""Training-substrate tests: optimizer, checkpointing (fault tolerance),
+data pipeline, trainer loop with Guard hook, grad accumulation."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.model import Model
+from repro.train import (AdamWConfig, CheckpointManager, DataConfig,
+                         SyntheticLM, TrainConfig, Trainer, apply_adamw,
+                         init_opt_state, lr_at, make_train_step)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduced(get_config("qwen3-4b"))
+    model = Model(cfg)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 32, 4))
+    return cfg, model, data
+
+
+class TestOptimizer:
+    def test_lr_schedule(self):
+        cfg = AdamWConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        assert float(lr_at(cfg, 0)) == 0.0
+        assert float(lr_at(cfg, 10)) == pytest.approx(1e-3, rel=1e-3)
+        assert float(lr_at(cfg, 100)) == pytest.approx(1e-4, rel=1e-3)
+
+    def test_adamw_moves_params_and_clips(self):
+        params = {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}
+        grads = {"w": jnp.full((4, 4), 100.0), "b": jnp.ones((4,))}
+        st = init_opt_state(params)
+        cfg = AdamWConfig(grad_clip=1.0, warmup_steps=0, total_steps=10)
+        p2, st2, m = apply_adamw(params, grads, st, cfg)
+        assert float(m["grad_norm"]) > 1.0
+        assert not np.allclose(np.asarray(p2["w"]), 1.0)
+        assert int(st2["count"]) == 1
+
+    def test_moments_match_param_tree(self):
+        params = {"a": jnp.ones((2, 3)), "nested": {"b": jnp.ones(5)}}
+        st = init_opt_state(params)
+        assert jax.tree.structure(st["mu"]) == jax.tree.structure(params)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_retention(self, small):
+        cfg, model, data = small
+        params, _ = model.init_params(jax.random.key(0))
+        opt = init_opt_state(params)
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2, async_save=False)
+            for s in (10, 20, 30):
+                mgr.save(s, params, opt)
+            assert mgr.all_steps() == [20, 30]     # retention
+            out = mgr.restore(params, opt)
+            assert out is not None
+            p2, o2, step = out
+            assert step == 30
+            for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomicity_tmp_never_visible(self, small):
+        cfg, model, data = small
+        params, _ = model.init_params(jax.random.key(0))
+        opt = init_opt_state(params)
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, async_save=True)
+            mgr.save(5, params, opt)
+            mgr.wait()
+            assert all(not n.startswith(".tmp") for n in os.listdir(d))
+
+
+class TestTrainer:
+    def test_loss_decreases_and_restores(self, small):
+        cfg, model, data = small
+        with tempfile.TemporaryDirectory() as d:
+            tr = Trainer(model, data,
+                         TrainConfig(steps=10, ckpt_interval=5,
+                                     opt=AdamWConfig(peak_lr=1e-3,
+                                                     warmup_steps=2,
+                                                     total_steps=10)),
+                         ckpt=CheckpointManager(d))
+            out = tr.run()
+            hist = out["history"]
+            assert hist[-1]["loss"] < hist[0]["loss"]
+            tr2 = Trainer(model, data, TrainConfig(steps=12),
+                          ckpt=CheckpointManager(d))
+            assert tr2.restore() == 10
+
+    def test_guard_hook_triggers_restart(self, small):
+        cfg, model, data = small
+        calls = {"n": 0, "restarted": 0}
+
+        def hook(step, wall, metrics):
+            calls["n"] += 1
+            if step == 6 and not calls["restarted"]:
+                calls["restarted"] += 1
+                return True
+            return False
+
+        with tempfile.TemporaryDirectory() as d:
+            tr = Trainer(model, data,
+                         TrainConfig(steps=8, ckpt_interval=4),
+                         ckpt=CheckpointManager(d), hook=hook)
+            out = tr.run()
+            # restarted at 6 -> rewound to 4 -> finished at 8
+            assert out["final_step"] == 8
+            assert calls["restarted"] == 1
+            steps_seen = [h["step"] for h in out["history"]]
+            assert steps_seen.count(5) == 2      # replayed after rewind
+
+    def test_grad_accumulation_matches_full_batch(self, small):
+        cfg, model, data = small
+        params, _ = model.init_params(jax.random.key(1))
+        opt = init_opt_state(params)
+        batch = data.batch_at(0)
+        full = make_train_step(model, AdamWConfig(), microbatch=0)
+        accum = make_train_step(model, AdamWConfig(), microbatch=2)
+        p1, _, m1 = jax.jit(full)(params, opt, batch)
+        p2, _, m2 = jax.jit(accum)(params, opt, batch)
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]),
+                                                  rel=2e-2)
+        l1 = jax.tree.leaves(p1)
+        l2 = jax.tree.leaves(p2)
+        for a, b in zip(l1, l2):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       atol=5e-3, rtol=5e-2)
