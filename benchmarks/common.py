@@ -13,7 +13,7 @@ import dataclasses
 import json
 import os
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import List
 
 from repro.simcluster import FaultRates, WorkloadProfile
 

@@ -8,7 +8,6 @@ Run:  PYTHONPATH=src python examples/cluster_simulation.py [--hours 24]
 """
 import argparse
 
-import numpy as np
 
 from repro.simcluster import RunConfig, Tier, simulate_run
 

@@ -8,7 +8,6 @@ uses. On a real TPU host, drop interpret=True for the compiled kernel.
 
 Run:  PYTHONPATH=src python examples/node_sweep_demo.py
 """
-import numpy as np
 
 from repro.core.sweep import SweepConfig, single_node_sweep
 from repro.kernels.sweep_burn import LocalJaxSweepBackend, measure_tflops

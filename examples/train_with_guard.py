@@ -11,7 +11,6 @@ Run:  PYTHONPATH=src python examples/train_with_guard.py [--steps 300]
 import argparse
 import time
 
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.models.model import Model

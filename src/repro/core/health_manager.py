@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Protocol, Sequence, Set
+from typing import Dict, List, Optional, Protocol
 
 from repro.core.monitor import HealthEvent, OnlineMonitor
 from repro.core.policy import Action

@@ -22,8 +22,7 @@ and the local-JAX demo backend both implement it.
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import Dict, List, Optional, Protocol, Sequence, Tuple
+from typing import Dict, List, Optional, Protocol, Sequence
 
 import numpy as np
 

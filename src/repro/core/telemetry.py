@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, Iterable, Optional, Protocol, Sequence
+from typing import Deque, Dict, Optional, Protocol
 
 import numpy as np
 

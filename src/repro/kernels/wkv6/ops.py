@@ -1,7 +1,6 @@
 """Jitted public wrapper for the WKV6 Pallas kernel (model layout)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.wkv6.wkv6 import wkv6_chunked

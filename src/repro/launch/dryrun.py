@@ -37,7 +37,6 @@ from repro.dist import api as dist
 from repro.launch import hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import Roofline, model_flops_for
-from repro.models import common as cm
 from repro.models.model import Model, input_specs
 from repro.train.optimizer import AdamWConfig
 from repro.train.trainer import make_train_step
@@ -49,14 +48,6 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 def _sds(tree):
     return jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
-
-
-def _shardings(ctx, dims_tree, shapes_tree):
-    leaf = lambda t: isinstance(t, tuple) and all(
-        a is None or isinstance(a, str) for a in t)
-    return jax.tree.map(
-        lambda dims, s: ctx.sharding(dims, s.shape),
-        dims_tree, shapes_tree, is_leaf=leaf)
 
 
 def _batch_dims(cfg, batch_struct):
@@ -88,13 +79,13 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
     with mesh, dist.use_mesh(mesh, rules) as ctx:
         param_shapes = model.param_shapes()
         axes = model.param_axes()
-        p_sh = _shardings(ctx, axes, param_shapes)
+        p_sh = dist.param_sharding(axes, param_shapes, ctx)
         p_sds = _sds(param_shapes)
         specs = input_specs(cfg, shape)
 
         if shape.kind == "train":
             batch = specs["batch"]
-            b_sh = _shardings(ctx, _batch_dims(cfg, batch), batch)
+            b_sh = dist.param_sharding(_batch_dims(cfg, batch), batch, ctx)
             o_sds = {"mu": p_sds, "nu": p_sds,
                      "count": jax.ShapeDtypeStruct((), jax.numpy.int32)}
             o_sh = {"mu": p_sh, "nu": p_sh, "count": ctx.sharding((), ())}
@@ -106,11 +97,11 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
             lowered = jitted.lower(p_sds, o_sds, batch)
         elif shape.kind == "prefill":
             batch = specs["batch"]
-            b_sh = _shardings(ctx, _batch_dims(cfg, batch), batch)
+            b_sh = dist.param_sharding(_batch_dims(cfg, batch), batch, ctx)
             cache_struct = jax.eval_shape(
                 lambda p, b: model.prefill(p, b)[1], p_sds, batch)
             cache_dims = dict(model.cache_dims())
-            c_sh = _shardings(ctx, cache_dims, cache_struct)
+            c_sh = dist.param_sharding(cache_dims, cache_struct, ctx)
             l_sh = ctx.sharding(("act_batch", "act_vocab"),
                                 (shape.global_batch, model.vocab_padded))
             jitted = jax.jit(model.prefill, in_shardings=(p_sh, b_sh),
@@ -120,7 +111,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
             tokens = specs["tokens"]
             cache = specs["cache"]
             t_sh = ctx.sharding(("act_batch",), tokens.shape)
-            c_sh = _shardings(ctx, model.cache_dims(), cache)
+            c_sh = dist.param_sharding(model.cache_dims(), cache, ctx)
             l_sh = ctx.sharding(("act_batch", "act_vocab"),
                                 (shape.global_batch, model.vocab_padded))
             jitted = jax.jit(model.decode_step,
@@ -254,6 +245,8 @@ def main() -> int:
 
     if args.all:
         return _run_all(args)
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape are required (or use --all)")
 
     out = run_cell(args.arch, args.shape, args.multi_pod, args.remat,
                    args.microbatch)

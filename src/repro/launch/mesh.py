@@ -14,17 +14,30 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType landed after 0.4.x; Auto is the default there,
+    # so omitting axis_types keeps identical semantics on both sides.
+    try:
+        types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=types)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_cpu_mesh():
-    """1x1 mesh over the local device — same axis names, so the identical
-    sharded code paths run in smoke tests."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    """("data", "model") mesh over every local device — same axis names as
+    production, so the identical sharded code paths run in smoke tests.
+
+    "model" stays 1-wide (TP on CPU buys nothing and the manual shard_map
+    paths change MoE capacity math); all devices go to "data" so FSDP
+    sharding and the JIT all-gather are real whenever the host exposes
+    more than one device (CI pins XLA_FLAGS=--xla_force_host_platform_
+    device_count=8 for exactly this).
+    """
+    return _make_mesh((len(jax.devices()), 1), ("data", "model"))

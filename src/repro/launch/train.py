@@ -10,10 +10,8 @@ Fig. 1 at single-host scale.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 
-import jax
 import numpy as np
 
 from repro.configs import get_config, reduced

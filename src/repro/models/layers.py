@@ -1,7 +1,7 @@
 """Shared neural-net layers: norms, RoPE / M-RoPE, gated MLPs, embeddings."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

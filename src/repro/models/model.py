@@ -18,7 +18,6 @@ partitions quickly on the 512-device dry-run mesh) and remat'd according to
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 import math
 from typing import Any, Dict, Optional, Tuple
@@ -30,7 +29,6 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.dist import api as dist
 from repro.models import attention as attn
 from repro.models import common as cm
-from repro.models import moe as moe_mod
 from repro.models import rglru
 from repro.models import rwkv6
 from repro.models import transformer as tfm

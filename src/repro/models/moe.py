@@ -104,7 +104,6 @@ def _dispatch_compute_combine(x, idx, w, wi, wo, *, act: str, capacity: int,
     xd = xpad[src].reshape(E, C, D)                   # dispatch buffer
 
     if ep_axis is not None:
-        tp = jax.lax.axis_size(ep_axis)
         # (E, C, D) -> (E/tp, tp*C, D): tokens for my local experts
         xd = jax.lax.all_to_all(xd, ep_axis, split_axis=0, concat_axis=1,
                                 tiled=True)
@@ -166,7 +165,7 @@ def apply_moe(p, cfg, x):
         cap = max(int(math.ceil(T_local * m.top_k * m.capacity_factor
                                 / m.num_experts)), m.top_k)
 
-        fn = jax.shard_map(
+        fn = dist.shard_map(
             functools.partial(
                 _dispatch_compute_combine, act=cfg.act, capacity=cap,
                 num_experts=m.num_experts, top_k=m.top_k, ep_axis=ep_axis),

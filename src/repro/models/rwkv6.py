@@ -9,9 +9,6 @@ arch runs the long_500k cell.
 """
 from __future__ import annotations
 
-import math
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

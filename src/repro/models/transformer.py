@@ -3,8 +3,6 @@ layer, and cross-attention decoder layer (whisper). Layer params are
 scan-stacked; bodies are remat'd by the model assembly."""
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core.sweep import SweepReference
 from repro.core.telemetry import Frame, reduce_device_metrics
-from repro.simcluster.faults import FaultInjector, FaultKind, FaultRates
+from repro.simcluster.faults import FaultInjector, FaultRates
 from repro.simcluster.node import Fleet, HWConfig
 
 

@@ -19,7 +19,7 @@ matching the paper's 8-accelerator node granularity for health accounting.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

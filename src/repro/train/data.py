@@ -10,7 +10,7 @@ path that §3.2 identifies as the straggler amplifier."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 

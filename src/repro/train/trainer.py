@@ -17,7 +17,6 @@ Fig. 1.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Any, Callable, Dict, Optional, Protocol
 
@@ -25,7 +24,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist import api as dist
-from repro.models import common as cm
 from repro.models.model import Model
 from repro.train.checkpoint import CheckpointManager
 from repro.train.data import SyntheticLM

@@ -1,10 +1,9 @@
 """Unit tests for the peer-relative straggler detector (§4.2)."""
 import numpy as np
-import pytest
 
 from repro.core import (Action, DetectorConfig, OnlineMonitor, PolicyConfig,
                         StragglerDetector, TieredPolicy, robust_z)
-from repro.core.telemetry import Frame, METRICS
+from repro.core.telemetry import Frame
 
 
 def mk_frame(step, step_times, temps=None, n=None, valid=None):

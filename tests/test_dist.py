@@ -46,7 +46,6 @@ class TestSpecResolution:
 class TestDivisibilityFallbackBigMesh:
     def test_whisper_heads_replicate_on_16(self):
         """12 heads don't divide a 16-way model axis -> replicated."""
-        import os
         # simulate the rule logic without devices: use a fake mesh shape
         ctx = dist.DistContext(make_cpu_mesh())
         # direct unit check of the divisibility branch

@@ -1,0 +1,142 @@
+"""repro.dist edge cases beyond the seed matrix: divisibility fallback on
+wide (fake) meshes, context restoration on exception, ZeRO-3 gather
+round-trips, and rule-table overrides."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import api as dist
+from repro.launch.mesh import make_cpu_mesh
+
+
+def fake_mesh(**shape):
+    """A mesh stand-in exposing just what spec() resolution reads, so rule
+    logic is testable on topologies the host can't materialize."""
+    return types.SimpleNamespace(shape=dict(shape),
+                                 axis_names=tuple(shape))
+
+
+class TestDivisibilityFallback:
+    def test_non_divisible_dim_replicates_on_wide_mesh(self):
+        ctx = dist.DistContext(fake_mesh(data=2, model=16))
+        # whisper's 12 heads on a 16-wide model axis: replicate
+        assert ctx.spec(("heads", None), shape=(12, 64)) == P(None, None)
+        # 32 heads divide 16: sharded
+        assert ctx.spec(("heads", None), shape=(32, 64)) == P("model", None)
+
+    def test_multi_axis_rule_needs_full_product(self):
+        ctx = dist.DistContext(fake_mesh(pod=2, data=16, model=16))
+        # act_batch -> ("pod", "data"): 32 divides 2*16, 16 does not
+        assert ctx.spec(("act_batch", None), shape=(32, 8)) == \
+            P(("pod", "data"), None)
+        assert ctx.spec(("act_batch", None), shape=(16, 8)) == P(None, None)
+
+    def test_missing_mesh_axis_skipped(self):
+        # no "pod" axis: act_batch degrades to plain "data" sharding
+        ctx = dist.DistContext(fake_mesh(data=4, model=2))
+        assert ctx.spec(("act_batch",), shape=(8,)) == P("data")
+
+    def test_unknown_logical_name_replicates(self):
+        ctx = dist.DistContext(fake_mesh(data=4, model=2))
+        assert ctx.spec(("not_a_rule", "tp")) == P(None, "model")
+
+    def test_duplicate_after_fallback_still_available(self):
+        ctx = dist.DistContext(fake_mesh(data=2, model=16))
+        # dim0 ("heads", 12) falls back to replicated, so "model" stays
+        # free and dim1 ("ff", 32) can still claim it
+        assert ctx.spec(("heads", "ff"), shape=(12, 32)) == P(None, "model")
+
+    def test_axis_size_and_mesh_axes(self):
+        ctx = dist.DistContext(fake_mesh(pod=2, data=16, model=16))
+        assert ctx.axis_size("act_batch") == 32
+        assert ctx.axis_size("act_heads") == 16
+        assert ctx.axis_size(None) == 1
+        assert ctx.mesh_axes("act_batch") == ("pod", "data")
+        assert ctx.mesh_axes("layer") == ()
+
+
+class TestContextManagement:
+    def test_use_mesh_restores_prior_context_on_exception(self):
+        dist.set_context(None)
+        mesh = make_cpu_mesh()
+        outer = dist.DistContext(mesh)
+        dist.set_context(outer)
+        try:
+            with pytest.raises(RuntimeError):
+                with dist.use_mesh(mesh):
+                    assert dist.current() is not outer
+                    raise RuntimeError("boom")
+            assert dist.current() is outer
+            # nested clean exit restores too
+            with dist.use_mesh(mesh) as inner:
+                assert dist.current() is inner
+            assert dist.current() is outer
+        finally:
+            dist.set_context(None)
+
+    def test_rules_override_scoped_to_context(self):
+        mesh = make_cpu_mesh()
+        rules = dict(dist.DEFAULT_RULES)
+        rules["act_seq"] = ("model",)
+        with dist.use_mesh(mesh, rules) as ctx:
+            assert ctx.mesh_axes("act_seq") == ("model",)
+        with dist.use_mesh(mesh) as ctx:
+            assert ctx.mesh_axes("act_seq") == ()
+
+
+class TestGatherFsdp:
+    def _tree(self):
+        params = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                  "b": jnp.arange(8, dtype=jnp.float32),
+                  "scale": jnp.ones(())}
+        axes = {"w": ("fsdp", "tp"), "b": ("fsdp",), "scale": ()}
+        return params, axes
+
+    def test_round_trip_preserves_values(self):
+        params, axes = self._tree()
+        mesh = make_cpu_mesh()
+        with mesh, dist.use_mesh(mesh) as ctx:
+            sharded = jax.device_put(
+                params, dist.param_sharding(axes, params, ctx))
+            gathered = jax.jit(lambda t: dist.gather_fsdp(t, axes))(sharded)
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(gathered[k]),
+                                          np.asarray(params[k]))
+
+    def test_gather_drops_only_fsdp(self):
+        params, axes = self._tree()
+        mesh = make_cpu_mesh()
+        with mesh, dist.use_mesh(mesh) as ctx:
+            sharded = jax.device_put(
+                params, dist.param_sharding(axes, params, ctx))
+            gathered = jax.jit(lambda t: dist.gather_fsdp(t, axes))(sharded)
+            w_spec = gathered["w"].sharding.spec
+            # fsdp dim replicated; tp dim keeps whatever spec() resolves
+            assert len(w_spec) == 0 or w_spec[0] is None
+            assert gathered["b"].sharding.is_fully_replicated
+
+    def test_noop_without_context(self):
+        params, axes = self._tree()
+        dist.set_context(None)
+        out = dist.gather_fsdp(params, axes)
+        assert out["w"] is params["w"]
+
+
+class TestParamSharding:
+    def test_matches_spec_per_leaf(self):
+        mesh = make_cpu_mesh()
+        ctx = dist.DistContext(mesh)
+        params = {"w": jnp.zeros((8, 4)), "v": jnp.zeros((6,))}
+        axes = {"w": ("fsdp", "tp"), "v": ("fsdp",)}
+        sh = dist.param_sharding(axes, params, ctx)
+        assert sh["w"].spec == ctx.spec(("fsdp", "tp"), shape=(8, 4))
+        assert sh["v"].spec == ctx.spec(("fsdp",), shape=(6,))
+
+    def test_requires_context_when_none_passed(self):
+        dist.set_context(None)
+        with pytest.raises(RuntimeError):
+            dist.param_sharding({}, {})

@@ -4,7 +4,6 @@ import tempfile
 
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import get_config, reduced
 from repro.dist import api as dist

@@ -1,14 +1,10 @@
 """End-to-end integration: the full Guard closed loop over a simulated
 fleet, and the real-JAX sweep backend running the Pallas burn kernel."""
 import numpy as np
-import pytest
 
-from repro.core import (DetectorConfig, HealthManager, NodeState,
-                        OnlineMonitor, PolicyConfig, SweepConfig,
-                        single_node_sweep)
+from repro.core import SweepConfig, single_node_sweep
 from repro.kernels.sweep_burn import LocalJaxSweepBackend
-from repro.simcluster import (FaultKind, FaultRates, RunConfig, SimCluster,
-                              Tier, simulate_run)
+from repro.simcluster import FaultRates, RunConfig, Tier, simulate_run
 
 
 class TestClosedLoopEndToEnd:

@@ -7,7 +7,7 @@ import pytest
 
 from repro.kernels.flash_attention import attention, attention_ref
 from repro.kernels.sweep_burn import burn, burn_flops, burn_ref
-from repro.kernels.wkv6 import wkv6, wkv6_naive, wkv6_ref
+from repro.kernels.wkv6 import wkv6, wkv6_naive
 
 rng = np.random.RandomState(7)
 

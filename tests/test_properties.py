@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.detector import DetectorConfig, StragglerDetector, robust_z
 from repro.core.telemetry import Frame

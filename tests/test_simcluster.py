@@ -6,8 +6,7 @@ import pytest
 from repro.core import (DetectorConfig, HealthManager, NodeState,
                         OnlineMonitor, PolicyConfig)
 from repro.simcluster import (FaultKind, FaultRates, RunConfig, SimCluster,
-                              Tier, WorkloadProfile, freq_at_temp,
-                              simulate_run)
+                              Tier, freq_at_temp, simulate_run)
 
 QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
                    nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,

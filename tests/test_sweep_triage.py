@@ -1,12 +1,9 @@
 """Unit tests for the offline sweeps (§5) and the triage FSM (§6)."""
-import numpy as np
-import pytest
 
 from repro.core import (ErrorSignals, SweepConfig, TriageConfig,
                         TriageOutcome, TriageWorkflow, multi_node_sweep,
                         qualification_sweep, single_node_sweep)
-from repro.simcluster import FaultKind, FaultRates, SimCluster, \
-    WorkloadProfile
+from repro.simcluster import FaultKind, FaultRates, SimCluster
 
 QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
                    nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
