@@ -11,10 +11,9 @@ unmitigated grey faults eventually hard-fail (§ fault model), so pulling
 them early prevents the crash."""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import GUARD_WORKLOAD, RATES, Table, pct
-from repro.simcluster import RunConfig, Tier, simulate_run
+from benchmarks.common import Table, pct
+from benchmarks.run_all import run_tiers
+from repro.simcluster import Tier
 
 PAPER = {
     Tier.BURNIN: (6.6, 5.6, 0.05),
@@ -26,25 +25,18 @@ PAPER = {
 
 def run(duration_h: float = 72.0, seeds=(0, 1, 2)) -> Table:
     t = Table("Ablation: MTTF / human time / MFU per tier", "table4")
+    # one tier-sweep implementation: run_all.run_tiers is the same loop
+    # that produces the BENCH_guard.json CI artifact
+    per_tier = run_tiers(duration_h, n_nodes=128, n_spare=14, seeds=seeds)
     for tier in Tier:
-        mttf, human, mfu, step = [], [], [], []
-        for seed in seeds:
-            cfg = RunConfig(tier=tier, n_nodes=128, n_spare=14,
-                            duration_h=duration_h, initial_grey_p=0.2,
-                            workload=GUARD_WORKLOAD, rates=RATES, seed=seed)
-            r = simulate_run(cfg)
-            mttf.append(r.mttf_h)
-            human.append(r.human_h_per_incident)
-            mfu.append(r.mfu)
-            step.append(r.mean_step_s)
+        d = per_tier[tier.name]
         p_mttf, p_hum, p_mfu = PAPER[tier]
         t.add(f"T{int(tier)} {tier.name} MTTF", f"{p_mttf:.1f} h",
-              f"{np.mean(mttf):.1f} h")
+              f"{d['mttf_h']:.1f} h")
         t.add(f"T{int(tier)} {tier.name} human/incident", f"{p_hum:.1f} h",
-              f"{np.mean(human):.2f} h")
+              f"{d['human_h_per_incident']:.2f} h")
         t.add(f"T{int(tier)} {tier.name} MFU", pct(p_mfu),
-              pct(float(np.mean(mfu))),
-              f"mean step {np.mean(step):.1f}s")
+              pct(d["mfu"]), f"mean step {d['mean_step_s']:.1f}s")
     return t
 
 

@@ -53,9 +53,7 @@ def one_trial(seed: int, n_nodes: int = 32, n_pos: int = 8,
             continue
         for ev in mon.observe(frame):
             flagged.add(ev.decision.node_id)
-        for a in mon.detector._latched:
-            if mon.detector._latched[a]:
-                flagged.add(a)
+        flagged.update(mon.detector.latched_nodes())
     pos = set(int(p) for p in positives)
     neg = set(range(n_nodes)) - pos
     fp = len(flagged & neg)

@@ -1,15 +1,17 @@
 """Quickstart: Guard in ~60 lines.
 
 Builds a simulated 32-node training job, injects a thermally-degrading
-node and a dead NIC, and watches the online monitor detect, classify, and
-the health manager mitigate — the paper's Fig. 1 loop end to end.
+node and a dead NIC, and watches one ``GuardSession`` — online detection,
+tiered mitigation, and overlapped offline qualification behind a single
+facade — close the paper's Fig. 1 loop end to end. Every state
+transition lands on the session's typed event bus; this script just
+tails the trace.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (DetectorConfig, HealthManager, NodeState,
-                        OnlineMonitor, PolicyConfig)
+from repro.guard import GuardSession, StragglerFlagged, SweepFinished, Tier
 from repro.simcluster import FaultKind, FaultRates, SimCluster
 
 QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
@@ -19,40 +21,46 @@ QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
 
 def main():
     cluster = SimCluster(n_active=32, n_spare=4, rates=QUIET, seed=0)
-    monitor = OnlineMonitor(DetectorConfig(), PolicyConfig())
-    manager = HealthManager(cluster, cluster, monitor)
-    for nid in cluster.active:
-        manager.register(nid, NodeState.ACTIVE)
-    for nid in cluster.spares:
-        manager.register(nid, NodeState.HEALTHY_SPARE)
+    session = GuardSession.from_tier(Tier.ENHANCED, control=cluster,
+                                     sweep_backend=cluster)
+    session.register_active(cluster.active)
+    session.register_spares(cluster.spares)
+    session.bus.subscribe(StragglerFlagged, lambda ev: print(
+        f"  t={ev.t:7.0f}s step={ev.step:4d} node {ev.node_id}: "
+        f"{ev.action} ({ev.reason})"))
+    session.bus.subscribe(SweepFinished, lambda ev: print(
+        f"  t={ev.t:7.0f}s offline qualification of node {ev.node_id}: "
+        f"{ev.outcome} after {ev.duration_s:.0f}s on the sweep bench"))
 
     print("injecting: severe thermal fault on node 5, dead NIC on node 9")
     cluster.injector.inject(FaultKind.THERMAL, 5, severity=0.9)
     cluster.injector.inject(FaultKind.NIC_DOWN, 9, device=7)
 
     for step in range(1, 601):
-        rec = cluster.run_step()
+        cluster.run_step()
         if step % cluster.window_steps == 0:
             frame = cluster.collect()
-            if frame is None:
-                continue
-            for ev in monitor.observe(frame):
-                print(f"  t={rec['t']:7.0f}s step={step:4d} node "
-                      f"{ev.decision.node_id}: {ev.decision.action.value} "
-                      f"({ev.decision.reason})")
-                manager.handle(ev)
+            if frame is not None:
+                session.observe(frame)
         if step % 90 == 0:                   # checkpoint boundary
-            if manager.on_checkpoint():
-                print(f"  t={rec['t']:7.0f}s checkpoint: deferred swaps "
-                      f"applied")
-            manager.qualify_all_quarantined()
+            ck = session.on_checkpoint()
+            if ck.applied_swaps:
+                print(f"  checkpoint at step {step}: "
+                      f"{ck.applied_swaps} deferred swap(s) applied")
+        session.advance(cluster.t)           # sweeps overlap the job
 
-    times = cluster.node_barrier_times()
-    print(f"\nfinal mean step {np.mean([cluster.run_step()['step_time'] for _ in range(20)]):.2f}s "
+    session.scheduler.drain(cluster.t)       # land in-flight qualifications
+
+    print(f"\nfinal mean step "
+          f"{np.mean([cluster.run_step()['step_time'] for _ in range(20)]):.2f}s "
           f"(healthy = {cluster.workload.healthy_step_s:.2f}s)")
-    print(f"node states: 5 -> {manager.state[5].value}, "
-          f"9 -> {manager.state[9].value}")
-    print(f"stats: {manager.stats}")
+    print(f"node states: 5 -> {session.node_state(5).value}, "
+          f"9 -> {session.node_state(9).value}")
+    print(f"stats: {session.stats}")
+    kinds = {}
+    for ev in session.events():
+        kinds[ev.kind] = kinds.get(ev.kind, 0) + 1
+    print(f"event trace: {kinds}")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,22 @@
 """End-to-end driver: train a ~100M-class model for a few hundred steps
-with the Guard step hook, checkpointing, and a mid-run restart.
+with the real Guard pipeline in the loop: per-step wall times flow
+through ``GuardStepHook`` into telemetry Frames, the peer-relative
+detector and tiered policy run on them, and a (synthetically injected)
+stall triggers the IMMEDIATE-restart path — the health manager swaps the
+host's node for a spare and the trainer rewinds to its last checkpoint.
 
-This is the single-host version of the production loop: the trainer's
-per-step wall time streams into the online monitor, checkpoints are saved
-asynchronously, and a (manually injected) stall triggers the
-IMMEDIATE-restart path, which rewinds to the last checkpoint.
+This is the single-host version of the production loop; on a fleet, each
+host reports its barrier time and the same session runs fleet-side.
 
 Run:  PYTHONPATH=src python examples/train_with_guard.py [--steps 300]
 """
 import argparse
+import tempfile
 import time
 
 
 from repro.configs import get_config, reduced
+from repro.guard import GuardStepHook, NodeSwapped
 from repro.models.model import Model
 from repro.train import (AdamWConfig, CheckpointManager, DataConfig,
                          SyntheticLM, TrainConfig, Trainer)
@@ -42,18 +46,20 @@ def main():
     data = SyntheticLM(DataConfig(cfg.vocab_size, seq_len=128,
                                   global_batch=8 if args.big else 4))
 
-    stall = {"at": args.steps // 2, "armed": True}
+    # the real Fig.-1 loop: measured step times -> Frames -> detector ->
+    # tiered policy -> manager swap + trainer rewind. The injected stall
+    # scales this host's *measured* wall time mid-run (a deterministic
+    # stand-in for a stuck collective), so detection is genuine.
+    hook = GuardStepHook(window_steps=4, n_peers=15)
+    hook.inject_stall(at_step=args.steps // 2, factor=8.0, steps=4)
+    hook.session.bus.subscribe(NodeSwapped, lambda ev: print(
+        f"  [guard] node {ev.old} swapped for spare {ev.new} ({ev.reason}) "
+        f"-> immediate restart from last checkpoint"))
 
-    def hook(step, wall_s, metrics):
-        # simulate a node stall mid-run: Guard fires an immediate restart
-        if stall["armed"] and step == stall["at"]:
-            stall["armed"] = False
-            print(f"  [guard] stall detected at step {step} -> "
-                  f"immediate restart from last checkpoint")
-            return True
-        return False
-
-    ckpt_dir = f"/tmp/guard_example_ckpt_{cfg.d_model}x{cfg.num_layers}"
+    # fresh checkpoint dir per run: a stale checkpoint at/after --steps
+    # would make restore() skip training entirely
+    ckpt_dir = tempfile.mkdtemp(
+        prefix=f"guard_example_ckpt_{cfg.d_model}x{cfg.num_layers}_")
     trainer = Trainer(
         model, data,
         TrainConfig(steps=args.steps, ckpt_interval=50,
@@ -67,9 +73,13 @@ def main():
         f"  step {s:4d} loss {m['loss']:.3f}") if s % 25 == 0 else None)
     dt = time.perf_counter() - t0
     losses = [h["loss"] for h in out["history"]]
+    flags = [e for e in hook.session.events() if e.kind == "straggler_flagged"]
     print(f"[example] {out['final_step']} steps in {dt:.0f}s; "
-          f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
-          f"(incl. one checkpoint-rewind restart)")
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"{len(flags)} detector flag(s), "
+          f"{hook.restarts_requested} guard restart(s), "
+          f"{hook.frames_fed} telemetry frames")
+    assert hook.restarts_requested >= 1, "stall was not detected"
     assert losses[-1] < losses[0]
 
 

@@ -12,7 +12,8 @@ health management for large-scale training.
 from repro.core.detector import (DetectorConfig, NodeAssessment,
                                  StragglerDetector, robust_z)
 from repro.core.health_manager import (ClusterControl, HealthManager,
-                                       ManagerStats, NodeState)
+                                       ManagerStats, NodeState,
+                                       QualificationTicket)
 from repro.core.monitor import HealthEvent, OnlineMonitor
 from repro.core.policy import Action, Decision, PolicyConfig, TieredPolicy
 from repro.core.sweep import (SweepBackend, SweepConfig, SweepReference,
@@ -29,6 +30,7 @@ __all__ = [
     "ErrorSignals", "Frame", "HARDWARE_METRICS", "HealthEvent",
     "HealthManager", "METRICS", "METRIC_DIRECTION", "ManagerStats",
     "NodeAssessment", "NodeState", "OnlineMonitor", "PolicyConfig",
+    "QualificationTicket",
     "RingHistory", "Stage", "StragglerDetector", "SweepBackend",
     "SweepConfig", "SweepReference", "SweepReport", "TieredPolicy",
     "TriageConfig", "TriageOutcome", "TriageResult", "TriageWorkflow",

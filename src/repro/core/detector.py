@@ -146,6 +146,17 @@ class StragglerDetector:
             ))
         return out
 
+    def is_latched(self, node_id: int) -> bool:
+        """Public latch query: is this node currently flagged (with
+        hysteresis)? The health manager's deferred-swap confirmation and
+        any external trace/UI consumer must use this instead of reaching
+        into detector internals."""
+        return self._latched.get(node_id, False)
+
+    def latched_nodes(self) -> List[int]:
+        """All currently latched node ids (sorted, for stable iteration)."""
+        return sorted(n for n, v in self._latched.items() if v)
+
     def reset_node(self, node_id: int) -> None:
         """Forget latch state (node replaced/repaired)."""
         self._latched.pop(node_id, None)

@@ -6,18 +6,29 @@ checkpoint / watch), quarantines suspects, drives the event-driven offline
 qualification (sweep -> triage -> sweep ...) and returns qualified nodes to
 the healthy pool. All substrate access goes through ``ClusterControl`` so
 the loop is identical over the simulator and a real fleet control plane.
+
+The manager is the **single source of truth for node pools**: callers take
+replacement capacity through ``take_spare`` and hand recovered nodes back
+through ``return_spare`` — nothing above this layer keeps its own spare
+list. Offline qualification is split into ``begin_qualification`` (runs the
+sweep→triage loop and returns a ticket with the outcome and its simulated
+duration) and ``complete_qualification`` (applies the outcome to the
+pools), so a scheduler can overlap qualification with the running job
+instead of blocking on it; ``qualify`` composes the two for the
+synchronous path.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Protocol
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
 from repro.core.monitor import HealthEvent, OnlineMonitor
 from repro.core.policy import Action
-from repro.core.sweep import SweepBackend, SweepConfig, qualification_sweep
+from repro.core.sweep import (SweepBackend, SweepConfig, SweepReport,
+                              qualification_sweep)
 from repro.core.triage import (ErrorSignals, TriageConfig, TriageOutcome,
-                               TriageWorkflow)
+                               TriageResult, TriageWorkflow)
 
 
 class NodeState(enum.Enum):
@@ -57,10 +68,34 @@ class ManagerStats:
     sweeps_run: int = 0
     sweeps_failed: int = 0
     triages_run: int = 0
-    nodes_terminated: int = 0
+    nodes_terminated: int = 0     # pulled by Guard (triage / 3-strikes)
+    nodes_lost: int = 0           # died fail-stop (hardware left with them)
     nodes_requalified: int = 0
+    nodes_provisioned: int = 0
     human_seconds: float = 0.0
     downtime_seconds: float = 0.0
+
+
+@dataclasses.dataclass
+class QualificationTicket:
+    """Outcome of one offline qualification, not yet applied to the pools.
+
+    ``duration_s`` is the node-down time the sweep→triage loop consumed —
+    a scheduler uses it to decide *when* (in job time) the outcome lands.
+    ``records`` interleaves the sweep reports and triage results in the
+    order they ran, for event emission and audit."""
+    node_id: int
+    outcome: NodeState
+    duration_s: float
+    sweeps: int
+    records: List[Tuple[str, object]]
+    applied: bool = False
+
+
+# Manager-level notification callback: (topic, payload). Kept as a plain
+# callable so ``repro.core`` stays free of any event-bus dependency; the
+# ``repro.guard`` session translates these into typed GuardEvents.
+Notify = Callable[[str, Dict[str, object]], None]
 
 
 class HealthManager:
@@ -70,7 +105,9 @@ class HealthManager:
                  triage_cfg: Optional[TriageConfig] = None,
                  enhanced_sweep: bool = True,
                  max_qualification_rounds: int = 3,
-                 pending_patience_s: float = 1800.0):
+                 pending_patience_s: float = 1800.0,
+                 on_provision: Optional[Callable[[int], None]] = None,
+                 notify: Optional[Notify] = None):
         self.control = control
         self.backend = sweep_backend
         self.monitor = monitor
@@ -79,26 +116,75 @@ class HealthManager:
         self.enhanced_sweep = enhanced_sweep
         self.max_rounds = max_qualification_rounds
         self.pending_patience_s = pending_patience_s
+        self.on_provision = on_provision
+        self.notify = notify
         self.state: Dict[int, NodeState] = {}
         self.spares: List[int] = []
         self.deferred: List[int] = []     # swap at next checkpoint
         self.pending_since: Dict[int, float] = {}
         self.stats = ManagerStats()
 
+    def _notify(self, topic: str, **payload) -> None:
+        if self.notify is not None:
+            self.notify(topic, payload)
+
     # --------------------------------------------------------- pools
 
     def register(self, node_id: int, state: NodeState) -> None:
         self.state[node_id] = state
-        if state == NodeState.HEALTHY_SPARE:
+        if state == NodeState.HEALTHY_SPARE and node_id not in self.spares:
             self.spares.append(node_id)
 
-    def _take_spare(self) -> int:
+    @property
+    def spare_count(self) -> int:
+        """Healthy spares available right now (public pool query)."""
+        return len(self.spares)
+
+    def provision_spare(self) -> int:
+        """Bring one brand-new node through admission into the spare pool."""
+        nid = self.control.provision_node()
+        self.stats.nodes_provisioned += 1
+        if self.on_provision is not None:
+            self.on_provision(nid)       # tier-dependent admission check
+        self.register(nid, NodeState.HEALTHY_SPARE)
+        self._notify("provision", node_id=nid)
+        return nid
+
+    def take_spare(self) -> int:
+        """Remove one healthy spare from the pool and mark it ACTIVE.
+
+        Provisions fresh capacity through the control plane if the pool is
+        dry. The returned node is in exactly one place afterwards: the job.
+        """
         while not self.spares:
-            nid = self.control.provision_node()
-            self.register(nid, NodeState.HEALTHY_SPARE)
+            self.provision_spare()
         nid = self.spares.pop(0)
         self.state[nid] = NodeState.ACTIVE
         return nid
+
+    def return_spare(self, node_id: int) -> None:
+        """Hand a healthy node back to the spare pool."""
+        self.state[node_id] = NodeState.HEALTHY_SPARE
+        if node_id not in self.spares:
+            self.spares.append(node_id)
+
+    def quarantined(self) -> List[int]:
+        """Node ids currently awaiting offline qualification."""
+        return sorted(n for n, s in self.state.items()
+                      if s == NodeState.QUARANTINED)
+
+    def retire(self, node_id: int, reason: str = "",
+               crashed: bool = False) -> None:
+        """Terminate a node (leaves the fleet; replacement hw arrives via
+        provisioning). ``crashed`` keeps fail-stop deaths out of the
+        Guard-driven ``nodes_terminated`` count."""
+        self.state[node_id] = NodeState.TERMINATED
+        self.spares = [s for s in self.spares if s != node_id]
+        if crashed:
+            self.stats.nodes_lost += 1
+        else:
+            self.stats.nodes_terminated += 1
+        self._notify("terminate", node_id=node_id, reason=reason)
 
     # --------------------------------------------------- event handling
 
@@ -117,7 +203,7 @@ class HealthManager:
                 self.stats.deferred_swaps += 1
         elif act == Action.IMMEDIATE_RESTART:
             self.deferred = [d for d in self.deferred if d != nid]
-            self._swap_out(nid)
+            self._swap_out(nid, reason=ev.decision.reason)
             self.control.restart_job(ev.decision.reason)
             self.stats.immediate_restarts += 1
 
@@ -146,9 +232,9 @@ class HealthManager:
             # §4.2: deferral exists to CONFIRM the diagnosis — only nodes
             # still latched by the detector are swapped; transients that
             # cleared themselves stay in the job
-            if not self.monitor.detector._latched.get(nid, False):
+            if not self.monitor.detector.is_latched(nid):
                 continue
-            self._swap_out(nid)
+            self._swap_out(nid, reason="deferred replacement", deferred=True)
             self.pending_since.pop(nid, None)
             n += 1
         self.deferred.clear()
@@ -156,24 +242,35 @@ class HealthManager:
             self.control.restart_job(f"{n} deferred replacement(s)")
         return n
 
-    def _swap_out(self, nid: int) -> None:
-        new = self._take_spare()
+    def _swap_out(self, nid: int, reason: str = "",
+                  deferred: bool = False) -> int:
+        new = self.take_spare()
         self.control.swap_node(nid, new)
         self.state[nid] = NodeState.QUARANTINED
         self.monitor.node_replaced(nid)
+        self._notify("swap", old=nid, new=new, reason=reason,
+                     deferred=deferred)
+        return new
 
     # ------------------------------------------------- qualification
 
-    def qualify(self, node_id: int) -> NodeState:
-        """Event-driven offline qualification of a quarantined node:
-        sweep; on failure triage; loop until requalified or terminated.
+    def begin_qualification(self, node_id: int) -> QualificationTicket:
+        """Run the event-driven offline qualification of a quarantined
+        node — sweep; on failure triage; loop until requalified or
+        terminated — and return the outcome WITHOUT applying it to the
+        pools. The node stays QUARANTINED until
+        ``complete_qualification`` lands the ticket, which lets a
+        scheduler overlap the sweep's ``duration_s`` with the job.
 
         The 2-node stage needs a known-good buddy: a failure is re-tried
         against a second buddy before it counts (disambiguates a
         contaminated buddy from a genuinely bad node)."""
         nb = max(self.sweep_cfg.group_size - 1, 1)
+        duration = 0.0
+        sweeps = 0
+        records: List[Tuple[str, object]] = []
         for _ in range(self.max_rounds):
-            rep = None
+            rep: Optional[SweepReport] = None
             for attempt in range(2):
                 buddies = self.spares[attempt * nb:(attempt + 1) * nb] or \
                     self.spares[:nb]
@@ -181,35 +278,53 @@ class HealthManager:
                                           self.sweep_cfg,
                                           enhanced=self.enhanced_sweep)
                 self.stats.sweeps_run += 1
+                sweeps += 1
                 self.stats.downtime_seconds += rep.duration_s
+                duration += rep.duration_s
+                records.append(("sweep", rep))
                 if rep.passed or not buddies:
                     break
             if rep.passed:
-                self.state[node_id] = NodeState.HEALTHY_SPARE
-                self.spares.append(node_id)
-                self.stats.nodes_requalified += 1
-                return NodeState.HEALTHY_SPARE
+                return QualificationTicket(node_id, NodeState.HEALTHY_SPARE,
+                                           duration, sweeps, records)
             self.stats.sweeps_failed += 1
-            res = self.triage.run(
+            res: TriageResult = self.triage.run(
                 node_id, self.control.error_signals(node_id),
                 self.control.now(), self.control.remediate,
                 lambda nid: single_pass(self.backend, nid, self.sweep_cfg))
             self.stats.triages_run += 1
             self.stats.human_seconds += res.human_s
             self.stats.downtime_seconds += res.elapsed_s
+            duration += res.elapsed_s
+            records.append(("triage", res))
             if res.outcome == TriageOutcome.TERMINATED:
-                self.state[node_id] = NodeState.TERMINATED
-                self.stats.nodes_terminated += 1
-                return NodeState.TERMINATED
+                return QualificationTicket(node_id, NodeState.TERMINATED,
+                                           duration, sweeps, records)
             # else: returned to sweep — loop re-sweeps
-        self.state[node_id] = NodeState.TERMINATED
-        self.stats.nodes_terminated += 1
-        return NodeState.TERMINATED
+        return QualificationTicket(node_id, NodeState.TERMINATED,
+                                   duration, sweeps, records)
+
+    def complete_qualification(self, ticket: QualificationTicket
+                               ) -> NodeState:
+        """Apply a qualification outcome to the pools (idempotent)."""
+        if ticket.applied:
+            return ticket.outcome
+        ticket.applied = True
+        if ticket.outcome == NodeState.HEALTHY_SPARE:
+            self.return_spare(ticket.node_id)
+            self.stats.nodes_requalified += 1
+        else:
+            self.state[ticket.node_id] = NodeState.TERMINATED
+            self.stats.nodes_terminated += 1
+        return ticket.outcome
+
+    def qualify(self, node_id: int) -> NodeState:
+        """Synchronous qualification: begin + complete in one call."""
+        return self.complete_qualification(self.begin_qualification(node_id))
 
     def qualify_all_quarantined(self) -> None:
-        for nid, st in list(self.state.items()):
-            if st == NodeState.QUARANTINED:
-                self.qualify(nid)
+        for nid in self.quarantined():
+            self.qualify(nid)
 
 
 def single_pass(backend: SweepBackend, node_id: int,

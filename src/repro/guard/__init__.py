@@ -1,0 +1,31 @@
+"""``repro.guard`` — the one public entry point to the Guard closed loop.
+
+  session     GuardSession facade + Tier ablation builders (Fig. 1, §7)
+  events      typed GuardEvent hierarchy, EventBus, trace/JSONL sinks
+  scheduler   non-blocking offline-qualification queue (§5)
+  hook        Trainer StepHook adapter: step timings → Frames → monitor
+
+Everything above the substrate protocols (``ClusterControl``,
+``SweepBackend``, telemetry ``Collector``) goes through this package;
+consumers should not wire ``OnlineMonitor``/``HealthManager`` by hand.
+"""
+from repro.guard.events import (EVENT_TYPES, CheckpointSaved, CrashDetected,
+                                EventBus, GuardEvent, JobRestart, JsonlSink,
+                                NodeProvisioned, NodeQuarantined, NodeSwapped,
+                                NodeTerminated, StragglerCleared,
+                                StragglerFlagged, SweepFinished, SweepStarted,
+                                TraceSink, TriageStage)
+from repro.guard.hook import (GuardStepHook, LocalHostControl,
+                              LocalSweepBackend)
+from repro.guard.scheduler import SweepScheduler
+from repro.guard.session import (CheckpointOutcome, GuardSession, Tier,
+                                 WindowOutcome)
+
+__all__ = [
+    "CheckpointOutcome", "CheckpointSaved", "CrashDetected", "EVENT_TYPES",
+    "EventBus", "GuardEvent", "GuardSession", "GuardStepHook", "JobRestart",
+    "JsonlSink", "LocalHostControl", "LocalSweepBackend", "NodeProvisioned",
+    "NodeQuarantined", "NodeSwapped", "NodeTerminated", "StragglerCleared",
+    "StragglerFlagged", "SweepFinished", "SweepScheduler", "SweepStarted",
+    "Tier", "TraceSink", "TriageStage", "WindowOutcome",
+]

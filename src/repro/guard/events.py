@@ -1,0 +1,233 @@
+"""Typed Guard control-plane events and the central event bus.
+
+Every state transition in the closed loop (Fig. 1) — online detection
+verdicts, mitigations, crashes, offline qualification progress,
+checkpoint boundaries — is published as one ``GuardEvent`` subclass on a
+``GuardSession``'s ``EventBus``. Consumers attach *sinks* (an in-memory
+trace for analysis, a JSONL file for durable audit logs) or *subscribe*
+to specific event types with callbacks; the simulator, the benchmarks
+and the trainer adapter all read the same taxonomy instead of the ad-hoc
+dict records the pre-session code accumulated.
+
+Events are frozen dataclasses: a ``kind`` string (stable wire name), the
+session time ``t`` and global training ``step`` they occurred at, plus
+typed payload fields. ``to_dict`` gives the flat JSON form used by the
+JSONL sink and by ``RunResult.events``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, ClassVar, Dict, IO, List, Optional, Tuple, Type
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardEvent:
+    """Base class: when (session seconds / global step) something happened."""
+    kind: ClassVar[str] = "event"
+    t: float
+    step: int
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["kind"] = self.kind
+        return d
+
+
+# --------------------------------------------------------------- detection
+
+@dataclasses.dataclass(frozen=True)
+class StragglerFlagged(GuardEvent):
+    """Online detector latched a node; ``action`` is the policy tier."""
+    kind: ClassVar[str] = "straggler_flagged"
+    node_id: int = -1
+    action: str = ""
+    reason: str = ""
+    slowdown: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerCleared(GuardEvent):
+    """A previously flagged node unlatched (hysteresis windows elapsed)."""
+    kind: ClassVar[str] = "straggler_cleared"
+    node_id: int = -1
+
+
+# -------------------------------------------------------------- mitigation
+
+@dataclasses.dataclass(frozen=True)
+class NodeSwapped(GuardEvent):
+    """``old`` left the job, ``new`` (a healthy spare) took its place."""
+    kind: ClassVar[str] = "swap"
+    old: int = -1
+    new: int = -1
+    reason: str = ""
+    deferred: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeQuarantined(GuardEvent):
+    kind: ClassVar[str] = "quarantine"
+    node_id: int = -1
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeTerminated(GuardEvent):
+    kind: ClassVar[str] = "terminate"
+    node_id: int = -1
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeProvisioned(GuardEvent):
+    """A brand-new node entered the spare pool (after admission checks)."""
+    kind: ClassVar[str] = "provision"
+    node_id: int = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashDetected(GuardEvent):
+    """Fail-stop hardware failure interrupted the job."""
+    kind: ClassVar[str] = "crash"
+    nodes: Tuple[int, ...] = ()
+    lost_steps: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class JobRestart(GuardEvent):
+    """The job restarted; ``lost_steps`` is the rewind to last checkpoint."""
+    kind: ClassVar[str] = "restart"
+    reason: str = ""
+    lost_steps: int = 0
+    rewind: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointSaved(GuardEvent):
+    """Checkpoint boundary; ``applied_swaps`` deferred mitigations landed."""
+    kind: ClassVar[str] = "checkpoint"
+    applied_swaps: int = 0
+
+
+# ----------------------------------------------------- offline qualification
+
+@dataclasses.dataclass(frozen=True)
+class SweepStarted(GuardEvent):
+    """Offline qualification of a quarantined node began."""
+    kind: ClassVar[str] = "sweep_start"
+    node_id: int = -1
+    enhanced: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepFinished(GuardEvent):
+    """Offline qualification concluded; ``outcome`` is the NodeState value."""
+    kind: ClassVar[str] = "sweep_finish"
+    node_id: int = -1
+    outcome: str = ""
+    duration_s: float = 0.0
+    sweeps: int = 0
+    failures: Tuple[str, ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class TriageStage(GuardEvent):
+    """One remediation workflow ran during qualification (§6 FSM)."""
+    kind: ClassVar[str] = "triage"
+    node_id: int = -1
+    stages: Tuple[str, ...] = ()
+    outcome: str = ""
+    reason: str = ""
+
+
+EVENT_TYPES: Tuple[Type[GuardEvent], ...] = (
+    StragglerFlagged, StragglerCleared, NodeSwapped, NodeQuarantined,
+    NodeTerminated, NodeProvisioned, CrashDetected, JobRestart,
+    CheckpointSaved, SweepStarted, SweepFinished, TriageStage,
+)
+
+
+# ------------------------------------------------------------------- sinks
+
+class TraceSink:
+    """In-memory event trace (the default sink on every session)."""
+
+    def __init__(self):
+        self.events: List[GuardEvent] = []
+
+    def emit(self, ev: GuardEvent) -> None:
+        self.events.append(ev)
+
+    def of_kind(self, kind: str) -> List[GuardEvent]:
+        return [e for e in self.events if e.kind == kind]
+
+    def as_dicts(self) -> List[Dict[str, object]]:
+        return [e.to_dict() for e in self.events]
+
+    def clear(self) -> None:
+        self.events.clear()
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+class JsonlSink:
+    """Durable audit log: one JSON object per event, append-only."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh: Optional[IO[str]] = open(path, "a")
+
+    def emit(self, ev: GuardEvent) -> None:
+        if self._fh is None:
+            raise ValueError(f"JsonlSink({self.path}) is closed")
+        json.dump(ev.to_dict(), self._fh)
+        self._fh.write("\n")
+        # an audit log must survive the process dying mid-incident — the
+        # exact scenario it exists to explain
+        self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __enter__(self) -> "JsonlSink":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class EventBus:
+    """Central publish/subscribe fan-out for GuardEvents.
+
+    Sinks receive every event; subscribers receive only the event types
+    (including subclasses) they registered for. Publication order is
+    sinks first, then subscribers, both in attach order.
+    """
+
+    def __init__(self):
+        self._sinks: List[object] = []
+        self._subs: List[Tuple[Type[GuardEvent],
+                               Callable[[GuardEvent], None]]] = []
+
+    def attach(self, sink) -> None:
+        """Attach a sink (anything with ``emit(event)``)."""
+        self._sinks.append(sink)
+
+    def detach(self, sink) -> None:
+        self._sinks.remove(sink)
+
+    def subscribe(self, event_type: Type[GuardEvent],
+                  fn: Callable[[GuardEvent], None]) -> None:
+        self._subs.append((event_type, fn))
+
+    def publish(self, ev: GuardEvent) -> GuardEvent:
+        for sink in self._sinks:
+            sink.emit(ev)
+        for typ, fn in self._subs:
+            if isinstance(ev, typ):
+                fn(ev)
+        return ev

@@ -1,0 +1,245 @@
+"""Trainer → Guard adapter: real step timings become telemetry Frames.
+
+``GuardStepHook`` implements the trainer's ``StepHook`` protocol
+(``(step, wall_s, metrics) -> bool``). It aggregates the measured
+per-step wall times into evaluation windows, builds real ``Frame``s —
+this host's window-mean step time alongside its peers' — and feeds them
+through the session's monitor → policy → manager pipeline. When the
+tiered policy fires an IMMEDIATE restart for this host's node, the hook
+returns True and the trainer rewinds to its last checkpoint: the full
+Fig.-1 loop, driven by actual training-step measurements instead of the
+hand-rolled boolean hooks the examples used before.
+
+On a multi-host deployment each host reports its own barrier time and
+the frames are assembled fleet-side; in the single-process setting the
+hook synthesizes healthy peer timings around the measured baseline so
+the peer-relative detector has a population to score against
+(``n_peers``, deterministic via ``seed``).
+
+``LocalHostControl`` / ``LocalSweepBackend`` are the minimal substrate
+implementations for a training process with no cluster control plane:
+swaps are bookkeeping, restarts raise the hook's restart flag, and
+qualification sweeps trivially pass (there is no hardware to probe).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.detector import DetectorConfig
+from repro.core.sweep import SweepReference
+from repro.core.telemetry import Frame
+from repro.core.triage import ErrorSignals
+from repro.guard.events import NodeSwapped
+from repro.guard.session import GuardSession, Tier
+
+
+class LocalHostControl:
+    """ClusterControl for a single training process (no real fleet)."""
+
+    def __init__(self, next_provision_id: int = 1000):
+        self.t = 0.0
+        self.swaps: List[tuple] = []
+        self.restarts: List[str] = []
+        self._next = next_provision_id
+
+    def swap_node(self, old: int, new: int) -> None:
+        self.swaps.append((old, new))
+
+    def restart_job(self, reason: str) -> None:
+        self.restarts.append(reason)
+
+    def provision_node(self) -> int:
+        nid = self._next
+        self._next += 1
+        return nid
+
+    def error_signals(self, node_id: int) -> ErrorSignals:
+        return ErrorSignals()
+
+    def remediate(self, node_id: int, stage: str) -> None:
+        pass
+
+    def now(self) -> float:
+        return self.t
+
+
+class LocalSweepBackend:
+    """SweepBackend stub for hosts with nothing to probe offline: every
+    probe reports exactly the reference, so qualification passes."""
+
+    def __init__(self, devices: int = 1):
+        self._devices = devices
+        self._ref = SweepReference(device_tflops=100.0, intra_bw_gbps=100.0,
+                                   pair_step_time=1.0)
+
+    def device_count(self, node_id: int) -> int:
+        return self._devices
+
+    def compute_probe(self, node_id: int, device: int,
+                      seconds: float) -> float:
+        return self._ref.device_tflops
+
+    def intra_bw_probe(self, node_id: int, dev_a: int, dev_b: int) -> float:
+        return self._ref.intra_bw_gbps
+
+    def multi_node_probe(self, node_ids: Sequence[int],
+                         steps: int) -> np.ndarray:
+        return np.full(steps, self._ref.pair_step_time)
+
+    def reference(self) -> SweepReference:
+        return self._ref
+
+
+@dataclasses.dataclass
+class _Stall:
+    """A synthetic fault window: measured wall times are scaled by
+    ``factor`` for ``steps`` steps starting at ``at_step`` (simulates a
+    stalled/degraded host without burning real wall-clock)."""
+    at_step: int
+    factor: float
+    steps: int
+
+
+class GuardStepHook:
+    """StepHook adapter feeding trainer step timings into a GuardSession."""
+
+    def __init__(self, session: Optional[GuardSession] = None,
+                 node_id: int = 0, n_peers: int = 15,
+                 window_steps: int = 6, n_spares: int = 2,
+                 peer_jitter: float = 0.01, seed: int = 0,
+                 warmup_windows: int = 1, baseline_alpha: float = 0.25,
+                 detector_cfg: Optional[DetectorConfig] = None):
+        owns_session = session is None
+        if owns_session:
+            control = LocalHostControl()
+            session = GuardSession.from_tier(
+                Tier.ONLINE, control, LocalSweepBackend(),
+                detector_cfg=detector_cfg)
+        self.session = session
+        self.control = session.control
+        self.node_id = node_id
+        self.window_steps = window_steps
+        self.peer_ids = [node_id + 1 + i for i in range(n_peers)]
+        self.peer_jitter = peer_jitter
+        # the first window(s) carry JIT compilation / cache-warm spikes;
+        # real fleets re-baseline after (re)start for the same reason
+        self.warmup_windows = warmup_windows
+        # synthetic peers track the host's healthy drift slowly (EMA of
+        # unflagged window medians) so benign whole-job slowdown is not
+        # mistaken for this one node straggling
+        self.baseline_alpha = baseline_alpha
+        self.rng = np.random.RandomState(seed)
+        self._walls: List[float] = []
+        self._windows_seen = 0
+        self._baseline: Optional[float] = None
+        self._stalls: List[_Stall] = []
+        self._restart_pending = False
+        self.frames_fed = 0
+        self.restarts_requested = 0
+
+        # register the synthetic population only on a session we built
+        # ourselves: a caller-supplied session already has real node
+        # pools, and re-registering in-job ids as spares would corrupt
+        # them (the caller must register node_id and the peer ids)
+        if owns_session:
+            session.register_active([node_id, *self.peer_ids])
+            session.register_spares(
+                [max(self.peer_ids, default=node_id) + 1 + i
+                 for i in range(n_spares)])
+        # follow our own replacement: after an immediate swap this host
+        # reports under its new node identity
+        session.bus.subscribe(NodeSwapped, self._on_swap)
+
+    # -------------------------------------------------------------- faults
+
+    def inject_stall(self, at_step: int, factor: float = 8.0,
+                     steps: int = 1) -> None:
+        """Scale this host's *measured* wall time for a step range —
+        deterministic stand-in for an actual stall/slowdown."""
+        self._stalls.append(_Stall(at_step, factor, steps))
+
+    def _stall_factor(self, step: int) -> float:
+        f = 1.0
+        for s in self._stalls:
+            if s.at_step <= step < s.at_step + s.steps:
+                f *= s.factor
+        return f
+
+    # ------------------------------------------------------------ protocol
+
+    def __call__(self, step: int, wall_s: float,
+                 metrics: Dict[str, float]) -> bool:
+        if self._restart_pending:
+            # deferred swaps landed at the last checkpoint: the manager
+            # already replaced the node(s); rewind the job now
+            self._restart_pending = False
+            self._walls.clear()
+            self.restarts_requested += 1
+            return True
+        wall = wall_s * self._stall_factor(step)
+        self._walls.append(wall)
+        if isinstance(self.control, LocalHostControl):
+            # the local control has no other clock source; a real
+            # substrate (e.g. the simulator) advances its own time
+            self.control.t += wall
+        if len(self._walls) < self.window_steps:
+            return False
+        self._windows_seen += 1
+        if self._windows_seen <= self.warmup_windows:
+            self._walls.clear()          # compile/warm spikes: re-baseline
+            return False
+        frame = self._make_frame(step)
+        self._walls.clear()
+        outcome = self.session.observe(frame)
+        if outcome.restarts:
+            self.restarts_requested += 1
+            # the faulty node was swapped out: its injected fault leaves
+            # the job with it (future-scheduled stalls stay armed)
+            self._stalls = [s for s in self._stalls if s.at_step > step]
+            return True
+        return False
+
+    def on_restart(self, step: int) -> None:
+        """Trainer notification: a rewind happened. Drop the partial
+        window and re-enter warmup: the first window(s) after a restore
+        carry checkpoint-load / re-JIT spikes exactly like job start, and
+        scoring them would flag the freshly swapped-in node and cascade
+        into further spurious restarts."""
+        self._walls.clear()
+        self._windows_seen = 0
+
+    def on_checkpoint(self, step: int) -> None:
+        """Trainer notification: a checkpoint was saved. Deferred and
+        pending-patience mitigations land here (§4.2) — if the manager
+        applied swaps, the next step call requests the rewind."""
+        ck = self.session.on_checkpoint(step=step)
+        if ck.applied_swaps:
+            self._restart_pending = True
+
+    # ------------------------------------------------------------ internal
+
+    def _make_frame(self, step: int) -> Frame:
+        mine = float(np.mean(self._walls))
+        med = float(np.median(self._walls))
+        if self._baseline is None:
+            self._baseline = med
+        elif not self.session.monitor.detector.is_latched(self.node_id) \
+                and med < self._baseline * 1.5:
+            a = self.baseline_alpha
+            self._baseline = (1 - a) * self._baseline + a * med
+        peers = self._baseline * (
+            1.0 + self.rng.normal(0.0, self.peer_jitter,
+                                  len(self.peer_ids)))
+        node_ids = np.asarray([self.node_id, *self.peer_ids], np.int64)
+        times = np.concatenate([[mine], peers])
+        self.frames_fed += 1
+        return Frame(t=self.control.now(), step=step, node_ids=node_ids,
+                     metrics={"step_time": times},
+                     valid=np.ones(len(node_ids), bool))
+
+    def _on_swap(self, ev: NodeSwapped) -> None:
+        if ev.old == self.node_id:
+            self.node_id = ev.new

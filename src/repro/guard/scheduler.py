@@ -1,0 +1,141 @@
+"""Non-blocking offline-qualification scheduler.
+
+The paper's qualification pipeline (§5) is *event-driven and offline*: a
+quarantined node is swept/triaged on the side while the job keeps
+training, and only re-enters the healthy pool once it passes. The
+pre-session code instead called ``qualify_all_quarantined()`` inline at
+checkpoint boundaries — instantaneous in simulated time and serialized
+with the job.
+
+``SweepScheduler`` restores the real semantics: quarantined nodes queue
+up, at most ``concurrency`` qualifications are in flight, and each one
+occupies the sweep-bench for the simulated ``duration_s`` its
+sweep→triage loop consumed. ``advance(now)`` is the only clock input —
+call it whenever job time moves (the simulator does so every step) and
+it starts queued work and lands finished work, publishing
+``SweepStarted`` / ``TriageStage`` / ``SweepFinished`` events on the
+session bus. ``drain(now)`` force-completes everything for end-of-run
+accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Set
+
+from repro.core.health_manager import HealthManager, QualificationTicket
+from repro.guard.events import (EventBus, SweepFinished, SweepStarted,
+                                TriageStage)
+
+
+@dataclasses.dataclass
+class InFlight:
+    ticket: QualificationTicket
+    started_t: float
+    finish_t: float
+
+
+class SweepScheduler:
+    """Queues quarantined nodes and overlaps qualification with the job."""
+
+    def __init__(self, manager: HealthManager,
+                 bus: Optional[EventBus] = None,
+                 concurrency: int = 2):
+        assert concurrency >= 1
+        self.manager = manager
+        self.bus = bus
+        self.concurrency = concurrency
+        self.queue: List[int] = []
+        self.in_flight: List[InFlight] = []
+        self._tracked: Set[int] = set()
+        self.completed: List[QualificationTicket] = []
+        self._step = 0               # last known global step, for events
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, node_id: int) -> bool:
+        """Enqueue one quarantined node; no-op if already queued/running."""
+        if node_id in self._tracked:
+            return False
+        self._tracked.add(node_id)
+        self.queue.append(node_id)
+        return True
+
+    def submit_quarantined(self) -> int:
+        """Scan the manager for quarantined nodes and enqueue the new ones."""
+        return sum(self.submit(nid) for nid in self.manager.quarantined())
+
+    # ------------------------------------------------------------- clock
+
+    @property
+    def busy(self) -> int:
+        return len(self.in_flight)
+
+    @property
+    def backlog(self) -> int:
+        return len(self.queue)
+
+    def next_finish_t(self) -> Optional[float]:
+        if not self.in_flight:
+            return None
+        return min(f.finish_t for f in self.in_flight)
+
+    def advance(self, now: float, step: int = -1
+                ) -> List[QualificationTicket]:
+        """Land finished qualifications and start queued ones; returns the
+        tickets that completed at or before ``now``."""
+        if step >= 0:
+            self._step = step
+        done: List[QualificationTicket] = []
+        still: List[InFlight] = []
+        for f in self.in_flight:
+            if f.finish_t <= now:
+                self._finish(f, f.finish_t)
+                done.append(f.ticket)
+            else:
+                still.append(f)
+        self.in_flight = still
+        while self.queue and len(self.in_flight) < self.concurrency:
+            nid = self.queue.pop(0)
+            ticket = self.manager.begin_qualification(nid)
+            self._publish(SweepStarted(
+                t=now, step=self._step, node_id=nid,
+                enhanced=self.manager.enhanced_sweep))
+            self.in_flight.append(
+                InFlight(ticket, now, now + ticket.duration_s))
+        return done
+
+    def drain(self, now: float) -> List[QualificationTicket]:
+        """Force-complete all queued and in-flight work (end of run)."""
+        done: List[QualificationTicket] = []
+        while self.queue or self.in_flight:
+            done.extend(self.advance(now))   # start queued work
+            for f in self.in_flight:         # then land it immediately
+                self._finish(f, max(now, f.finish_t))
+                done.append(f.ticket)
+            self.in_flight = []
+        return done
+
+    # ----------------------------------------------------------- internal
+
+    def _finish(self, f: InFlight, at: float) -> None:
+        ticket = f.ticket
+        outcome = self.manager.complete_qualification(ticket)
+        self._tracked.discard(ticket.node_id)
+        self.completed.append(ticket)
+        failures: List[str] = []
+        for kind, rec in ticket.records:
+            if kind == "triage":
+                self._publish(TriageStage(
+                    t=at, step=self._step, node_id=ticket.node_id,
+                    stages=tuple(rec.stages_run), outcome=rec.outcome.value,
+                    reason=rec.reason))
+            else:
+                failures.extend(rec.failures)
+        self._publish(SweepFinished(
+            t=at, step=self._step, node_id=ticket.node_id,
+            outcome=outcome.value, duration_s=ticket.duration_s,
+            sweeps=ticket.sweeps, failures=tuple(failures)))
+
+    def _publish(self, ev) -> None:
+        if self.bus is not None:
+            self.bus.publish(ev)

@@ -1,0 +1,337 @@
+"""The Guard control plane behind one facade: ``GuardSession``.
+
+A session owns the whole closed loop of Fig. 1 — detector + tiered
+policy (via ``OnlineMonitor``), the pool-owning ``HealthManager``, the
+non-blocking ``SweepScheduler`` — and a typed ``EventBus`` every state
+transition is published on. Substrates plug in underneath through the
+two narrow protocols (``ClusterControl``, ``SweepBackend``); the
+simulated fleet implements both, and so does a real control plane.
+
+Construction mirrors the §7 ablation ladder (Table 4)::
+
+    session = GuardSession.from_tier(Tier.ENHANCED, control, backend)
+    # or the named builders: .burnin() .node_sweep() .online() .enhanced()
+
+Lifecycle::
+
+    session.register_active(job_nodes); session.register_spares(spares)
+    outcome = session.observe(frame)          # one evaluation window
+    for reason in outcome.restarts: ...       # job must restart now
+    ck = session.on_checkpoint()              # deferred swaps + sweep queue
+    session.advance(now)                      # qualification overlaps job
+    session.handle_crash(dead_nodes)          # fail-stop batch replacement
+
+Telemetry: ``session.trace`` is the in-memory event trace;
+``session.add_sink(JsonlSink(path))`` streams the same events to disk.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, List, Optional, Sequence, Set
+
+from repro.core.detector import DetectorConfig
+from repro.core.health_manager import (ClusterControl, HealthManager,
+                                       ManagerStats, NodeState)
+from repro.core.monitor import HealthEvent, OnlineMonitor
+from repro.core.policy import PolicyConfig
+from repro.core.sweep import SweepBackend, SweepConfig
+from repro.core.telemetry import Frame
+from repro.core.triage import TriageConfig
+from repro.guard.events import (CheckpointSaved, CrashDetected, EventBus,
+                                GuardEvent, NodeProvisioned, NodeQuarantined,
+                                NodeSwapped, NodeTerminated, StragglerCleared,
+                                StragglerFlagged, TraceSink)
+from repro.guard.scheduler import SweepScheduler
+
+
+class Tier(enum.IntEnum):
+    """The §7 ablation ladder (Table 4), cumulative."""
+    BURNIN = 1        # burn-in admission only; greys handled by humans
+    NODE_SWEEP = 2    # + offline single-node sweep tooling
+    ONLINE = 3        # + Guard online monitoring and tiered mitigation
+    ENHANCED = 4      # + enhanced sweep (multi-node stage, long burns)
+
+
+@dataclasses.dataclass
+class WindowOutcome:
+    """What one evaluation window changed."""
+    events: List[HealthEvent]         # raw monitor events this window
+    flagged: List[int]                # nodes newly decided on
+    cleared: List[int]                # nodes whose latch released
+    restarts: List[str]               # reasons for immediate restarts
+
+
+@dataclasses.dataclass
+class CheckpointOutcome:
+    applied_swaps: int                # deferred mitigations landed
+    submitted: int                    # nodes newly queued for sweeps
+
+
+class GuardSession:
+    """Facade over the full Guard closed loop for one training job."""
+
+    def __init__(self, control: ClusterControl, sweep_backend: SweepBackend,
+                 tier: Tier = Tier.ENHANCED,
+                 detector_cfg: Optional[DetectorConfig] = None,
+                 policy_cfg: Optional[PolicyConfig] = None,
+                 sweep_cfg: Optional[SweepConfig] = None,
+                 triage_cfg: Optional[TriageConfig] = None,
+                 pending_patience_s: float = 1800.0,
+                 sweep_concurrency: int = 2,
+                 on_provision: Optional[Callable[[int], None]] = None,
+                 bus: Optional[EventBus] = None):
+        self.tier = Tier(tier)
+        self.control = control
+        self.bus = bus or EventBus()
+        self.trace = TraceSink()
+        self.bus.attach(self.trace)
+
+        self.monitor = OnlineMonitor(detector_cfg, policy_cfg)
+        self.manager = HealthManager(
+            control, sweep_backend, self.monitor,
+            sweep_cfg=sweep_cfg, triage_cfg=triage_cfg,
+            enhanced_sweep=self.tier == Tier.ENHANCED,
+            pending_patience_s=pending_patience_s,
+            on_provision=on_provision,
+            notify=self._on_manager_notify)
+        self.scheduler = SweepScheduler(self.manager, self.bus,
+                                        concurrency=sweep_concurrency)
+        self._step = 0
+        self._flagged: Set[int] = set()
+
+    # ------------------------------------------------------------ builders
+
+    @classmethod
+    def from_tier(cls, tier: Tier, control: ClusterControl,
+                  sweep_backend: SweepBackend, **kw) -> "GuardSession":
+        """Build the session for one Table-4 ablation tier."""
+        return cls(control, sweep_backend, tier=Tier(tier), **kw)
+
+    @classmethod
+    def burnin(cls, control, sweep_backend, **kw) -> "GuardSession":
+        return cls.from_tier(Tier.BURNIN, control, sweep_backend, **kw)
+
+    @classmethod
+    def node_sweep(cls, control, sweep_backend, **kw) -> "GuardSession":
+        return cls.from_tier(Tier.NODE_SWEEP, control, sweep_backend, **kw)
+
+    @classmethod
+    def online(cls, control, sweep_backend, **kw) -> "GuardSession":
+        return cls.from_tier(Tier.ONLINE, control, sweep_backend, **kw)
+
+    @classmethod
+    def enhanced(cls, control, sweep_backend, **kw) -> "GuardSession":
+        return cls.from_tier(Tier.ENHANCED, control, sweep_backend, **kw)
+
+    # ----------------------------------------------------------- properties
+
+    @property
+    def online_monitoring(self) -> bool:
+        """Tiers 3-4 run the online detection loop."""
+        return self.tier >= Tier.ONLINE
+
+    @property
+    def sweep_tooling(self) -> bool:
+        """Tiers 2-4 have offline sweep tooling available."""
+        return self.tier >= Tier.NODE_SWEEP
+
+    @property
+    def stats(self) -> ManagerStats:
+        return self.manager.stats
+
+    @property
+    def spares_free(self) -> int:
+        return self.manager.spare_count
+
+    def spare_ids(self) -> List[int]:
+        """Current healthy-spare ids (copy; e.g. sweep-buddy candidates)."""
+        return list(self.manager.spares)
+
+    def node_state(self, node_id: int) -> Optional[NodeState]:
+        return self.manager.state.get(node_id)
+
+    def events(self) -> List[GuardEvent]:
+        return list(self.trace.events)
+
+    def add_sink(self, sink) -> None:
+        self.bus.attach(sink)
+
+    def drain_human_hours(self) -> float:
+        """Hand the operator-attention accumulated since the last call to
+        the caller's accounting (sweeps/triage consume human time)."""
+        h = self.manager.stats.human_seconds / 3600.0
+        self.manager.stats.human_seconds = 0.0
+        return h
+
+    # --------------------------------------------------------- registration
+
+    def register_active(self, node_ids: Sequence[int]) -> None:
+        for nid in node_ids:
+            self.manager.register(int(nid), NodeState.ACTIVE)
+
+    def register_spares(self, node_ids: Sequence[int]) -> None:
+        for nid in node_ids:
+            self.manager.register(int(nid), NodeState.HEALTHY_SPARE)
+
+    # ----------------------------------------------------------- the loop
+
+    def observe(self, frame: Frame) -> WindowOutcome:
+        """Feed one telemetry window through detector → policy → manager.
+
+        Publishes StragglerFlagged / StragglerCleared events and reports
+        any immediate restarts the tiered policy demanded (the caller owns
+        job-time accounting for those)."""
+        self._step = frame.step
+        out = WindowOutcome([], [], [], [])
+        if not self.online_monitoring:
+            return out
+        for ev in self.monitor.observe(frame):
+            out.events.append(ev)
+            out.flagged.append(ev.decision.node_id)
+            self._flagged.add(ev.decision.node_id)
+            self.bus.publish(StragglerFlagged(
+                t=frame.t, step=frame.step, node_id=ev.decision.node_id,
+                action=ev.decision.action.value, reason=ev.decision.reason,
+                slowdown=ev.decision.slowdown))
+            pre = self.manager.stats.immediate_restarts
+            self.manager.handle(ev)
+            if self.manager.stats.immediate_restarts > pre:
+                out.restarts.append(ev.decision.reason)
+        # hysteresis released: report clears for nodes still in the job
+        for nid in sorted(self._flagged):
+            if not self.monitor.detector.is_latched(nid):
+                self._flagged.discard(nid)
+                if self.manager.state.get(nid) in (NodeState.ACTIVE,
+                                                   NodeState.PENDING):
+                    out.cleared.append(nid)
+                    self.bus.publish(StragglerCleared(
+                        t=frame.t, step=frame.step, node_id=nid))
+        self.advance(frame.t)
+        return out
+
+    def on_checkpoint(self, now: Optional[float] = None,
+                      step: Optional[int] = None) -> CheckpointOutcome:
+        """Checkpoint boundary: land deferred mitigations (online tiers),
+        queue quarantined nodes for offline qualification, and let the
+        sweep bench make progress."""
+        t = self.control.now() if now is None else now
+        self._note_step(step)
+        applied = self.manager.on_checkpoint() if self.online_monitoring \
+            else 0
+        self.bus.publish(CheckpointSaved(t=t, step=self._step,
+                                         applied_swaps=applied))
+        submitted = 0
+        if self.sweep_tooling:
+            submitted = self.scheduler.submit_quarantined()
+        self.advance(t)
+        return CheckpointOutcome(applied, submitted)
+
+    def advance(self, now: float, step: Optional[int] = None) -> None:
+        """Clock input: overlapped offline qualification catches up to
+        job time ``now`` (starts queued sweeps, lands finished ones).
+        Pass the global training ``step`` when known so published events
+        carry it even in tiers without online monitoring."""
+        self._note_step(step)
+        if self.sweep_tooling:
+            self.scheduler.advance(now, step=self._step)
+
+    def handle_crash(self, dead: Sequence[int], lost_steps: int = 0,
+                     step: Optional[int] = None) -> List[int]:
+        """Fail-stop batch replacement: every dead node is swapped for a
+        healthy spare in the same restart; the hardware leaves with the
+        node. Returns the replacement ids."""
+        now = self.control.now()
+        self._note_step(step)
+        self.bus.publish(CrashDetected(t=now, step=self._step,
+                                       nodes=tuple(int(n) for n in dead),
+                                       lost_steps=lost_steps))
+        new_ids: List[int] = []
+        for bad in dead:
+            bad = int(bad)
+            spare = self.manager.take_spare()
+            self.control.swap_node(bad, spare)
+            self.manager.retire(bad, reason="fail-stop crash", crashed=True)
+            self.monitor.node_replaced(bad)
+            self.bus.publish(NodeSwapped(t=now, step=self._step, old=bad,
+                                         new=spare,
+                                         reason="fail-stop crash"))
+            new_ids.append(spare)
+        return new_ids
+
+    def replace_node(self, bad: int, reason: str,
+                     quarantine: bool = True,
+                     step: Optional[int] = None) -> int:
+        """Pull ``bad`` out of the job for a healthy spare (manual-hunt /
+        operator path). ``quarantine=True`` routes it to the offline
+        qualification queue; ``False`` retires it outright (no tooling to
+        verify with — the burn-in-only tier)."""
+        now = self.control.now()
+        self._note_step(step)
+        spare = self.manager.take_spare()
+        self.control.swap_node(bad, spare)
+        self.monitor.node_replaced(bad)
+        self.bus.publish(NodeSwapped(t=now, step=self._step, old=bad,
+                                     new=spare, reason=reason))
+        if quarantine and self.sweep_tooling:
+            self.manager.state[bad] = NodeState.QUARANTINED
+            self.bus.publish(NodeQuarantined(t=now, step=self._step,
+                                             node_id=bad, reason=reason))
+            self.scheduler.submit(bad)
+        else:
+            self.manager.retire(bad, reason=reason)
+        return spare
+
+    def take_spare(self) -> int:
+        return self.manager.take_spare()
+
+    def return_spare(self, node_id: int) -> None:
+        self.manager.return_spare(node_id)
+
+    def top_up_spares(self, target: int) -> int:
+        """Background warm-pool maintenance: provision (and admit) new
+        nodes until ``target`` healthy spares are available."""
+        n = 0
+        while self.manager.spare_count < target:
+            self.manager.provision_spare()
+            n += 1
+        return n
+
+    def publish(self, ev: GuardEvent) -> GuardEvent:
+        return self.bus.publish(ev)
+
+    # ----------------------------------------------------------- internals
+
+    def _note_step(self, step: Optional[int]) -> None:
+        if step is not None:
+            self._step = step
+
+    def _on_manager_notify(self, topic: str, payload: dict) -> None:
+        """Translate manager-level notifications into typed events."""
+        t = self.control.now()
+        if topic == "swap":
+            self.bus.publish(NodeSwapped(
+                t=t, step=self._step, old=payload["old"],
+                new=payload["new"], reason=payload.get("reason", ""),
+                deferred=payload.get("deferred", False)))
+            self.bus.publish(NodeQuarantined(
+                t=t, step=self._step, node_id=payload["old"],
+                reason=payload.get("reason", "")))
+            if self.sweep_tooling:      # event-driven qualification (§5)
+                self.scheduler.submit(payload["old"])
+        elif topic == "provision":
+            self.bus.publish(NodeProvisioned(
+                t=t, step=self._step, node_id=payload["node_id"]))
+        elif topic == "terminate":
+            self.bus.publish(NodeTerminated(
+                t=t, step=self._step, node_id=payload["node_id"],
+                reason=payload.get("reason", "")))
+
+    def step_hook(self, **kw):
+        """Build a ``GuardStepHook`` bound to this session (see
+        ``repro.guard.hook``)."""
+        from repro.guard.hook import GuardStepHook
+        return GuardStepHook(session=self, **kw)
+
+
+__all__ = ["CheckpointOutcome", "GuardSession", "Tier", "WindowOutcome"]

@@ -87,6 +87,10 @@ class SimCluster:
         self.rng = np.random.RandomState(seed + 2)
 
         self.active = list(range(n_active))
+        # initial spare population only: once these ids are registered
+        # with a GuardSession/HealthManager, the manager owns pool
+        # membership (take_spare/return_spare) and this list is NOT kept
+        # in sync (swap_node drops a node it promotes, nothing re-adds)
         self.spares = list(range(n_active, n_active + n_spare))
         self._unprovisioned = list(range(n_active + n_spare, total))
 

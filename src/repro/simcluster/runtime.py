@@ -1,7 +1,7 @@
 """Multi-week training-run simulator — the §7 evaluation substrate.
 
 ``simulate_run`` drives a synchronous job over the simulated fleet under one
-of the four ablation tiers of Table 4:
+of the four ablation tiers of Table 4 (see ``repro.guard.Tier``):
 
   BURNIN            NCCL/burn-in only: fail-stop crashes are handled
                     (replace + restart); grey nodes persist until a human
@@ -16,6 +16,12 @@ of the four ablation tiers of Table 4:
                     and long sustained burns in qualification/admission —
                     comm-level greys stop bouncing back into the job.
 
+The whole closed loop runs through the public ``repro.guard`` API: one
+``GuardSession`` owns detection, the node pools, and the non-blocking
+sweep scheduler (offline qualification overlaps the job in simulated
+time); every incident lands on the session's event bus and comes back in
+``RunResult.events`` as typed records.
+
 Outputs: MTTF (mean active time between job-interrupting hardware
 failures), MFU (model-FLOPs utilization: completed-step FLOPs over elapsed
 wall time), mean human hours per incident, plus full step-time and event
@@ -24,25 +30,14 @@ traces for the figure-level benchmarks.
 from __future__ import annotations
 
 import dataclasses
-import enum
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.detector import DetectorConfig
-from repro.core.health_manager import HealthManager, NodeState
-from repro.core.monitor import OnlineMonitor
-from repro.core.policy import PolicyConfig
-from repro.core.sweep import SweepConfig, single_node_sweep
+from repro.core.sweep import SweepConfig, multi_node_sweep, single_node_sweep
+from repro.guard import GuardSession, JobRestart, Tier
 from repro.simcluster.cluster import SimCluster, WorkloadProfile
 from repro.simcluster.faults import FaultRates
-
-
-class Tier(enum.IntEnum):
-    BURNIN = 1
-    NODE_SWEEP = 2
-    ONLINE = 3
-    ENHANCED = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,17 +103,15 @@ class RunResult:
 
 
 def _admission_check(cluster: SimCluster, nid: int, tier: Tier,
-                     sweep_cfg: SweepConfig) -> bool:
+                     sweep_cfg: SweepConfig,
+                     buddies: List[int]) -> bool:
     """Qualify a freshly provisioned node before it becomes a spare."""
     if tier == Tier.BURNIN:
         return True                      # burn-in passes grey nodes (§5.1)
     enhanced = tier == Tier.ENHANCED
     rep = single_node_sweep(cluster, nid, sweep_cfg, enhanced=enhanced)
-    if rep.passed and enhanced:
-        from repro.core.sweep import multi_node_sweep
-        buddies = cluster.spares[:1]
-        if buddies:
-            rep = multi_node_sweep(cluster, nid, buddies, sweep_cfg)
+    if rep.passed and enhanced and buddies:
+        rep = multi_node_sweep(cluster, nid, buddies[:1], sweep_cfg)
     if not rep.passed:
         cluster.injector.clear_node(nid)  # sim shorthand for RMA/replace
     return True
@@ -130,17 +123,14 @@ def simulate_run(cfg: RunConfig) -> RunResult:
                          workload=cfg.workload, rates=cfg.rates,
                          window_steps=cfg.window_steps, seed=cfg.seed)
     sweep_cfg = SweepConfig()
-    use_online = cfg.tier >= Tier.ONLINE
-    enhanced = cfg.tier == Tier.ENHANCED
+    tier = Tier(cfg.tier)
 
-    monitor = OnlineMonitor(DetectorConfig(), PolicyConfig())
-    manager = HealthManager(cluster, cluster, monitor,
-                            sweep_cfg=sweep_cfg,
-                            enhanced_sweep=enhanced)
-    for nid in cluster.active:
-        manager.register(nid, NodeState.ACTIVE)
-    for nid in cluster.spares:
-        manager.register(nid, NodeState.HEALTHY_SPARE)
+    session = GuardSession.from_tier(
+        tier, control=cluster, sweep_backend=cluster, sweep_cfg=sweep_cfg,
+        on_provision=lambda nid: _admission_check(
+            cluster, nid, tier, sweep_cfg, session.spare_ids()))
+    session.register_active(cluster.active)
+    session.register_spares(cluster.spares)
     # pre-existing grey population (the state of the world Guard inherits)
     for nid in cluster.active:
         if rng.rand() < cfg.initial_grey_p:
@@ -153,7 +143,6 @@ def simulate_run(cfg: RunConfig) -> RunResult:
     healthy_step = cfg.workload.healthy_step_s
     last_ckpt_step = 0
     step_times: List[float] = []
-    events: List[dict] = []
     crashes = 0
     human_hours = 0.0
     incidents = 0
@@ -161,38 +150,18 @@ def simulate_run(cfg: RunConfig) -> RunResult:
     slow_since: Optional[float] = None
     hour_buf: List[float] = []
 
-    def provision_one(charge_job: bool) -> None:
-        nonlocal downtime_s
-        nid = cluster.provision_node()
-        if charge_job:
-            # pool ran dry mid-incident: the job waits for delivery
-            cluster.advance_idle(cfg.provision_delay_s)
-            downtime_s += cfg.provision_delay_s
-        _admission_check(cluster, nid, cfg.tier, sweep_cfg)
-        cluster.spares.append(nid)
-        manager.register(nid, NodeState.HEALTHY_SPARE)
-        if nid not in manager.spares:
-            manager.spares.append(nid)
-
-    def top_up_spares() -> None:
-        # background warm-pool maintenance: provisioning overlaps the job
-        while len(cluster.spares) < cfg.n_spare:
-            provision_one(charge_job=False)
-
-    def take_spare() -> int:
-        while not cluster.spares:
-            provision_one(charge_job=True)
-        nid = cluster.spares[0]
-        return nid
-
-    def restart(lost_reason: str, rewind: bool) -> None:
+    def restart(reason: str, rewind: bool) -> None:
         nonlocal last_ckpt_step, downtime_s
         cluster.advance_idle(cfg.restart_overhead_s)
         downtime_s += cfg.restart_overhead_s
+        lost = 0
         if rewind:
             lost = cluster.step - last_ckpt_step
             cluster.step = last_ckpt_step
-        cluster.restart_job(lost_reason)
+        cluster.restart_job(reason)
+        session.publish(JobRestart(t=cluster.t, step=cluster.step,
+                                   reason=reason, lost_steps=lost,
+                                   rewind=rewind))
 
     while cluster.t < duration_s:
         rec = cluster.run_step()
@@ -201,92 +170,103 @@ def simulate_run(cfg: RunConfig) -> RunResult:
         if rec["crashed"]:
             crashes += 1
             incidents += 1
-            recovery = cfg.crash_recovery_s[int(cfg.tier)]
+            recovery = cfg.crash_recovery_s[int(tier)]
             cluster.advance_idle(cfg.crash_detect_s + recovery)
             downtime_s += cfg.crash_detect_s + recovery
-            human_hours += cfg.crash_human_h[int(cfg.tier)]
+            human_hours += cfg.crash_human_h[int(tier)]
             # batch handling: every node found dead during this recovery
             # window is swapped in the same restart
             while cluster.crashed_nodes():
-                for bad in cluster.crashed_nodes():
-                    spare = take_spare()
-                    manager.state[spare] = NodeState.ACTIVE
-                    if spare in manager.spares:
-                        manager.spares.remove(spare)
-                    cluster.swap_node(bad, spare)
+                dead = cluster.crashed_nodes()
+                missing = max(0, len(dead) - session.spares_free)
+                if missing:
+                    # pool ran dry mid-incident: the job waits for delivery
+                    cluster.advance_idle(missing * cfg.provision_delay_s)
+                    downtime_s += missing * cfg.provision_delay_s
+                session.handle_crash(
+                    dead, lost_steps=cluster.step - last_ckpt_step,
+                    step=cluster.step)
+                for bad in dead:
                     cluster.injector.clear_node(bad)  # hw leaves with node
-                    manager.state[bad] = NodeState.TERMINATED
-                    monitor.node_replaced(bad)
             restart("fail-stop crash", rewind=True)
-            events.append({"t": cluster.t, "kind": "crash"})
             continue
 
         step_times.append(rec["step_time"])
         hour_buf.append(rec["step_time"])
+        # offline qualification overlaps the job: let the sweep bench
+        # catch up to job time on every step
+        session.advance(cluster.t, step=cluster.step)
 
         # ---------------- online monitoring (tiers 3-4)
-        if use_online and cluster.step % cfg.window_steps == 0:
+        if session.online_monitoring and \
+                cluster.step % cfg.window_steps == 0:
             frame = cluster.collect()
             if frame is not None:
-                for ev in monitor.observe(frame):
-                    events.append({"t": cluster.t, "kind": "health_event",
-                                   "action": ev.decision.action.value,
-                                   "node": ev.decision.node_id,
-                                   "reason": ev.decision.reason})
-                    pre = manager.stats.immediate_restarts
-                    manager.handle(ev)
-                    if manager.stats.immediate_restarts > pre:
-                        incidents += 1
-                        human_hours += cfg.auto_human_h[int(cfg.tier)]
-                        restart(ev.decision.reason, rewind=True)
+                outcome = session.observe(frame)
+                for reason in outcome.restarts:
+                    incidents += 1
+                    human_hours += cfg.auto_human_h[int(tier)]
+                    restart(reason, rewind=True)
 
         # ---------------- checkpoint boundary
         if cluster.step > 0 and \
                 cluster.step % cfg.checkpoint_interval_steps == 0:
             last_ckpt_step = cluster.step
-            if use_online:
-                n = manager.on_checkpoint()
-                if n:
-                    incidents += n
-                    human_hours += n * cfg.auto_human_h[int(cfg.tier)]
-                    restart("deferred swaps", rewind=False)
-            # offline qualification runs in parallel with the job
-            manager.qualify_all_quarantined()
-            human_hours += _drain_manager_human(manager)
-            top_up_spares()
+            ck = session.on_checkpoint(now=cluster.t, step=cluster.step)
+            if ck.applied_swaps:
+                incidents += ck.applied_swaps
+                human_hours += ck.applied_swaps * cfg.auto_human_h[int(tier)]
+                restart("deferred swaps", rewind=False)
+            human_hours += session.drain_human_hours()
+            # background warm-pool maintenance overlaps the job
+            session.top_up_spares(cfg.n_spare)
 
         # ---------------- manual grey hunting (tiers 1-2)
-        if not use_online and len(hour_buf) * healthy_step >= 3600.0:
+        if not session.online_monitoring and \
+                len(hour_buf) * healthy_step >= 3600.0:
             hour_mean = float(np.mean(hour_buf))
             hour_buf.clear()
             if hour_mean > cfg.manual_trigger_ratio * healthy_step:
                 if slow_since is None:
                     slow_since = cluster.t
-                delay = cfg.manual_delay_h[int(cfg.tier)] * 3600.0
+                delay = cfg.manual_delay_h[int(tier)] * 3600.0
                 if cluster.t - slow_since >= delay:
                     slow_since = None
                     incidents += 1
-                    human_hours += cfg.manual_hours[int(cfg.tier)]
-                    hunt_dt = cfg.hunt_downtime_s[int(cfg.tier)]
+                    human_hours += cfg.manual_hours[int(tier)]
+                    hunt_dt = cfg.hunt_downtime_s[int(tier)]
                     cluster.advance_idle(hunt_dt)
                     downtime_s += hunt_dt
                     times = cluster.node_barrier_times()
                     worst = cluster.active[int(np.argmax(times))]
-                    if rng.rand() < cfg.manual_success_p[int(cfg.tier)]:
-                        spare = take_spare()
-                        cluster.spares.remove(spare)
-                        cluster.swap_node(worst, spare)
-                        if cfg.tier >= Tier.NODE_SWEEP:
-                            rep = single_node_sweep(cluster, worst, sweep_cfg)
+                    if rng.rand() < cfg.manual_success_p[int(tier)]:
+                        if not session.spares_free:
+                            # pool dry: the job waits for delivery
+                            cluster.advance_idle(cfg.provision_delay_s)
+                            downtime_s += cfg.provision_delay_s
+                        # a hand-debugged node leaves the fleet for RMA;
+                        # it is NOT requalified back into the pool — with
+                        # no online monitoring a bounced-back grey would
+                        # go unwatched until it escalates
+                        session.replace_node(
+                            worst, "manual grey-node replacement",
+                            quarantine=False, step=cluster.step)
+                        if session.sweep_tooling:
+                            # tier 2: the human confirms the diagnosis
+                            # with the sweep tooling before the RMA
+                            rep = single_node_sweep(cluster, worst,
+                                                    sweep_cfg)
                             if not rep.passed:
                                 cluster.injector.clear_node(worst)
                         else:
                             cluster.injector.clear_node(worst)
                         restart("manual grey-node replacement", rewind=False)
-                        events.append({"t": cluster.t, "kind": "manual_swap",
-                                       "node": worst})
             else:
                 slow_since = None
+
+    # land any still-running offline qualifications for final accounting
+    session.scheduler.drain(cluster.t)
+    human_hours += session.drain_human_hours()
 
     # ----------------------------------------------------------- metrics
     st = np.asarray(step_times)
@@ -296,21 +276,15 @@ def simulate_run(cfg: RunConfig) -> RunResult:
     mttf_h = active_h / max(crashes, 1)
     # MFU: completed useful FLOPs over total elapsed time
     mfu = cfg.workload.mfu_at_healthy * (steps * healthy_step) / cluster.t
+    stats = session.stats
     return RunResult(
-        tier=cfg.tier, elapsed_h=elapsed_h, active_h=active_h, steps=steps,
+        tier=tier, elapsed_h=elapsed_h, active_h=active_h, steps=steps,
         crashes=crashes, mttf_h=mttf_h, mfu=float(mfu),
         mean_step_s=float(st.mean()) if steps else float("nan"),
         p95_step_s=float(np.percentile(st, 95)) if steps else float("nan"),
         human_hours=human_hours, incidents=max(incidents, 1),
         human_h_per_incident=human_hours / max(incidents, 1),
-        guard_restarts=manager.stats.immediate_restarts,
-        deferred_swaps=manager.stats.deferred_swaps,
-        nodes_terminated=manager.stats.nodes_terminated,
-        step_times=st, events=events)
-
-
-def _drain_manager_human(manager: HealthManager) -> float:
-    """Convert newly accumulated manager human-seconds into hours once."""
-    h = manager.stats.human_seconds / 3600.0
-    manager.stats.human_seconds = 0.0
-    return h
+        guard_restarts=stats.immediate_restarts,
+        deferred_swaps=stats.deferred_swaps,
+        nodes_terminated=stats.nodes_terminated,
+        step_times=st, events=session.trace.as_dicts())

@@ -11,8 +11,11 @@ mesh.
 Guard integration: the trainer reports its per-step wall time (each host's
 time-to-barrier in a real deployment) to a ``StepHook``; when the hook
 requests a restart — Guard's IMMEDIATE tier — the trainer restores the last
-checkpoint and continues, which is exactly the closed-loop behaviour in
-Fig. 1.
+checkpoint, notifies the hook via ``on_restart`` (if present) so partial
+telemetry windows are dropped, and continues: exactly the closed-loop
+behaviour in Fig. 1. ``repro.guard.GuardStepHook`` is the production
+implementation — it turns these wall times into telemetry Frames and runs
+them through the real monitor → policy → manager pipeline.
 """
 from __future__ import annotations
 
@@ -160,12 +163,19 @@ class Trainer:
 
             if self.ckpt and step % self.cfg.ckpt_interval == 0:
                 self.ckpt.save(step, self.params, self.opt_state)
+                # checkpoint boundary: Guard lands deferred mitigations
+                # here (the hook may request a restart on the next step)
+                on_ckpt = getattr(self.hook, "on_checkpoint", None)
+                if on_ckpt:
+                    on_ckpt(step)
 
             if self.hook and self.hook(step, wall, m):
                 # Guard requested an immediate restart: rewind to the last
                 # checkpoint (replacement happens at the cluster layer)
-                restored = self.restore()
-                step = restored
+                step = self.restore()
+                on_restart = getattr(self.hook, "on_restart", None)
+                if on_restart:
+                    on_restart(step)
         if self.ckpt:
             self.ckpt.wait()
         return {"final_step": step, "history": self.history}

@@ -1,0 +1,525 @@
+"""Tests for the ``repro.guard`` control plane: session wiring, typed
+event bus, pooled spare accounting, the non-blocking sweep scheduler,
+the pending-patience / buddy-retry manager branches, the trainer step
+hook, and simulate_run determinism."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ErrorSignals, NodeState, SweepConfig, SweepReference
+from repro.core.telemetry import Frame
+from repro.guard import (EventBus, GuardSession, GuardStepHook, JsonlSink,
+                         NodeSwapped, StragglerFlagged, Tier, TraceSink)
+from repro.simcluster import FaultKind, FaultRates, RunConfig, SimCluster, \
+    simulate_run
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+
+
+def quiet_cluster(**kw):
+    kw.setdefault("rates", QUIET)
+    kw.setdefault("n_active", 16)
+    kw.setdefault("n_spare", 4)
+    return SimCluster(**kw)
+
+
+def mk_session(cluster, tier=Tier.ENHANCED, **kw):
+    s = GuardSession.from_tier(tier, control=cluster, sweep_backend=cluster,
+                               **kw)
+    s.register_active(cluster.active)
+    s.register_spares(cluster.spares)
+    return s
+
+
+# ---------------------------------------------------------------- session
+
+class TestSessionWiring:
+    def test_tier_builders_set_capabilities(self):
+        c = quiet_cluster()
+        for builder, tier in ((GuardSession.burnin, Tier.BURNIN),
+                              (GuardSession.node_sweep, Tier.NODE_SWEEP),
+                              (GuardSession.online, Tier.ONLINE),
+                              (GuardSession.enhanced, Tier.ENHANCED)):
+            s = builder(c, c)
+            assert s.tier == tier
+            assert s.online_monitoring == (tier >= Tier.ONLINE)
+            assert s.sweep_tooling == (tier >= Tier.NODE_SWEEP)
+            assert s.manager.enhanced_sweep == (tier == Tier.ENHANCED)
+
+    def test_observe_noop_below_online(self):
+        c = quiet_cluster()
+        s = mk_session(c, tier=Tier.NODE_SWEEP)
+        for _ in range(12):
+            c.run_step()
+        frame = c.collect()
+        out = s.observe(frame)
+        assert out.events == [] and out.restarts == []
+
+    def test_severe_straggler_swapped_through_session(self):
+        c = quiet_cluster(seed=11)
+        s = mk_session(c, tier=Tier.ENHANCED)
+        c.injector.inject(FaultKind.POWER, 7, severity=0.95)
+        for step in range(1, 400):
+            c.run_step()
+            if step % c.window_steps == 0:
+                frame = c.collect()
+                if frame is not None:
+                    s.observe(frame)
+            if step % 60 == 0:
+                s.on_checkpoint()
+            if 7 not in c.active:
+                break
+        assert 7 not in c.active
+        assert s.manager.state[7] == NodeState.QUARANTINED
+        kinds = [e.kind for e in s.events()]
+        assert "straggler_flagged" in kinds
+        assert "swap" in kinds and "quarantine" in kinds
+        # event-driven qualification was queued for the quarantined node
+        assert s.scheduler.busy + s.scheduler.backlog >= 1
+
+
+# -------------------------------------------------------------- event bus
+
+class TestEventBus:
+    def test_typed_subscription_and_trace(self):
+        bus = EventBus()
+        trace = TraceSink()
+        bus.attach(trace)
+        got = []
+        bus.subscribe(StragglerFlagged, got.append)
+        bus.publish(StragglerFlagged(t=1.0, step=5, node_id=3,
+                                     action="immediate_restart", reason="x"))
+        bus.publish(NodeSwapped(t=2.0, step=6, old=3, new=9))
+        assert len(got) == 1 and got[0].node_id == 3
+        assert len(trace) == 2
+        assert trace.of_kind("swap")[0].new == 9
+
+    def test_jsonl_sink_round_trip(self, tmp_path):
+        path = str(tmp_path / "events.jsonl")
+        bus = EventBus()
+        with JsonlSink(path) as sink:
+            bus.attach(sink)
+            bus.publish(StragglerFlagged(t=1.0, step=2, node_id=4,
+                                         action="defer", reason="slow",
+                                         slowdown=0.12))
+            bus.publish(NodeSwapped(t=3.0, step=4, old=4, new=8,
+                                    reason="deferred", deferred=True))
+        rows = [json.loads(line) for line in open(path)]
+        assert [r["kind"] for r in rows] == ["straggler_flagged", "swap"]
+        assert rows[0]["slowdown"] == pytest.approx(0.12)
+        assert rows[1]["deferred"] is True
+
+    def test_session_events_serializable(self):
+        c = quiet_cluster(seed=3)
+        s = mk_session(c)
+        c.injector.inject(FaultKind.POWER, 2, severity=0.95)
+        for step in range(1, 200):
+            c.run_step()
+            if step % c.window_steps == 0:
+                frame = c.collect()
+                if frame is not None:
+                    s.observe(frame)
+        for d in s.trace.as_dicts():
+            json.dumps(d)          # every event must be JSON-clean
+            assert "kind" in d and "t" in d and "step" in d
+
+
+# ------------------------------------------------- pooled spare accounting
+
+class TestSparePool:
+    def _assert_no_leak(self, cluster, session):
+        """A node is never simultaneously a spare and ACTIVE (the old
+        runtime's crash path leaked cluster.spares[0] this way)."""
+        mgr = session.manager
+        active = set(cluster.active)
+        assert not (set(mgr.spares) & active), (mgr.spares, cluster.active)
+        assert not (set(cluster.spares) & active)
+        for nid in mgr.spares:
+            assert mgr.state[nid] == NodeState.HEALTHY_SPARE
+
+    def test_crash_replacement_does_not_leak_spares(self):
+        c = quiet_cluster(seed=2)
+        s = mk_session(c)
+        c.injector.inject(FaultKind.FAIL_STOP, 4, severity=1.0)
+        rec = c.run_step()
+        assert rec["crashed"]
+        dead = c.crashed_nodes()
+        replacements = s.handle_crash(dead, lost_steps=3)
+        self._assert_no_leak(c, s)
+        assert s.manager.state[4] == NodeState.TERMINATED
+        assert 4 not in c.active
+        for nid in replacements:
+            assert nid in c.active
+            assert s.manager.state[nid] == NodeState.ACTIVE
+        crash = s.trace.of_kind("crash")[0]
+        assert crash.nodes == (4,) and crash.lost_steps == 3
+        # fail-stop deaths are not Guard terminations (separate stat)
+        assert s.stats.nodes_lost == len(dead)
+        assert s.stats.nodes_terminated == 0
+
+    def test_take_spare_provisions_when_dry(self):
+        c = quiet_cluster(n_spare=1, seed=9)
+        s = mk_session(c)
+        first = s.take_spare()
+        assert s.spares_free == 0
+        second = s.take_spare()       # pool dry -> provisioned + admitted
+        assert second != first
+        assert s.manager.state[second] == NodeState.ACTIVE
+        assert s.stats.nodes_provisioned >= 1
+        self_ids = {first, second}
+        assert not (self_ids & set(s.manager.spares))
+
+    def test_return_spare_round_trip(self):
+        c = quiet_cluster()
+        s = mk_session(c)
+        nid = s.take_spare()
+        s.return_spare(nid)
+        assert nid in s.manager.spares
+        assert s.manager.state[nid] == NodeState.HEALTHY_SPARE
+
+    def test_top_up_spares(self):
+        c = quiet_cluster(n_spare=2)
+        s = mk_session(c)
+        s.take_spare()
+        s.take_spare()
+        added = s.top_up_spares(4)
+        assert added == 4 and s.spares_free == 4
+
+
+# -------------------------------------------------------- manager branches
+
+class FakeControl:
+    def __init__(self):
+        self.t = 0.0
+        self.swaps = []
+        self.restarts = []
+        self._next = 500
+        self.signals = ErrorSignals()
+
+    def swap_node(self, old, new):
+        self.swaps.append((old, new))
+
+    def restart_job(self, reason):
+        self.restarts.append(reason)
+
+    def provision_node(self):
+        self._next += 1
+        return self._next
+
+    def error_signals(self, node_id):
+        return self.signals
+
+    def remediate(self, node_id, stage):
+        pass
+
+    def now(self):
+        return self.t
+
+
+def hw_frame(w, n=8, bad=None):
+    """Frame with healthy step times; ``bad`` node deviates on two
+    hardware signals only (the PENDING_VERIFICATION tier)."""
+    temps = np.full(n, 58.0)
+    freqs = np.full(n, 1.93)
+    if bad is not None:
+        temps[bad] = 90.0
+        freqs[bad] = 1.3
+    metrics = {
+        "step_time": np.full(n, 10.0) + np.linspace(0, 0.01, n),
+        "gpu_temp": temps,
+        "gpu_freq": freqs,
+    }
+    return Frame(t=w * 60.0, step=w * 6,
+                 node_ids=np.arange(n, dtype=np.int64),
+                 metrics=metrics, valid=np.ones(n, bool))
+
+
+class TestPendingPatience:
+    def _session(self, patience_s):
+        ctl = FakeControl()
+        s = GuardSession.from_tier(Tier.ONLINE, ctl, None,
+                                   pending_patience_s=patience_s)
+        s.register_active(range(8))
+        s.register_spares([100, 101])
+        return ctl, s
+
+    def test_pending_past_patience_is_pulled_at_checkpoint(self):
+        ctl, s = self._session(patience_s=300.0)
+        for w in range(6):
+            ctl.t = w * 60.0
+            out = s.observe(hw_frame(w, bad=3))
+        assert s.manager.state[3] == NodeState.PENDING
+        assert 3 in s.monitor.pending
+        # patience not yet exceeded: checkpoint leaves the node in the job
+        ctl.t = s.manager.pending_since[3] + 100.0
+        assert s.manager.on_checkpoint() == 0
+        assert s.manager.state[3] == NodeState.PENDING
+        # keep deviating past the patience window -> pulled for offline
+        # verification at the next checkpoint
+        for w in range(6, 14):
+            ctl.t = w * 60.0
+            out = s.observe(hw_frame(w, bad=3))
+        assert out is not None
+        ctl.t = s.manager.pending_since[3] + 301.0
+        applied = s.manager.on_checkpoint()
+        assert applied == 1
+        assert s.manager.state[3] == NodeState.QUARANTINED
+        assert (3, 100) in ctl.swaps
+        assert any("deferred" in r for r in ctl.restarts)
+
+    def test_pending_that_clears_returns_to_active(self):
+        ctl, s = self._session(patience_s=300.0)
+        for w in range(6):
+            ctl.t = w * 60.0
+            s.observe(hw_frame(w, bad=3))
+        assert s.manager.state[3] == NodeState.PENDING
+        # deviation stops; hysteresis clears the latch after clean windows
+        for w in range(6, 14):
+            ctl.t = w * 60.0
+            s.observe(hw_frame(w, bad=None))
+        ctl.t += 10_000.0            # way past patience — but it cleared
+        assert s.manager.on_checkpoint() == 0
+        assert s.manager.state[3] == NodeState.ACTIVE
+        assert 3 not in s.manager.pending_since
+        assert not ctl.swaps
+        cleared = s.trace.of_kind("straggler_cleared")
+        assert [e.node_id for e in cleared] == [3]
+
+
+class RetryBackend:
+    """Single-node stage healthy; the 2-node stage fails whenever the
+    contaminated buddy is in the group."""
+
+    def __init__(self, bad_buddies=(10,)):
+        self.bad = set(bad_buddies)
+        self.groups = []
+        self._ref = SweepReference(device_tflops=100.0, intra_bw_gbps=100.0,
+                                   pair_step_time=1.0)
+
+    def device_count(self, node_id):
+        return 2
+
+    def compute_probe(self, node_id, device, seconds):
+        return 100.0
+
+    def intra_bw_probe(self, node_id, a, b):
+        return 100.0
+
+    def multi_node_probe(self, node_ids, steps):
+        self.groups.append(tuple(node_ids))
+        bad = bool(self.bad & set(node_ids))
+        return np.full(steps, 2.0 if bad else 1.0)
+
+    def reference(self):
+        return self._ref
+
+
+class TestBuddyRetry:
+    def _manager(self, backend):
+        ctl = FakeControl()
+        s = GuardSession.from_tier(Tier.ENHANCED, ctl, backend,
+                                   sweep_cfg=SweepConfig())
+        s.register_spares([10, 11])
+        return ctl, s.manager
+
+    def test_contaminated_buddy_retried_before_verdict(self):
+        backend = RetryBackend(bad_buddies=(10,))
+        ctl, mgr = self._manager(backend)
+        mgr.state[5] = NodeState.QUARANTINED
+        pre = mgr.stats.sweeps_run
+        assert mgr.qualify(5) == NodeState.HEALTHY_SPARE
+        # first attempt against buddy 10 failed, retry against 11 passed
+        assert mgr.stats.sweeps_run - pre == 2
+        assert backend.groups[0] == (5, 10)
+        assert backend.groups[1] == (5, 11)
+        assert 5 in mgr.spares
+        assert mgr.stats.nodes_requalified == 1
+
+    def test_failure_with_both_buddies_goes_to_triage(self):
+        backend = RetryBackend(bad_buddies=(10, 11))
+        ctl, mgr = self._manager(backend)
+        mgr.state[5] = NodeState.QUARANTINED
+        # no actionable error signals -> triage early-terminates (§6)
+        assert mgr.qualify(5) == NodeState.TERMINATED
+        assert mgr.stats.triages_run == 1
+        assert mgr.stats.nodes_terminated == 1
+
+
+# ------------------------------------------------------------- scheduler
+
+class TestSweepScheduler:
+    def test_qualification_overlaps_job_time(self):
+        c = quiet_cluster(seed=4)
+        s = mk_session(c, tier=Tier.ENHANCED)
+        # healthy node wrongly quarantined (a false positive)
+        s.manager.state[3] = NodeState.QUARANTINED
+        c.active.remove(3)
+        s.scheduler.submit(3)
+        t0 = c.t
+        s.advance(t0)
+        assert s.scheduler.busy == 1
+        assert s.manager.state[3] == NodeState.QUARANTINED   # still on bench
+        finish = s.scheduler.next_finish_t()
+        assert finish > t0                       # sweeps take simulated time
+        s.advance(finish - 1.0)
+        assert s.manager.state[3] == NodeState.QUARANTINED
+        s.advance(finish + 1.0)
+        assert s.manager.state[3] == NodeState.HEALTHY_SPARE
+        assert 3 in s.manager.spares
+        fin = s.trace.of_kind("sweep_finish")
+        assert fin and fin[0].node_id == 3
+        assert fin[0].outcome == "healthy_spare"
+        assert fin[0].duration_s > 0
+
+    def test_concurrency_cap_and_drain(self):
+        c = quiet_cluster(n_active=12, seed=4)
+        s = mk_session(c, tier=Tier.ENHANCED, sweep_concurrency=1)
+        for nid in (1, 2, 3):
+            s.manager.state[nid] = NodeState.QUARANTINED
+            c.active.remove(nid)
+        assert s.scheduler.submit_quarantined() == 3
+        assert s.scheduler.submit_quarantined() == 0   # no double-enqueue
+        s.advance(c.t)
+        assert s.scheduler.busy == 1 and s.scheduler.backlog == 2
+        s.scheduler.drain(c.t)
+        assert s.scheduler.busy == 0 and s.scheduler.backlog == 0
+        for nid in (1, 2, 3):
+            assert s.manager.state[nid] in (NodeState.HEALTHY_SPARE,
+                                            NodeState.TERMINATED)
+
+
+# ------------------------------------------------------------- step hook
+
+class TestGuardStepHook:
+    def test_stall_triggers_restart_and_swap(self):
+        hook = GuardStepHook(window_steps=4, n_peers=8, seed=1)
+        hook.inject_stall(at_step=16, factor=10.0, steps=4)
+        restart_steps = []
+        for step in range(1, 40):
+            if hook(step, 0.1, {}):
+                restart_steps.append(step)
+                hook.on_restart(step - 8)
+        assert restart_steps, "stall was not detected"
+        assert restart_steps[0] <= 24
+        assert hook.restarts_requested == 1
+        assert hook.node_id != 0                 # follows its replacement
+        ctl = hook.control
+        assert ctl.swaps and ctl.swaps[0][0] == 0
+        assert ctl.restarts
+        flagged = hook.session.trace.of_kind("straggler_flagged")
+        assert any(e.node_id == 0 for e in flagged)
+
+    def test_post_restart_spike_absorbed_by_warmup(self):
+        """After a rewind the hook re-enters warmup: the restore/re-JIT
+        spike in the first window must not flag the replacement node and
+        cascade into more restarts."""
+        hook = GuardStepHook(window_steps=4, n_peers=8, seed=1)
+        hook.inject_stall(at_step=16, factor=10.0, steps=4)
+        restarted_at = None
+        for step in range(1, 30):
+            if hook(step, 0.1, {}):
+                restarted_at = step
+                hook.on_restart(8)
+                break
+        assert restarted_at is not None
+        # replay from the checkpoint: restore + re-JIT inflate the first
+        # window's measured walls by 5x
+        for i, wall in enumerate([0.5, 0.5, 0.1, 0.1]):
+            assert not hook(9 + i, wall, {})
+        for step in range(13, 41):
+            assert not hook(step, 0.1, {})
+        assert hook.restarts_requested == 1
+
+    def test_deferred_swap_lands_via_trainer_checkpoint(self):
+        """Moderate (10-20%) sustained slowdown takes the DEFER tier:
+        nothing happens until the checkpoint notification, then the swap
+        is applied and the next step call requests the rewind."""
+        hook = GuardStepHook(window_steps=4, n_peers=8, seed=1,
+                             baseline_alpha=0.0)   # frozen peer baseline
+        for step in range(1, 9):                   # establish baseline
+            assert not hook(step, 0.1, {})
+        hook.inject_stall(at_step=9, factor=1.15, steps=100)
+        restarted = False
+        for step in range(9, 41):
+            if hook(step, 0.1, {}):
+                restarted = True
+                break
+        assert not restarted                       # deferred, not immediate
+        flagged = hook.session.trace.of_kind("straggler_flagged")
+        assert any(e.action == "defer_to_checkpoint" for e in flagged)
+        assert not hook.control.swaps
+        hook.on_checkpoint(step=40)                # trainer saved a ckpt
+        assert hook.control.swaps                  # swap landed here
+        assert hook(41, 0.1, {})                   # rewind requested
+        assert hook.restarts_requested == 1
+        swaps = hook.session.trace.of_kind("swap")
+        assert swaps and swaps[0].deferred
+
+    def test_supplied_session_pools_left_untouched(self):
+        """Binding a hook to an existing session must not re-register
+        its synthetic population over the caller's real pools."""
+        c = quiet_cluster(n_active=16, n_spare=4)
+        s = mk_session(c, tier=Tier.ONLINE)
+        before = dict(s.manager.state)
+        spares_before = list(s.manager.spares)
+        hook = s.step_hook(window_steps=4, n_peers=8)
+        assert hook.session is s
+        assert s.manager.state == before
+        assert s.manager.spares == spares_before
+
+    def test_healthy_run_stays_quiet(self):
+        hook = GuardStepHook(window_steps=4, n_peers=8, seed=1)
+        assert not any(hook(step, 0.1, {}) for step in range(1, 60))
+        assert hook.restarts_requested == 0
+        assert not hook.session.trace.of_kind("straggler_flagged")
+        assert hook.frames_fed > 10
+
+
+# ---------------------------------------------------------- simulate_run
+
+class TestSimulateRunGuardAPI:
+    def test_determinism_across_invocations(self):
+        cfg = RunConfig(tier=Tier.ENHANCED, n_nodes=24, n_spare=4,
+                        duration_h=4.0, initial_grey_p=0.15, seed=7)
+        a = simulate_run(cfg)
+        b = simulate_run(cfg)
+        assert a.steps == b.steps
+        assert a.crashes == b.crashes
+        assert a.mfu == pytest.approx(b.mfu, abs=0)
+        assert a.mttf_h == pytest.approx(b.mttf_h, abs=0)
+        assert a.human_hours == pytest.approx(b.human_hours, abs=0)
+        assert a.incidents == b.incidents
+        np.testing.assert_array_equal(a.step_times, b.step_times)
+        assert a.events == b.events
+
+    def test_restart_events_report_lost_steps(self):
+        cfg = RunConfig(tier=Tier.ENHANCED, n_nodes=24, n_spare=4,
+                        duration_h=4.0, initial_grey_p=0.15,
+                        rates=FaultRates(fail_stop=3e-2), seed=1)
+        r = simulate_run(cfg)
+        assert r.crashes > 0
+        crashes = [e for e in r.events if e["kind"] == "crash"]
+        restarts = [e for e in r.events if e["kind"] == "restart"]
+        assert crashes and restarts
+        for e in crashes:
+            assert e["nodes"], e
+        rewinds = [e for e in restarts if e["rewind"]]
+        assert rewinds
+        assert all(e["lost_steps"] >= 0 for e in rewinds)
+        assert any(e["lost_steps"] > 0 for e in rewinds)
+
+    def test_events_carry_global_step_without_online_monitoring(self):
+        """Manager-path events must report the training step even in the
+        tiers that never call observe() (regression: step froze at 0)."""
+        cfg = RunConfig(tier=Tier.BURNIN, n_nodes=24, n_spare=4,
+                        duration_h=4.0, initial_grey_p=0.1,
+                        rates=FaultRates(fail_stop=3e-2), seed=1)
+        r = simulate_run(cfg)
+        crashes = [e for e in r.events if e["kind"] == "crash"]
+        assert crashes
+        assert any(e["step"] > 0 for e in crashes)
+        swaps = [e for e in r.events if e["kind"] == "swap"]
+        assert any(e["step"] > 0 for e in swaps)
