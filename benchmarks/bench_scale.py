@@ -1,0 +1,218 @@
+"""Fleet-scale benchmark: the refactor's speedup, pinned in CI.
+
+Two measurements, written to ``BENCH_scale.json``:
+
+  1. ``detector``: microbenchmark of ``StragglerDetector.update`` on
+     synthetic full-metric frames at 1k/4k/16k nodes — µs per evaluation
+     window plus the number of per-node Python objects materialized per
+     window, which must scale with the FLAGGED population, not the fleet
+     (the struct-of-arrays FleetAssessment contract).
+  2. ``simulate``: wall-clock of the 2048-node, 72 h ENHANCED
+     ``simulate_run`` on the window-granular engine, against the
+     pre-refactor step-granular baseline measured interleaved on the
+     same config / seed / machine immediately before the refactor
+     landed (commit 6c6cb4c): ~8-9x min-to-min on the dev container
+     (target 10x; enforced regression gate 6x — see SPEEDUP_GATE).
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_scale [--quick]
+          [--out PATH] [--budget-s S]
+
+``--quick`` is the CI smoke sizing: a 1024-node short run under a
+wall-time budget (exit non-zero if it blows the budget), with the
+speedup gate reported but not enforced (CI machines are not the
+baseline machine). Full mode enforces the speedup gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import DetectorConfig, StragglerDetector
+from repro.core.telemetry import Frame
+from repro.guard import Tier
+from repro.simcluster import RunConfig, simulate_run
+
+# Pre-refactor step-granular baseline, measured on the exact BENCH config
+# below at the commit preceding this refactor (simulate_run with the
+# per-step loop, list-scan FaultInjector, per-node detector objects).
+# wall_s is the MIN over 7 interleaved old/new runs on the same machine
+# (the least-interference sample; same convention as the new-path
+# measurement), so the recorded speedup is conservative. Kept as the
+# fixed reference the CI artifact trends against.
+PRE_REFACTOR = {
+    "commit": "6c6cb4c",
+    "wall_s": 32.37,
+    "wall_s_samples": [32.37, 34.30, 37.18, 42.69, 32.67, 42.14, 35.13],
+    "steps": 7419,
+    "config": "2048 nodes, 72 h, ENHANCED, initial_grey_p=0.02, seed 0",
+}
+
+# The refactor's target was >=10x; the measured speedup on the dev
+# container is ~8-9x min-to-min (recorded in the artifact). The enforced
+# gate sits at 6x so CI machine variance cannot flake the job while a
+# genuine engine regression still fails loudly.
+SPEEDUP_TARGET = 10.0
+SPEEDUP_GATE = 6.0
+
+SCALE_CONFIG = dict(tier=Tier.ENHANCED, n_nodes=2048, n_spare=128,
+                    duration_h=72.0, initial_grey_p=0.02, seed=0)
+QUICK_CONFIG = dict(tier=Tier.ENHANCED, n_nodes=1024, n_spare=64,
+                    duration_h=6.0, initial_grey_p=0.05, seed=0)
+
+
+def synthetic_frame(w: int, n: int, rng, stragglers) -> Frame:
+    t = 10.0 * (1.0 + rng.normal(0, 0.004, n))
+    for nid, factor in stragglers:
+        t[nid] *= factor
+    metrics = {
+        "step_time": t,
+        "gpu_temp": 58.0 + rng.normal(0, 0.8, n),
+        "gpu_util": np.clip(rng.normal(0.97, 0.01, n), 0, 1),
+        "gpu_freq": np.full(n, 1.93) + rng.normal(0, 0.002, n),
+        "gpu_power": 350.0 + rng.normal(0, 3.0, n),
+        "nic_errors": np.zeros(n),
+        "nic_tx_rate": 50.0 + rng.normal(0, 0.5, n),
+        "nic_up": np.ones(n),
+    }
+    return Frame(t=w * 60.0, step=w * 6,
+                 node_ids=np.arange(n, dtype=np.int64),
+                 metrics=metrics, valid=np.ones(n, bool))
+
+
+def detector_microbench(n: int, windows: int = 24,
+                        n_stragglers: int = 4) -> dict:
+    """µs/window + materialized-object count for an N-node fleet with a
+    handful of genuine stragglers (the realistic steady state)."""
+    rng = np.random.RandomState(n)
+    stragglers = [(i * (n // max(n_stragglers, 1)) + 7, 1.2)
+                  for i in range(n_stragglers)]
+    det = StragglerDetector(DetectorConfig())
+    frames = [synthetic_frame(w, n, rng, stragglers)
+              for w in range(windows)]
+    per_window_us = []
+    materialized = []
+    flagged = []
+    for frame in frames:
+        t0 = time.perf_counter()
+        fa = det.update(frame)
+        fa.flagged_assessments()         # what the monitor/policy consume
+        per_window_us.append((time.perf_counter() - t0) * 1e6)
+        materialized.append(fa.materialized)
+        flagged.append(int(fa.flagged.sum()))
+    warm = per_window_us[2:]             # skip alloc warmup
+    return {
+        "n_nodes": n,
+        "windows": windows,
+        "us_per_window_mean": float(np.mean(warm)),
+        "us_per_window_p50": float(np.median(warm)),
+        "flagged_steady": flagged[-1],
+        "objects_per_window_max": int(max(materialized)),
+        "objects_O_flagged": bool(
+            max(materialized) <= max(max(flagged), 1) + n_stragglers),
+    }
+
+
+def sim_scale_bench(quick: bool, repeats: int = 1) -> dict:
+    cfg = QUICK_CONFIG if quick else SCALE_CONFIG
+    walls = []
+    r = None
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        r = simulate_run(RunConfig(**cfg))
+        walls.append(time.perf_counter() - t0)
+    # min over repeats: wall-clock gates need the least-interference
+    # sample on shared machines (same convention as the baseline)
+    wall = min(walls)
+    out = {
+        "config": {k: (int(v) if k == "tier" else v)
+                   for k, v in cfg.items()},
+        "wall_s": wall,
+        "wall_s_all": walls,
+        "steps": r.steps,
+        "crashes": r.crashes,
+        "mfu": r.mfu,
+        "mttf_h": r.mttf_h,
+        "events": len(r.events),
+    }
+    if not quick:
+        out["baseline"] = PRE_REFACTOR
+        out["speedup_vs_prerefactor"] = PRE_REFACTOR["wall_s"] / wall
+        out["speedup_target"] = SPEEDUP_TARGET
+        out["speedup_gate"] = SPEEDUP_GATE
+    return out
+
+
+def scale_summary(quick: bool = True) -> dict:
+    """Compact detector-scaling summary for embedding in other
+    benchmark artifacts (benchmarks.run_all). Engine wall-clock numbers
+    live in BENCH_scale.json only."""
+    sizes = (1024, 4096) if quick else (1024, 4096, 16384)
+    return {
+        "detector": [detector_microbench(n, windows=12) for n in sizes],
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (1024-node short run)")
+    ap.add_argument("--budget-s", type=float, default=300.0,
+                    help="wall-time budget for the quick run (CI gate)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_scale.json"))
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    detector = [detector_microbench(n) for n in (1024, 4096, 16384)]
+    sim = sim_scale_bench(quick=args.quick, repeats=1 if args.quick else 3)
+    out = {
+        "benchmark": "guard_scale",
+        "mode": "quick" if args.quick else "full",
+        "detector": detector,
+        "simulate": sim,
+        "total_wall_s": time.perf_counter() - t0,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+
+    print(f"{'n_nodes':>8s}{'µs/window':>12s}{'objects/win':>13s}"
+          f"{'flagged':>9s}")
+    for d in detector:
+        print(f"{d['n_nodes']:8d}{d['us_per_window_p50']:12.0f}"
+              f"{d['objects_per_window_max']:13d}{d['flagged_steady']:9d}")
+    print(f"\nsimulate: {sim['config']['n_nodes']} nodes, "
+          f"{sim['config']['duration_h']:.0f}h -> {sim['wall_s']:.1f}s "
+          f"({sim['steps']} steps, {sim['crashes']} crashes)")
+
+    ok = True
+    if not all(d["objects_O_flagged"] for d in detector):
+        print("FAIL: detector materialized O(N) objects per window",
+              file=sys.stderr)
+        ok = False
+    if args.quick:
+        if sim["wall_s"] > args.budget_s:
+            print(f"FAIL: quick scale run {sim['wall_s']:.1f}s over the "
+                  f"{args.budget_s:.0f}s budget", file=sys.stderr)
+            ok = False
+    else:
+        speedup = sim["speedup_vs_prerefactor"]
+        print(f"speedup vs pre-refactor step-granular path: {speedup:.1f}x "
+              f"(baseline {PRE_REFACTOR['wall_s']:.1f}s @ "
+              f"{PRE_REFACTOR['commit']}; target {SPEEDUP_TARGET:.0f}x, "
+              f"gate {SPEEDUP_GATE:.0f}x)")
+        if speedup < SPEEDUP_GATE:
+            print(f"FAIL: speedup below the {SPEEDUP_GATE:.0f}x gate",
+                  file=sys.stderr)
+            ok = False
+    print(f"wrote {args.out}  ({out['total_wall_s']:.0f}s)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

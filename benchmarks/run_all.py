@@ -96,12 +96,17 @@ def main(argv=None) -> int:
     t0 = time.time()
     per_tier = run_tiers(hours, nodes, max(nodes // 6, 4), seeds)
     ordering = check_ordering(per_tier)
+    # detector-scaling summary rides along so the ablation artifact also
+    # tracks the vectorized hot path (full curves live in BENCH_scale.json)
+    from benchmarks.bench_scale import scale_summary
+    scale = scale_summary(quick=True)
     out = {
         "benchmark": "guard_tier_ablation",
         "config": {"duration_h": hours, "n_nodes": nodes, "seeds": seeds,
                    "workload": GUARD_WORKLOAD.name},
         "tiers": per_tier,
         "ordering": ordering,
+        "scale": scale,
         "total_wall_s": time.time() - t0,
     }
     with open(args.out, "w") as f:
@@ -114,6 +119,10 @@ def main(argv=None) -> int:
               f"{d['step_variance_s2']:9.2f}s²"
               f"{d['human_h_per_incident']:10.2f}h")
     print(f"\nordering: {ordering}")
+    for d in scale["detector"]:
+        print(f"detector @{d['n_nodes']:>6d} nodes: "
+              f"{d['us_per_window_p50']:.0f}µs/window, "
+              f"{d['objects_per_window_max']} objects")
     print(f"wrote {args.out}  ({out['total_wall_s']:.0f}s)")
     if not ordering["headline_enhanced_gt_burnin"]:
         print("FAIL: ENHANCED did not beat BURNIN on MFU", file=sys.stderr)

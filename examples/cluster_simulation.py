@@ -5,28 +5,47 @@ Runs the same fleet/fault environment under each management tier —
 ``simulate_run`` — and prints the MTTF / MFU / human-time ladder the
 paper reports, plus the typed-event totals from each run's Guard trace.
 
+``--correlated`` layers declarative fault scenarios on top of the
+background Poisson wear: a rack-level cooling incident, a leaf-switch
+failure and a fabric congestion storm (see
+``repro.simcluster.scenarios``) — the incident mix that separates the
+tiers hardest.
+
 Run:  PYTHONPATH=src python examples/cluster_simulation.py [--hours 24]
+          [--correlated]
 """
 import argparse
 from collections import Counter
 
 
 from repro.guard import Tier
-from repro.simcluster import RunConfig, simulate_run
+from repro.simcluster import (CongestionStorm, RackThermal, RunConfig,
+                              SwitchFailure, simulate_run)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--hours", type=float, default=24.0)
     ap.add_argument("--nodes", type=int, default=64)
+    ap.add_argument("--correlated", action="store_true",
+                    help="add rack/switch/congestion scenario events")
     args = ap.parse_args()
+
+    scenarios = ()
+    if args.correlated:
+        scenarios = (
+            RackThermal(at_h=args.hours * 0.2, rack_size=8),
+            SwitchFailure(at_h=args.hours * 0.5, group_size=16),
+            CongestionStorm(at_h=args.hours * 0.7, duration_h=1.0),
+        )
 
     print(f"{'tier':22s}{'MTTF':>8s}{'MFU':>8s}{'human/inc':>11s}"
           f"{'mean step':>11s}{'crashes':>9s}{'restarts':>10s}  events")
     for tier in Tier:
         r = simulate_run(RunConfig(
             tier=tier, n_nodes=args.nodes, n_spare=8,
-            duration_h=args.hours, initial_grey_p=0.2, seed=0))
+            duration_h=args.hours, initial_grey_p=0.2, seed=0,
+            scenarios=scenarios))
         kinds = Counter(e["kind"] for e in r.events
                         if e["kind"] != "checkpoint")
         top = ", ".join(f"{k}:{n}" for k, n in kinds.most_common(3))

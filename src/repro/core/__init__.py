@@ -9,8 +9,9 @@ health management for large-scale training.
   triage          remediation FSM + 3-strikes rule (§6, Fig. 8)
   health_manager  closed loop: pools, swaps, event-driven sweeps (Fig. 1)
 """
-from repro.core.detector import (DetectorConfig, NodeAssessment,
-                                 StragglerDetector, robust_z)
+from repro.core.detector import (DetectorConfig, FleetAssessment,
+                                 NodeAssessment, StragglerDetector,
+                                 robust_z)
 from repro.core.health_manager import (ClusterControl, HealthManager,
                                        ManagerStats, NodeState,
                                        QualificationTicket)
@@ -27,7 +28,8 @@ from repro.core.triage import (ErrorSignals, Stage, TriageConfig,
 
 __all__ = [
     "Action", "ClusterControl", "Collector", "Decision", "DetectorConfig",
-    "ErrorSignals", "Frame", "HARDWARE_METRICS", "HealthEvent",
+    "ErrorSignals", "FleetAssessment", "Frame", "HARDWARE_METRICS",
+    "HealthEvent",
     "HealthManager", "METRICS", "METRIC_DIRECTION", "ManagerStats",
     "NodeAssessment", "NodeState", "OnlineMonitor", "PolicyConfig",
     "QualificationTicket",

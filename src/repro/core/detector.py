@@ -12,11 +12,18 @@ hardware heterogeneity for free. A node is flagged only when
 and the deviation persists for >= K of the last N evaluation windows
 (temporal filter). Hysteresis: once flagged, a node needs ``clear_windows``
 consecutive clean windows to unflag, preventing oscillation.
+
+The hot path is array-native: ``StragglerDetector.update`` returns a
+struct-of-arrays ``FleetAssessment`` whose latch / clean-streak state is
+held as node-indexed arrays, so one 16k-node evaluation window costs a
+fixed number of numpy reductions and O(flagged) Python objects — per-node
+``NodeAssessment`` records are materialized lazily, and only for the
+consumers that ask for them.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, Iterator, List, Optional
 
 import numpy as np
 
@@ -51,6 +58,87 @@ class NodeAssessment:
     flagged: bool                # overall verdict after temporal filtering
 
 
+class FleetAssessment:
+    """One evaluation window's verdicts for the whole fleet, as arrays.
+
+    Every field is aligned with ``node_ids``; per-node ``NodeAssessment``
+    objects exist only when a consumer materializes them (``node``,
+    ``flagged_assessments``, or the sequence protocol, which older
+    callers use transparently). ``materialized`` counts how many were
+    built — the scale benchmark asserts it stays O(flagged)."""
+
+    __slots__ = ("node_ids", "slowdown", "stalled", "step_deviant",
+                 "support_masks", "flagged", "materialized", "_index")
+
+    def __init__(self, node_ids: np.ndarray, slowdown: np.ndarray,
+                 stalled: np.ndarray, step_deviant: np.ndarray,
+                 support_masks: Dict[str, np.ndarray],
+                 flagged: np.ndarray):
+        self.node_ids = node_ids
+        self.slowdown = slowdown
+        self.stalled = stalled
+        self.step_deviant = step_deviant
+        self.support_masks = support_masks
+        self.flagged = flagged
+        self.materialized = 0
+        self._index: Optional[Dict[int, int]] = None
+
+    # ------------------------------------------------------ array queries
+
+    def flagged_indices(self) -> np.ndarray:
+        return np.flatnonzero(self.flagged)
+
+    def flagged_ids(self) -> np.ndarray:
+        return self.node_ids[self.flagged]
+
+    def index_of(self, node_id: int) -> Optional[int]:
+        # vectorized scan: callers look up O(flagged) ids per window, so a
+        # full dict build would dwarf the lookups themselves
+        hit = np.flatnonzero(self.node_ids == node_id)
+        return int(hit[0]) if hit.size else None
+
+    def flagged_of(self, node_id: int) -> Optional[bool]:
+        """Latched verdict for one node id; None if not in this frame."""
+        i = self.index_of(node_id)
+        return None if i is None else bool(self.flagged[i])
+
+    # ---------------------------------------------- lazy materialization
+
+    def support_of(self, i: int) -> List[str]:
+        return [m for m, msk in self.support_masks.items() if msk[i]]
+
+    def node(self, i: int) -> NodeAssessment:
+        """Materialize the per-node record for row ``i``."""
+        self.materialized += 1
+        return NodeAssessment(
+            node_id=int(self.node_ids[i]),
+            slowdown=float(self.slowdown[i]),
+            stalled=bool(self.stalled[i]),
+            support=self.support_of(i),
+            step_deviant=bool(self.step_deviant[i]),
+            flagged=bool(self.flagged[i]),
+        )
+
+    def flagged_assessments(self) -> List[NodeAssessment]:
+        return [self.node(int(i)) for i in self.flagged_indices()]
+
+    # -------------------------------------------------- sequence protocol
+    # Compatibility with the pre-vectorization API, where update()
+    # returned List[NodeAssessment]: indexing/iteration materialize
+    # records on demand, so old-style consumers keep working while the
+    # hot path stays allocation-free.
+
+    def __len__(self) -> int:
+        return len(self.node_ids)
+
+    def __getitem__(self, i: int) -> NodeAssessment:
+        return self.node(i)
+
+    def __iter__(self) -> Iterator[NodeAssessment]:
+        for i in range(len(self.node_ids)):
+            yield self.node(i)
+
+
 def robust_z(values: np.ndarray, axis: int = -1,
              mad_floor: float = 1e-9) -> np.ndarray:
     """Median/MAD z-score along ``axis`` (peer axis). 0.6745 ~ Φ⁻¹(3/4)."""
@@ -66,41 +154,150 @@ class StragglerDetector:
     def __init__(self, cfg: Optional[DetectorConfig] = None):
         self.cfg = cfg or DetectorConfig()
         self.history = RingHistory(self.cfg.window)
-        self._clean_streak: Dict[int, int] = {}
-        self._latched: Dict[int, bool] = {}
+        # latch / clean-streak state as node-indexed arrays aligned with
+        # the last frame's node_ids; ids that left the frame park their
+        # state in _off until reset_node forgets them (same semantics as
+        # the old per-id dicts, without per-window dict traffic)
+        self._state_ids: Optional[np.ndarray] = None
+        self._latched: Optional[np.ndarray] = None
+        self._clean: Optional[np.ndarray] = None
+        self._off: Dict[int, tuple] = {}   # id -> (latched, clean_streak)
+        # per-row score caches aligned with the ring buffers: each history
+        # row's peer-relative deviation verdicts never change once scored
+        # (peer medians are within-row), so one window costs one new row of
+        # medians instead of depth x metrics of them. Replacement backfill
+        # and reallocation rescore everything (rare).
+        self._gen = -1                      # history generation scored
+        self._dev3: Optional[np.ndarray] = None  # (M, depth, N) bool
+        self._rel: Optional[np.ndarray] = None  # (depth, N) step_time rel
+        self._contrib: Optional[np.ndarray] = None  # (depth, N) masked rel
+        self._metric_list: List[str] = []
+        self._dirs: Optional[np.ndarray] = None
+        self._st_j: Optional[int] = None
+        self._row_mat: Optional[np.ndarray] = None   # (M, N) scratch
+        self._med_scratch: Optional[np.ndarray] = None
 
     # ------------------------------------------------------------ core
 
-    def _deviation_matrix(self, metric: str) -> np.ndarray:
-        """(depth, N) bool: windows where node deviates unhealthily."""
-        cfg = self.cfg
-        hist = self.history.stacked(metric)              # (depth, N)
-        direction = METRIC_DIRECTION[metric]
-        med = np.median(hist, axis=1, keepdims=True)
-        floor = np.maximum(np.abs(med) * cfg.mad_floor_frac, 1e-9)
-        z = robust_z(hist, axis=1, mad_floor=floor) * direction
-        return z > cfg.z_threshold
+    @staticmethod
+    def _row_median(mat: np.ndarray, scratch: np.ndarray) -> np.ndarray:
+        """(M, 1) median along axis 1 via one partition into ``scratch``.
 
-    def update(self, frame: Frame) -> List[NodeAssessment]:
+        Identical result to ``np.median(mat, axis=1, keepdims=True)``:
+        even length averages the two middle order statistics the same way
+        ((a + b) / 2), without np.median's per-call copies and dispatch."""
+        n = mat.shape[1]
+        h = n // 2
+        scratch[:] = mat
+        if n % 2:
+            scratch.partition(h, axis=1)
+            return scratch[:, h:h + 1].copy()
+        scratch.partition((h - 1, h), axis=1)
+        return (scratch[:, h - 1:h] + scratch[:, h:h + 1]) / 2.0
+
+    def _score_row(self, row: int) -> None:
+        """Score one ring-buffer row for every metric (peer-relative
+        robust-z deviation + step-time relative excess) in one stacked
+        (M, N) pass — bit-identical to the per-metric matrix formulation
+        because every op reduces along the peer axis independently."""
+        cfg = self.cfg
+        mats = self._row_mat                       # (M, N) scratch
+        for j, m in enumerate(self._metric_list):
+            mats[j] = self.history.rows_raw(m)[row]
+        med = self._row_median(mats, self._med_scratch)
+        diff = mats - med
+        mad = self._row_median(np.abs(diff), self._med_scratch)
+        floor = np.maximum(np.abs(med) * cfg.mad_floor_frac, 1e-9)
+        scale = np.maximum(mad / 0.6745, floor)
+        z = (diff / scale) * self._dirs
+        devrow = z > cfg.z_threshold
+        st = self._st_j
+        if st is not None:
+            rel = mats[st] / max(float(med[st, 0]), 1e-9) - 1.0
+            self._rel[row] = rel
+            devrow[st] &= rel > cfg.slowdown_floor
+            # per-row slowdown contribution, pre-masked (summed
+            # chronologically in update())
+            self._contrib[row] = np.where(devrow[st], rel, 0.0)
+        self._dev3[:, row] = devrow
+
+    def _sync_scores(self) -> None:
+        """Bring the per-row caches up to date after a push."""
+        hist = self.history
+        if hist.generation != self._gen:
+            self._gen = hist.generation
+            n = len(hist.last().node_ids)
+            self._metric_list = list(hist.metric_names())
+            self._dirs = np.asarray(
+                [METRIC_DIRECTION[m] for m in self._metric_list],
+                float)[:, None]
+            self._metric_idx = {m: j
+                                for j, m in enumerate(self._metric_list)}
+            self._st_j = self._metric_idx.get("step_time")
+            self._row_mat = np.empty((len(self._metric_list), n))
+            self._med_scratch = np.empty_like(self._row_mat)
+            self._dev3 = np.empty((len(self._metric_list), hist.depth, n),
+                                  bool)
+            self._rel = np.empty((hist.depth, n))
+            self._contrib = np.empty((hist.depth, n))
+            rows = range(len(hist))
+        elif hist.last_backfill is not None:
+            rows = range(len(hist))          # backfill rescored everything
+        else:
+            rows = (hist.last_row,)
+        for row in rows:
+            self._score_row(row)
+
+    def _realign_state(self, node_ids: np.ndarray) -> None:
+        """Carry latch state over a fleet membership change by id."""
+        old_ids, old_latch, old_clean = \
+            self._state_ids, self._latched, self._clean
+        n = len(node_ids)
+        self._latched = np.zeros(n, bool)
+        self._clean = np.zeros(n, np.int64)
+        if old_ids is not None and len(old_ids) == n:
+            # typical case: a few replaced columns — bulk-copy the rest
+            same = old_ids == node_ids
+            self._latched[same] = old_latch[same]
+            self._clean[same] = old_clean[same]
+            moved = np.flatnonzero(~same)
+        elif old_ids is not None:
+            moved = np.arange(len(old_ids))
+        else:
+            moved = np.arange(0)
+        for i in moved:                       # departing ids park in _off
+            self._off[int(old_ids[i])] = (bool(old_latch[i]),
+                                          int(old_clean[i]))
+        if self._off:
+            joins = moved if old_ids is not None and len(old_ids) == n \
+                else np.arange(n)
+            for i in joins:                   # rejoining ids resume state
+                st = self._off.pop(int(node_ids[i]), None)
+                if st is not None:
+                    self._latched[i], self._clean[i] = st
+        self._state_ids = node_ids.copy()
+
+    def update(self, frame: Frame) -> FleetAssessment:
         cfg = self.cfg
         self.history.push(frame)
-        n = len(frame.node_ids)
+        self._sync_scores()
         depth = len(self.history)
+        used = slice(0, depth)
         # "sustained" requires a full persistence window of history; until
         # then only stalls can flag (fresh jobs / post-replacement re-baseline)
         warmed = depth >= cfg.persistence
         need = cfg.persistence if warmed else depth + 1  # unattainable early
 
         # --- primary signal: sustained relative step-time excess
-        st_hist = self.history.stacked("step_time")      # (depth, N)
-        med = np.median(st_hist, axis=1, keepdims=True)
-        rel = st_hist / np.maximum(med, 1e-9) - 1.0
-        step_dev_w = self._deviation_matrix("step_time") & \
-            (rel > cfg.slowdown_floor)
-        dev_count = step_dev_w.sum(0)
+        # (one stacked reduction covers every metric's deviation counts)
+        all_counts = self._dev3[:, used].sum(1)          # (M, N)
+        dev_count = all_counts[self._st_j]
         step_deviant = dev_count >= need
-        # sustained slowdown magnitude: mean over deviant windows
-        slow_sum = np.where(step_dev_w, rel, 0.0).sum(0)
+        # sustained slowdown magnitude: mean over deviant windows. The
+        # masked sum runs in chronological window order so it is
+        # bit-stable against the ring buffer's write position.
+        order = self.history._order()
+        slow_sum = self._contrib[order].sum(0)
         slowdown = np.where(step_deviant,
                             slow_sum / np.maximum(dev_count, 1), 0.0)
 
@@ -112,52 +309,65 @@ class StragglerDetector:
 
         # --- supporting hardware signals (sustained)
         support_masks = {}
+        support_count = np.zeros(len(frame.node_ids), dtype=int)
         for m in HARDWARE_METRICS:
-            if m in last.metrics:
-                dev = self._deviation_matrix(m)
-                support_masks[m] = dev.sum(0) >= need
-
-        support_count = np.zeros(n, dtype=int)
-        for mask in support_masks.values():
-            support_count += mask.astype(int)
+            if m in self._metric_idx:
+                mask = all_counts[self._metric_idx[m]] >= need
+                support_masks[m] = mask
+                support_count += mask
 
         raw_flag = stalled | step_deviant | (support_count >= cfg.min_support)
 
-        out: List[NodeAssessment] = []
-        for i, nid in enumerate(frame.node_ids):
-            nid = int(nid)
-            latched = self._latched.get(nid, False)
-            if raw_flag[i]:
-                self._clean_streak[nid] = 0
-                latched = True
-            elif latched:
-                streak = self._clean_streak.get(nid, 0) + 1
-                self._clean_streak[nid] = streak
-                if streak >= cfg.clear_windows:
-                    latched = False
-            self._latched[nid] = latched
-            out.append(NodeAssessment(
-                node_id=nid,
-                slowdown=float(slowdown[i]),
-                stalled=bool(stalled[i]),
-                support=[m for m, msk in support_masks.items() if msk[i]],
-                step_deviant=bool(step_deviant[i]),
-                flagged=latched,
-            ))
-        return out
+        # --- hysteresis latch, vectorized over node-indexed state arrays
+        if self._state_ids is None or \
+                not np.array_equal(self._state_ids, frame.node_ids):
+            self._realign_state(frame.node_ids)
+        latched, clean = self._latched, self._clean
+        clean[:] = np.where(raw_flag, 0,
+                            np.where(latched, clean + 1, clean))
+        latched[:] = raw_flag | (latched & (clean < cfg.clear_windows))
+
+        return FleetAssessment(
+            node_ids=frame.node_ids, slowdown=slowdown, stalled=stalled,
+            step_deviant=step_deviant, support_masks=support_masks,
+            flagged=latched.copy())
+
+    # ------------------------------------------------------- latch queries
+
+    def latched_many(self, ids: np.ndarray) -> np.ndarray:
+        """Vectorized ``is_latched`` over an id array: O(latched + len)
+        instead of one fleet scan per query."""
+        lat = set()
+        if self._state_ids is not None:
+            lat.update(int(n) for n in self._state_ids[self._latched])
+        lat.update(n for n, st in self._off.items() if st[0])
+        return np.fromiter((int(i) in lat for i in ids), bool, len(ids))
 
     def is_latched(self, node_id: int) -> bool:
         """Public latch query: is this node currently flagged (with
         hysteresis)? The health manager's deferred-swap confirmation and
         any external trace/UI consumer must use this instead of reaching
         into detector internals."""
-        return self._latched.get(node_id, False)
+        if self._state_ids is not None:
+            hit = np.flatnonzero(self._state_ids == node_id)
+            if hit.size:
+                return bool(self._latched[hit[0]])
+        st = self._off.get(int(node_id))
+        return bool(st[0]) if st is not None else False
 
     def latched_nodes(self) -> List[int]:
         """All currently latched node ids (sorted, for stable iteration)."""
-        return sorted(n for n, v in self._latched.items() if v)
+        ids = set()
+        if self._state_ids is not None:
+            ids.update(int(n) for n in self._state_ids[self._latched])
+        ids.update(n for n, st in self._off.items() if st[0])
+        return sorted(ids)
 
     def reset_node(self, node_id: int) -> None:
         """Forget latch state (node replaced/repaired)."""
-        self._latched.pop(node_id, None)
-        self._clean_streak.pop(node_id, None)
+        self._off.pop(int(node_id), None)
+        if self._state_ids is not None:
+            hit = np.flatnonzero(self._state_ids == node_id)
+            if hit.size:
+                self._latched[hit[0]] = False
+                self._clean[hit[0]] = 0

@@ -4,15 +4,17 @@
 peer-relative detector and the tiered policy, and emits ``HealthEvent``s for
 the health manager to act on. It is deliberately thin: all intelligence lives
 in the detector/policy so this loop stays lightweight and non-intrusive —
-the paper's requirement for running it against production jobs.
+the paper's requirement for running it against production jobs. The whole
+window is processed on the detector's ``FleetAssessment`` arrays; per-node
+records are materialized only for the nodes that generated decisions.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Dict, List, Optional
 
-from repro.core.detector import DetectorConfig, NodeAssessment, \
-    StragglerDetector
+from repro.core.detector import (DetectorConfig, FleetAssessment,
+                                 NodeAssessment, StragglerDetector)
 from repro.core.policy import Action, Decision, PolicyConfig, TieredPolicy
 from repro.core.telemetry import Frame
 
@@ -36,13 +38,14 @@ class OnlineMonitor:
         self.events: List[HealthEvent] = []
         # nodes currently marked pending-verification (watched closely)
         self.pending: Dict[int, float] = {}
+        self.last_assessment: Optional[FleetAssessment] = None
 
     def observe(self, frame: Frame) -> List[HealthEvent]:
         """Process one evaluation window; returns new events."""
-        assessments = self.detector.update(frame)
-        by_id = {a.node_id: a for a in assessments}
+        fleet = self.detector.update(frame)
+        self.last_assessment = fleet
         new: List[HealthEvent] = []
-        for d in self.policy.decide(assessments):
+        for d in self.policy.decide(fleet):
             if d.action == Action.PENDING_VERIFICATION:
                 # record once; re-emit only on escalation
                 if d.node_id in self.pending:
@@ -50,15 +53,16 @@ class OnlineMonitor:
                 self.pending[d.node_id] = frame.t
             else:
                 self.pending.pop(d.node_id, None)
-            ev = HealthEvent(frame.t, frame.step, d, by_id[d.node_id])
+            idx = fleet.index_of(d.node_id)
+            ev = HealthEvent(frame.t, frame.step, d, fleet.node(idx))
             new.append(ev)
             self.events.append(ev)
             if self.on_event:
                 self.on_event(ev)
         # drop pending marks for nodes that cleared
         for nid in list(self.pending):
-            a = by_id.get(nid)
-            if a is not None and not a.flagged:
+            cleared = fleet.flagged_of(nid)
+            if cleared is False:          # None = node left the frame
                 del self.pending[nid]
         return new
 

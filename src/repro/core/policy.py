@@ -16,9 +16,9 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
+from typing import List, Optional, Sequence, Union
 
-from repro.core.detector import NodeAssessment
+from repro.core.detector import FleetAssessment, NodeAssessment
 
 
 class Action(enum.Enum):
@@ -46,21 +46,44 @@ class TieredPolicy:
     def __init__(self, cfg: Optional[PolicyConfig] = None):
         self.cfg = cfg or PolicyConfig()
 
-    def decide(self, assessments: List[NodeAssessment]) -> List[Decision]:
+    def decide(self, assessments: Union[FleetAssessment,
+                                        Sequence[NodeAssessment]]
+               ) -> List[Decision]:
+        if isinstance(assessments, FleetAssessment):
+            return self._decide_fleet(assessments)
+        return [self._decide_one(a.node_id, a.slowdown, a.stalled, a.support)
+                for a in assessments if a.flagged]
+
+    def _decide_fleet(self, fleet: FleetAssessment) -> List[Decision]:
+        """Vectorized tier classification over the assessment arrays:
+        only the flagged rows ever become Python objects."""
+        idx = fleet.flagged_indices()
+        if not idx.size:
+            return []
+        slowdown = fleet.slowdown[idx]
+        stalled = fleet.stalled[idx]
+        # tier codes for all flagged rows in one pass
+        immediate = stalled | (slowdown >= self.cfg.severe_slowdown)
+        deferred = ~immediate & (slowdown >= self.cfg.moderate_slowdown)
         out = []
-        for a in assessments:
-            if not a.flagged:
-                continue
-            if a.stalled or a.slowdown >= self.cfg.severe_slowdown:
-                act = Action.IMMEDIATE_RESTART
-                why = "stall" if a.stalled else \
-                    f"severe slowdown {a.slowdown:.0%}"
-            elif a.slowdown >= self.cfg.moderate_slowdown:
-                act = Action.DEFER_TO_CHECKPOINT
-                why = f"moderate sustained slowdown {a.slowdown:.0%}"
-            else:
-                act = Action.PENDING_VERIFICATION
-                why = ("hardware signals: " + ",".join(a.support)
-                       if a.support else "marginal step deviation")
-            out.append(Decision(a.node_id, act, why, a.slowdown))
+        for j, i in enumerate(idx):
+            support = None if immediate[j] or deferred[j] \
+                else fleet.support_of(int(i))
+            out.append(self._decide_one(
+                int(fleet.node_ids[i]), float(slowdown[j]),
+                bool(stalled[j]), support))
         return out
+
+    def _decide_one(self, node_id: int, slowdown: float, stalled: bool,
+                    support) -> Decision:
+        if stalled or slowdown >= self.cfg.severe_slowdown:
+            act = Action.IMMEDIATE_RESTART
+            why = "stall" if stalled else f"severe slowdown {slowdown:.0%}"
+        elif slowdown >= self.cfg.moderate_slowdown:
+            act = Action.DEFER_TO_CHECKPOINT
+            why = f"moderate sustained slowdown {slowdown:.0%}"
+        else:
+            act = Action.PENDING_VERIFICATION
+            why = ("hardware signals: " + ",".join(support)
+                   if support else "marginal step deviation")
+        return Decision(node_id, act, why, slowdown)

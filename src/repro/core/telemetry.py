@@ -23,8 +23,7 @@ Metric catalogue (paper §4.1) — all per-node reductions over the node's
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, Dict, Optional, Protocol
+from typing import Dict, Optional, Protocol
 
 import numpy as np
 
@@ -77,55 +76,116 @@ class Collector(Protocol):
 class RingHistory:
     """Fixed-depth per-metric history of fleet frames (vectorized).
 
-    Stores the last ``depth`` frames as stacked (depth, N) arrays per metric;
-    used by the detector for temporal (K-of-N window) filtering."""
+    Preallocated circular ``(depth, N)`` buffers per metric: each ``push``
+    writes one row in place instead of re-stacking frame lists, so the
+    steady-state cost of keeping a 16k-node window is one row-copy per
+    metric per evaluation window. Used by the detector for temporal
+    (K-of-N window) filtering — those reductions are order-invariant, so
+    the hot path reads the raw buffers via ``rows`` and only ``stacked``
+    pays for chronological ordering."""
 
     def __init__(self, depth: int):
         self.depth = depth
-        self._frames: Deque[Frame] = deque(maxlen=depth)
+        self._bufs: Dict[str, np.ndarray] = {}   # metric -> (depth, N)
+        self._valid: Optional[np.ndarray] = None  # (depth, N) bool
+        self._ids: Optional[np.ndarray] = None    # (N,) current node ids
+        self._used = 0          # rows filled so far (<= depth)
+        self._head = 0          # next row to (over)write
+        self._last: Optional[Frame] = None
+        self.generation = 0     # bumped on every (re)allocation
+        self.last_backfill: Optional[np.ndarray] = None  # cols changed by
+        # the most recent push's replacement backfill (None if none)
+
+    def _alloc(self, frame: Frame) -> None:
+        n = len(frame.node_ids)
+        self._bufs = {m: np.empty((self.depth, n)) for m in frame.metrics}
+        self._valid = np.empty((self.depth, n), bool)
+        self._ids = frame.node_ids.copy()
+        self._used = 0
+        self._head = 0
+        self.generation += 1
 
     def push(self, frame: Frame) -> None:
-        if self._frames:
-            last_ids = self._frames[-1].node_ids
-            if len(frame.node_ids) != len(last_ids):
-                # fleet resized: history no longer aligns — restart.
-                self._frames.clear()
-            elif not np.array_equal(frame.node_ids, last_ids):
-                # node replacement: the new node must NOT inherit its
-                # predecessor's history column (otherwise every freshly
-                # swapped-in spare is instantly "sustained deviant" and a
-                # replacement cascade follows). Backfill changed columns
-                # with the new node's current readings; everyone else keeps
-                # their window.
-                changed = frame.node_ids != last_ids
-                for f in self._frames:
-                    for m, vals in f.metrics.items():
-                        if m in frame.metrics:
-                            vals[changed] = frame.metrics[m][changed]
-                    f.valid[changed] = True
-                    f.node_ids = f.node_ids.copy()
-                    f.node_ids[changed] = frame.node_ids[changed]
-        self._frames.append(frame)
+        self.last_backfill = None
+        ids = self._ids
+        if ids is None or len(frame.node_ids) != len(ids) or \
+                set(frame.metrics) != set(self._bufs):
+            # fleet resized (or metric schema changed): history no longer
+            # aligns — restart.
+            self._alloc(frame)
+        elif not np.array_equal(frame.node_ids, ids):
+            # node replacement: the new node must NOT inherit its
+            # predecessor's history column (otherwise every freshly
+            # swapped-in spare is instantly "sustained deviant" and a
+            # replacement cascade follows). Backfill changed columns
+            # with the new node's current readings; everyone else keeps
+            # their window.
+            changed = frame.node_ids != ids
+            for m, buf in self._bufs.items():
+                buf[:, changed] = frame.metrics[m][changed]
+            self._valid[:, changed] = True
+            self._ids = ids.copy()
+            self._ids[changed] = frame.node_ids[changed]
+            self.last_backfill = changed
+        row = self._head
+        for m, v in frame.metrics.items():
+            self._bufs[m][row] = v
+        self._valid[row] = frame.valid
+        self._head = (row + 1) % self.depth
+        self._used = min(self._used + 1, self.depth)
+        self._last = frame
+
+    @property
+    def last_row(self) -> int:
+        """Buffer row index the most recent push wrote."""
+        return (self._head - 1) % self.depth
 
     def __len__(self) -> int:
-        return len(self._frames)
+        return self._used
 
     @property
     def full(self) -> bool:
-        return len(self._frames) == self.depth
+        return self._used == self.depth
+
+    def rows(self, metric: str) -> np.ndarray:
+        """(depth_used, N) raw buffer rows, in ARBITRARY window order.
+
+        Zero-copy view for order-invariant temporal reductions (counts,
+        sums, medians over the window axis). Callers must not mutate."""
+        return self._bufs[metric][:self._used]
+
+    def rows_raw(self, metric: str) -> np.ndarray:
+        """(depth, N) full backing buffer (rows beyond ``len(self)`` are
+        uninitialized). For row-indexed score caches; do not mutate."""
+        return self._bufs[metric]
+
+    def metric_names(self) -> tuple:
+        return tuple(self._bufs)
+
+    def rows_valid(self) -> np.ndarray:
+        return self._valid[:self._used]
 
     def stacked(self, metric: str) -> np.ndarray:
-        """(depth_used, N) history for one metric."""
-        return np.stack([f.metrics[metric] for f in self._frames])
+        """(depth_used, N) history for one metric, oldest row first."""
+        return self._bufs[metric][self._order()]
 
     def stacked_valid(self) -> np.ndarray:
-        return np.stack([f.valid for f in self._frames])
+        return self._valid[self._order()]
+
+    def _order(self) -> np.ndarray:
+        if self._used < self.depth:
+            return np.arange(self._used)
+        return (self._head + np.arange(self.depth)) % self.depth
 
     def last(self) -> Frame:
-        return self._frames[-1]
+        if self._last is None:
+            raise IndexError("empty history")
+        return self._last
 
     def clear(self) -> None:
-        self._frames.clear()
+        self._used = 0
+        self._head = 0
+        self._last = None
 
 
 def reduce_device_metrics(

@@ -132,7 +132,10 @@ class GuardStepHook:
         # mistaken for this one node straggling
         self.baseline_alpha = baseline_alpha
         self.rng = np.random.RandomState(seed)
-        self._walls: List[float] = []
+        # preallocated window buffer: one slot per step of the evaluation
+        # window (the hook sits on the trainer's hot path)
+        self._walls = np.empty(window_steps)
+        self._n_walls = 0
         self._windows_seen = 0
         self._baseline: Optional[float] = None
         self._stalls: List[_Stall] = []
@@ -176,23 +179,24 @@ class GuardStepHook:
             # deferred swaps landed at the last checkpoint: the manager
             # already replaced the node(s); rewind the job now
             self._restart_pending = False
-            self._walls.clear()
+            self._n_walls = 0
             self.restarts_requested += 1
             return True
         wall = wall_s * self._stall_factor(step)
-        self._walls.append(wall)
+        self._walls[self._n_walls] = wall
+        self._n_walls += 1
         if isinstance(self.control, LocalHostControl):
             # the local control has no other clock source; a real
             # substrate (e.g. the simulator) advances its own time
             self.control.t += wall
-        if len(self._walls) < self.window_steps:
+        if self._n_walls < self.window_steps:
             return False
         self._windows_seen += 1
         if self._windows_seen <= self.warmup_windows:
-            self._walls.clear()          # compile/warm spikes: re-baseline
+            self._n_walls = 0            # compile/warm spikes: re-baseline
             return False
         frame = self._make_frame(step)
-        self._walls.clear()
+        self._n_walls = 0
         outcome = self.session.observe(frame)
         if outcome.restarts:
             self.restarts_requested += 1
@@ -208,7 +212,7 @@ class GuardStepHook:
         carry checkpoint-load / re-JIT spikes exactly like job start, and
         scoring them would flag the freshly swapped-in node and cascade
         into further spurious restarts."""
-        self._walls.clear()
+        self._n_walls = 0
         self._windows_seen = 0
 
     def on_checkpoint(self, step: int) -> None:
@@ -222,8 +226,9 @@ class GuardStepHook:
     # ------------------------------------------------------------ internal
 
     def _make_frame(self, step: int) -> Frame:
-        mine = float(np.mean(self._walls))
-        med = float(np.median(self._walls))
+        walls = self._walls[:self._n_walls]
+        mine = float(walls.mean())
+        med = float(np.median(walls))
         if self._baseline is None:
             self._baseline = med
         elif not self.session.monitor.detector.is_latched(self.node_id) \

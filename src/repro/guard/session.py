@@ -30,6 +30,8 @@ import dataclasses
 import enum
 from typing import Callable, List, Optional, Sequence, Set
 
+import numpy as np
+
 from repro.core.detector import DetectorConfig
 from repro.core.health_manager import (ClusterControl, HealthManager,
                                        ManagerStats, NodeState)
@@ -199,8 +201,14 @@ class GuardSession:
             if self.manager.stats.immediate_restarts > pre:
                 out.restarts.append(ev.decision.reason)
         # hysteresis released: report clears for nodes still in the job
-        for nid in sorted(self._flagged):
-            if not self.monitor.detector.is_latched(nid):
+        # (one vectorized latch query instead of a fleet scan per id)
+        if self._flagged:
+            ids = sorted(self._flagged)
+            still = self.monitor.detector.latched_many(
+                np.asarray(ids, dtype=np.int64))
+            for nid, latched in zip(ids, still):
+                if latched:
+                    continue
                 self._flagged.discard(nid)
                 if self.manager.state.get(nid) in (NodeState.ACTIVE,
                                                    NodeState.PENDING):

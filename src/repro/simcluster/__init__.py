@@ -1,6 +1,7 @@
-"""Simulated fleet: hardware dynamics, fault injection, synchronous step
-composition and the multi-week run simulator. Everything above this layer
-(Guard's detection/triage/sweep logic) is substrate-independent."""
+"""Simulated fleet: hardware dynamics, event-driven fault injection, the
+window-granular synchronous step engine, the declarative correlated-fault
+scenario layer, and the multi-week run simulator. Everything above this
+layer (Guard's detection/triage/sweep logic) is substrate-independent."""
 from repro.simcluster.cluster import SWEEP_PROFILE, SimCluster, \
     WorkloadProfile
 from repro.simcluster.faults import (FaultInjector, FaultKind, FaultRates,
@@ -8,10 +9,18 @@ from repro.simcluster.faults import (FaultInjector, FaultKind, FaultRates,
 from repro.simcluster.node import (Fleet, HWConfig, THROTTLE_CURVE_C,
                                    THROTTLE_CURVE_GHZ, freq_at_temp)
 from repro.simcluster.runtime import RunConfig, RunResult, Tier, simulate_run
+from repro.simcluster.scenarios import (CongestionStorm,
+                                        InitialGreyPopulation,
+                                        MaintenanceWindow, RackThermal,
+                                        Scenario, SwitchFailure, arm_all,
+                                        builtin_scenarios, register_scenario,
+                                        scenario)
 
 __all__ = [
-    "FaultInjector", "FaultKind", "FaultRates", "Fleet", "GREY_KINDS",
-    "HWConfig", "RunConfig", "RunResult", "SWEEP_PROFILE", "SimCluster",
-    "THROTTLE_CURVE_C", "THROTTLE_CURVE_GHZ", "Tier", "WorkloadProfile",
-    "freq_at_temp", "simulate_run",
+    "CongestionStorm", "FaultInjector", "FaultKind", "FaultRates", "Fleet",
+    "GREY_KINDS", "HWConfig", "InitialGreyPopulation", "MaintenanceWindow",
+    "RackThermal", "RunConfig", "RunResult", "SWEEP_PROFILE", "Scenario",
+    "SimCluster", "SwitchFailure", "THROTTLE_CURVE_C", "THROTTLE_CURVE_GHZ",
+    "Tier", "WorkloadProfile", "arm_all", "builtin_scenarios",
+    "freq_at_temp", "register_scenario", "scenario", "simulate_run",
 ]

@@ -84,7 +84,9 @@ class SimCluster:
         self.injector = FaultInjector(self.fleet, rates, seed=seed + 1)
         self.workload = workload or WorkloadProfile()
         self.window_steps = window_steps
-        self.rng = np.random.RandomState(seed + 2)
+        # barrier-noise source; must support exact state save/restore and
+        # batch==sequential gaussian streams (run_window's rewind replay)
+        self.rng = np.random.Generator(np.random.SFC64(seed + 2))
 
         self.active = list(range(n_active))
         # initial spare population only: once these ids are registered
@@ -97,26 +99,51 @@ class SimCluster:
         self.t = 0.0
         self.step = 0
         self.restarts: List[dict] = []
+        self._active_arr: Optional[np.ndarray] = None
+        # per-window buffers: (k, N) barrier-time blocks + one (N,) alive
+        # row per committed block/step
         self._win_node_times: List[np.ndarray] = []
         self._win_alive: List[np.ndarray] = []
+        # per-node cumulative NIC error baseline for window deltas;
+        # re-snapshotted per node at swap-in so a spare's idle-time errors
+        # are never misattributed to its first in-job window
+        self._prev_err = np.zeros_like(self.fleet.nic_err_count)
+        self._err_seen = self.fleet.err_version
+        self._err_dirty = False
 
     # ------------------------------------------------------------ stepping
 
-    def node_barrier_times(self) -> np.ndarray:
-        """(n_active,) seconds for each node to finish the current step."""
+    def _active_idx(self) -> np.ndarray:
+        """Cached ndarray view of the active list (invalidated on swap
+        and on any length change, e.g. tests removing nodes in place)."""
+        arr = self._active_arr
+        if arr is None or len(arr) != len(self.active):
+            arr = self._active_arr = np.asarray(self.active)
+        return arr
+
+    def _barrier_base(self, idx: np.ndarray) -> np.ndarray:
+        """(n_active,) noise-free barrier-time composition. The single
+        source of the step-time model for BOTH the per-step path and the
+        window-batched path (their bit-identical contract depends on
+        sharing it)."""
         w = self.workload
-        idx = np.asarray(self.active)
         comp = w.compute_s / self.fleet.node_compute_factor()[idx]
         commf = self.fleet.node_comm_factor()[idx] / \
             self.injector.congestion_factor[idx]
         comm = w.comm_exposed_s / np.maximum(commf, 1e-9)
         host = w.host_s / self.fleet.host_factor[idx]
-        noise = np.exp(self.rng.normal(0.0, w.step_noise, len(idx)))
-        return (comp + comm + host) * noise
+        return comp + comm + host
+
+    def node_barrier_times(self) -> np.ndarray:
+        """(n_active,) seconds for each node to finish the current step."""
+        idx = self._active_idx()
+        noise = np.exp(self.rng.standard_normal(
+            len(idx), dtype=np.float32) * self.workload.step_noise)
+        return self._barrier_base(idx) * noise
 
     def run_step(self) -> dict:
         """Advance the job by one training step; returns the step record."""
-        idx = np.asarray(self.active)
+        idx = self._active_idx()
         alive = self.fleet.alive[idx]
         times = self.node_barrier_times()
         step_time = float(times.max())
@@ -129,17 +156,106 @@ class SimCluster:
         self.t += dt
         if not crashed:
             self.step += 1
-            self._win_node_times.append(times)
+            self._win_node_times.append(times[None, :])
             self._win_alive.append(alive)
         return {"t": self.t, "step": self.step, "step_time": step_time,
                 "crashed": crashed, "node_times": times}
+
+    def run_window(self, steps: Optional[int] = None) -> dict:
+        """Advance the job by up to one evaluation window of steps,
+        batching the barrier-time composition between fault events.
+
+        The stretch of steps up to the fault injector's
+        ``next_change_t`` horizon is composed as ONE ``(k, N)``
+        vectorized draw — the per-step loop, its per-step injector
+        ticks, and its per-step thermal/traffic updates all collapse.
+        The batch draws replay the rng stream exactly as k successive
+        per-step draws would, so with no thermal ramp in flight a fixed
+        seed produces trajectories bit-identical to repeated
+        ``run_step`` — through instant-effect fault events (power,
+        memory, NIC, host, congestion, fail-stop) included. Thermal
+        ramps integrate at batch granularity: device temperatures hold
+        for the span of one batch (at most one evaluation window — the
+        telemetry cadence, well inside the thermal time constant) and
+        then advance by the batch's total dt, reaching the same
+        equilibrium as per-step integration with transiently coarser
+        sampling of the throttle curve.
+
+        Stops early on a fail-stop crash. Returns the window record:
+        ``step_times`` holds the committed steps' job step times."""
+        target = self.window_steps if steps is None else int(steps)
+        step_times: List[float] = []
+        crashed = False
+        while len(step_times) < target and not crashed:
+            idx = self._active_idx()
+            if not self.fleet.alive[idx].all():
+                self.run_step()              # crash bookkeeping path
+                crashed = True
+                break
+            k = target - len(step_times)
+            if k == 1:
+                rec = self.run_step()
+                if rec["crashed"]:
+                    crashed = True
+                else:
+                    step_times.append(rec["step_time"])
+                continue
+            # ---- frozen-state fast path: one (k, N) composition
+            self.injector.prime(self.t, idx)
+            w = self.workload
+            base = self._barrier_base(idx)                 # (N,)
+            rng_state = self.rng.bit_generator.state
+            noise = np.exp(self.rng.standard_normal(
+                (k, len(idx)), dtype=np.float32) * w.step_noise)
+            times = base[None, :] * noise                  # (k, N)
+            dts = times.max(axis=1)
+            ends = self.t + np.cumsum(dts)
+            horizon = self.injector.next_change_t()
+            m = k
+            if horizon is not None and ends[-1] > horizon:
+                # an event fires inside the window: commit only the steps
+                # up to (and including) the one whose tick lands it, and
+                # rewind the rng so the stream position matches m
+                # per-step draws exactly
+                m = min(int(np.searchsorted(ends, horizon, "left")) + 1, k)
+                self.rng.bit_generator.state = rng_state
+                noise = np.exp(self.rng.standard_normal(
+                    (m, len(idx)), dtype=np.float32) * w.step_noise)
+                times = base[None, :] * noise
+                dts = times.max(axis=1)
+            # rows 0..m-2 are event-free: their ticks are no-ops by
+            # construction, traffic accounting runs batched, and any
+            # thermal ramp integrates over the head's total time in one
+            # call (a no-op for settled fleets, keeping the bitwise
+            # contract); the last row's tick may land events — same
+            # order as the per-step loop
+            if m > 1:
+                self.fleet.account_traffic(
+                    (m - 1) * w.bytes_per_link_gb)
+                head = 0.0
+                for dt in dts[:-1]:      # sequential: bit-identical t
+                    self.t += float(dt)
+                    head += float(dt)
+                self.fleet.advance_thermals(head)
+            last_dt = float(dts[-1])
+            self.injector.tick(self.t, last_dt, idx)
+            self.fleet.advance_thermals(last_dt)
+            self.fleet.account_traffic(w.bytes_per_link_gb)
+            self.t += last_dt
+            self.step += m
+            self._win_node_times.append(times)
+            self._win_alive.append(np.ones(len(idx), bool))
+            step_times.extend(dts.tolist())
+        return {"t": self.t, "step": self.step,
+                "step_times": np.asarray(step_times),
+                "steps_run": len(step_times), "crashed": crashed}
 
     def crashed_nodes(self) -> List[int]:
         return [n for n in self.active if not self.fleet.alive[n]]
 
     def advance_idle(self, seconds: float) -> None:
         """Advance wall time without training (restart/recovery windows)."""
-        idx = np.asarray(self.active) if self.active else np.arange(0)
+        idx = self._active_idx() if self.active else np.arange(0)
         self.injector.tick(self.t, seconds, idx)
         self.fleet.advance_thermals(seconds)
         self.t += seconds
@@ -150,24 +266,28 @@ class SimCluster:
         """Aggregate the last window of steps into a telemetry Frame."""
         if not self._win_node_times:
             return None
-        idx = np.asarray(self.active)
-        times = np.stack(self._win_node_times)        # (W, N)
+        idx = self._active_idx()
+        times = np.vstack(self._win_node_times)       # (W, N)
         valid = np.stack(self._win_alive).all(axis=0) & self.fleet.alive[idx]
         self._win_node_times.clear()
         self._win_alive.clear()
-        sensors = self.fleet.read_sensors()
+        sensors = self.fleet.read_sensors(idx)
         metrics = reduce_device_metrics(
-            sensors["temp"][idx], sensors["util"][idx],
-            sensors["freq"][idx], sensors["power"][idx],
-            sensors["nic_err"][idx], sensors["nic_tx"][idx],
-            sensors["nic_up"][idx])
+            sensors["temp"], sensors["util"], sensors["freq"],
+            sensors["power"], sensors["nic_err"], sensors["nic_tx"],
+            sensors["nic_up"])
         metrics["step_time"] = times.mean(axis=0)
-        # error counters are cumulative — report the window delta
-        self._prev_err = getattr(self, "_prev_err",
-                                 np.zeros_like(self.fleet.nic_err_count))
-        delta = self.fleet.nic_err_count - self._prev_err
-        self._prev_err = self.fleet.nic_err_count.copy()
-        metrics["nic_errors"] = delta[idx].sum(axis=1)
+        # error counters are cumulative — report the window delta. Clean
+        # windows (no NIC events since the last collect, no swaps moving
+        # baselines) skip the full-fleet delta scan outright.
+        if self.fleet.err_version == self._err_seen and not self._err_dirty:
+            metrics["nic_errors"] = np.zeros(len(idx))
+        else:
+            delta = self.fleet.nic_err_count - self._prev_err
+            np.copyto(self._prev_err, self.fleet.nic_err_count)
+            metrics["nic_errors"] = delta[idx].sum(axis=1)
+            self._err_seen = self.fleet.err_version
+            self._err_dirty = False
         return Frame(t=self.t, step=self.step,
                      node_ids=idx.astype(np.int64),
                      metrics=metrics, valid=valid)
@@ -221,8 +341,14 @@ class SimCluster:
     def swap_node(self, old: int, new: int) -> None:
         i = self.active.index(old)
         self.active[i] = new
+        self._active_arr = None
         if new in self.spares:
             self.spares.remove(new)
+        # baseline the spare's cumulative NIC error counters at swap-in:
+        # errors it accrued while idle must not surface as one giant
+        # first-window delta (instant spurious peer-relative flag)
+        self._prev_err[new] = self.fleet.nic_err_count[new]
+        self._err_dirty = True
 
     def restart_job(self, reason: str) -> None:
         self.restarts.append({"t": self.t, "step": self.step,

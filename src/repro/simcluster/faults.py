@@ -17,13 +17,24 @@ Each fault kind reproduces a §3 degradation pattern:
 Grey (fail-slow) faults carry an ESCALATION clock: unmitigated, a degrading
 component eventually hard-fails. This is what gives proactive removal its
 MTTF benefit (§7.2): pulling a grey node early prevents the later crash.
+
+The injector is event-driven: Poisson arrivals are pre-sampled as per-kind
+exponential next-arrival clocks, and every future state change (arrival,
+transient expiry, escalation, scheduled scenario injection) lives on one
+time-ordered heap. ``tick`` pops only the events that actually fire inside
+the interval, and active faults are indexed per node and counted per kind
+in fleet-width arrays — so per-window cost scales with fired events, not
+with the monotonically growing fault history, and ``next_change_t`` gives
+the sim engine an exact horizon for batching whole windows of steps.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
+import heapq
 import itertools
-from typing import Dict, List, Optional
+import math
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -103,28 +114,67 @@ class FaultRates:
         }[kind]
 
 
+# heap event ops
+_EXPIRE = "expire"
+_ESCALATE = "escalate"
+_INJECT = "inject"           # pre-scheduled (scenario-layer) injection
+
+
 class FaultInjector:
     def __init__(self, fleet: Fleet, rates: Optional[FaultRates] = None,
                  seed: int = 1):
         self.fleet = fleet
         self.rates = rates or FaultRates()
         self.rng = np.random.RandomState(seed)
-        self.faults: List[Fault] = []
+        self.faults: List[Fault] = []            # full history (audit only)
         self._next_id = itertools.count()
-        # transient congestion multiplies a node's comm time
+        self._seq = itertools.count()            # heap tie-break
+        # future state changes: (t, seq, op, payload)
+        self._heap: List[Tuple[float, int, str, object]] = []
+        # per-kind Poisson next-arrival clocks (exponential inter-arrivals,
+        # rescaled when the active-set size changes — memorylessness makes
+        # that exact); (time, seq) so merge order with the heap is total
+        self._arrival: Dict[FaultKind, Tuple[float, int]] = {}
+        self._n_active = -1                      # -1: clocks not seeded yet
+        # active-fault indexes: per node for revert ops, per kind for O(1)
+        # error-signal queries
+        self._by_node: Dict[int, List[Fault]] = {}
+        self._kind_count: Dict[FaultKind, np.ndarray] = {
+            k: np.zeros(fleet.n, dtype=np.int64) for k in FaultKind}
+        # transient congestion multiplies a node's comm time; maintained
+        # incrementally (multiply on arrival, divide on expiry, snapped
+        # back to exactly 1.0 when a node's active-congestion count hits
+        # zero) so one event costs O(1), not an O(N) rebuild
         self.congestion_factor = np.ones(fleet.n)
+        self._cong_count = np.zeros(fleet.n, dtype=np.int64)
 
     # --------------------------------------------------------- creation
 
     def inject(self, kind: FaultKind, node: int, now: float = 0.0,
                severity: Optional[float] = None,
-               device: Optional[int] = None) -> Fault:
-        """Deterministic manual fault injection (benchmarks/tests)."""
-        return self._mk(kind, node, now, severity, device)
+               device: Optional[int] = None,
+               duration_s: Optional[float] = None) -> Fault:
+        """Deterministic manual fault injection (benchmarks/tests/scenarios).
+
+        ``duration_s`` bounds the fault in time (auto-revert; used by the
+        scenario layer for e.g. maintenance windows); time-bounded faults
+        do not escalate."""
+        return self._mk(kind, node, now, severity, device,
+                        duration_s=duration_s)
+
+    def schedule(self, kind: FaultKind, node: int, at: float,
+                 severity: Optional[float] = None,
+                 device: Optional[int] = None,
+                 duration_s: Optional[float] = None) -> None:
+        """Pre-schedule an injection at absolute sim time ``at`` (the
+        scenario layer's primitive for correlated future events)."""
+        spec = (kind, int(node), severity, device, duration_s)
+        heapq.heappush(self._heap, (at, next(self._seq), _INJECT, spec))
 
     def _mk(self, kind: FaultKind, node: int, now: float,
             severity: Optional[float] = None,
-            device: Optional[int] = None) -> Fault:
+            device: Optional[int] = None,
+            duration_s: Optional[float] = None) -> Fault:
         r = self.rates
         dev = int(self.rng.randint(self.fleet.d)) if device is None \
             else int(device)
@@ -132,14 +182,47 @@ class FaultInjector:
             np.clip(self.rng.beta(2, 3), 0.05, 0.95))
         t_end = None
         esc = None
-        if kind == FaultKind.CONGESTION:
+        if duration_s is not None:
+            t_end = now + float(duration_s)
+        elif kind == FaultKind.CONGESTION:
             t_end = now + float(self.rng.uniform(30, 180))
         elif kind in GREY_KINDS:
             esc = now + float(self.rng.exponential(r.escalation_mean_s))
         f = Fault(next(self._next_id), kind, node, dev, sev, now, t_end, esc)
         self.faults.append(f)
+        self._register(f)
         self._apply(f)
+        if t_end is not None:
+            heapq.heappush(self._heap, (t_end, next(self._seq), _EXPIRE, f))
+        elif esc is not None:
+            heapq.heappush(self._heap, (esc, next(self._seq), _ESCALATE, f))
         return f
+
+    @staticmethod
+    def _cong_mult(severity: float) -> float:
+        return 1.0 + 0.5 + 1.5 * severity
+
+    def _register(self, f: Fault) -> None:
+        self._by_node.setdefault(f.node, []).append(f)
+        self._kind_count[f.kind][f.node] += 1
+        if f.kind == FaultKind.CONGESTION:
+            self._cong_count[f.node] += 1
+            self.congestion_factor[f.node] *= self._cong_mult(f.severity)
+
+    def _unregister(self, f: Fault) -> None:
+        lst = self._by_node.get(f.node)
+        if lst is not None:
+            try:
+                lst.remove(f)
+            except ValueError:
+                pass
+        self._kind_count[f.kind][f.node] -= 1
+        if f.kind == FaultKind.CONGESTION:
+            self._cong_count[f.node] -= 1
+            if self._cong_count[f.node] == 0:
+                self.congestion_factor[f.node] = 1.0   # exact recovery
+            else:
+                self.congestion_factor[f.node] /= self._cong_mult(f.severity)
 
     def _apply(self, f: Fault) -> None:
         fl = self.fleet
@@ -147,81 +230,160 @@ class FaultInjector:
         if k == FaultKind.THERMAL:
             # severity -> target temperature 65..90 °C
             fl.temp_target[n, d] = 65.0 + 25.0 * s
+            fl.mark_thermal_dirty()
         elif k == FaultKind.POWER:
             fl.power_factor[n, d] = 1.0 - (0.08 + 0.12 * s)   # 8-20% deficit
+            fl.refresh_node_perf(n)
         elif k == FaultKind.MEM_ECC:
             fl.mem_factor[n, d] = 1.0 - (0.05 + 0.15 * s)
+            fl.refresh_node_perf(n)
         elif k == FaultKind.NIC_DOWN:
             fl.nic_up[n, d] = False
             fl.nic_err_count[n, d] += 1000
+            fl.invalidate_link_state()
         elif k == FaultKind.NIC_DEGRADED:
             fl.nic_quality[n, d] = 1.0 - (0.2 + 0.5 * s)
+            fl.invalidate_link_state()
         elif k == FaultKind.HOST_CPU:
             fl.host_factor[n] = 1.0 - (0.2 + 0.4 * s)
         elif k == FaultKind.CONGESTION:
-            self.congestion_factor[n] *= (1.0 + 0.5 + 1.5 * s)
+            pass                     # factor maintained by _register
         elif k == FaultKind.FAIL_STOP:
             fl.alive[n] = False
 
     def _revert(self, f: Fault) -> None:
+        if not f.active:
+            return
         fl = self.fleet
         k, n, d = f.kind, f.node, f.device
         if k == FaultKind.THERMAL:
             fl.temp_target[n, d] = fl.hw.load_temp_c
+            fl.mark_thermal_dirty()
         elif k == FaultKind.POWER:
             fl.power_factor[n, d] = 1.0
+            fl.refresh_node_perf(n)
         elif k == FaultKind.MEM_ECC:
             fl.mem_factor[n, d] = 1.0
+            fl.refresh_node_perf(n)
         elif k == FaultKind.NIC_DOWN:
             fl.nic_up[n, d] = True
+            fl.invalidate_link_state()
         elif k == FaultKind.NIC_DEGRADED:
             fl.nic_quality[n, d] = 1.0
+            fl.invalidate_link_state()
         elif k == FaultKind.HOST_CPU:
             fl.host_factor[n] = 1.0
         elif k == FaultKind.CONGESTION:
-            pass  # factor rebuilt every tick
+            pass                     # factor maintained by _unregister
         f.active = False
+        self._unregister(f)
+
+    # ----------------------------------------------------- arrival clocks
+
+    def _sample_arrival(self, kind: FaultKind, now: float) -> None:
+        rate_s = self.rates.rate_of(kind) * self._n_active / 3600.0
+        if rate_s <= 0.0:
+            self._arrival[kind] = (math.inf, next(self._seq))
+        else:
+            self._arrival[kind] = (
+                now + float(self.rng.exponential(1.0 / rate_s)),
+                next(self._seq))
+
+    def _set_active_count(self, n: int, now: float) -> None:
+        """(Re)scale the per-kind arrival clocks to the active-set size.
+
+        An exponential clock conditioned on not having fired is still
+        exponential, so remaining time scales by old_n/new_n exactly."""
+        if n == self._n_active:
+            return
+        old = self._n_active
+        self._n_active = n
+        for kind in FaultKind:
+            t, seq = self._arrival.get(kind, (math.inf, -1))
+            if old <= 0 or not math.isfinite(t) or n <= 0:
+                if n <= 0:
+                    self._arrival[kind] = (math.inf, next(self._seq))
+                else:
+                    self._sample_arrival(kind, now)
+            else:
+                self._arrival[kind] = (now + (t - now) * old / n, seq)
+
+    def prime(self, now: float, active_nodes: np.ndarray) -> None:
+        """Seed/rescale the arrival clocks without firing anything: the
+        window engine must know the true event horizon BEFORE the first
+        tick of a batch (matching the clock state a per-step loop would
+        have after its first tick)."""
+        if self._n_active < 0:
+            self._n_active = 0
+        self._set_active_count(len(active_nodes), now)
+
+    def next_change_t(self) -> Optional[float]:
+        """Earliest future time anything about the fleet state changes:
+        the sim engine batches whole windows of steps up to this horizon."""
+        # drop stale heap entries (faults already reverted by other paths)
+        h = self._heap
+        while h and h[0][2] in (_EXPIRE, _ESCALATE) and not h[0][3].active:
+            heapq.heappop(h)
+        t = h[0][0] if h else math.inf
+        for at, _ in self._arrival.values():
+            t = min(t, at)
+        return None if not math.isfinite(t) else t
 
     # ------------------------------------------------------------ tick
 
     def tick(self, now: float, dt_s: float, active_nodes: np.ndarray) -> None:
-        """Sample arrivals over [now, now+dt) and expire/escalate faults
-        (expiry/escalation evaluated at the interval END)."""
-        hours = dt_s / 3600.0
+        """Fire every pre-sampled event in (now, now+dt]: Poisson
+        arrivals, transient expiries, grey escalations and scheduled
+        scenario injections, in global time order. Cost is O(events
+        fired), independent of how many faults have ever existed."""
         t_end = now + dt_s
-        for kind in FaultKind:
-            lam = self.rates.rate_of(kind) * hours * len(active_nodes)
-            for _ in range(self.rng.poisson(lam)):
-                node = int(self.rng.choice(active_nodes))
-                self._mk(kind, node, now)
-
-        self.congestion_factor[:] = 1.0
-        for f in self.faults:
-            if not f.active:
-                continue
-            if f.t_end is not None and t_end >= f.t_end:
-                self._revert(f)
-            elif f.kind == FaultKind.CONGESTION:
-                self._apply(f)           # rebuild transient factor
-            elif f.escalate_at is not None and t_end >= f.escalate_at:
-                self._revert(f)
-                self._mk(FaultKind.FAIL_STOP, f.node, t_end, severity=1.0)
+        if self._n_active < 0:
+            self._n_active = 0
+        self._set_active_count(len(active_nodes), now)
+        while True:
+            # next arrival across kinds vs. next heap event, merged by
+            # (time, seq) so processing order is deterministic
+            akind = None
+            at, aseq = math.inf, -1
+            for kind, (t, seq) in self._arrival.items():
+                if (t, seq) < (at, aseq) or akind is None:
+                    at, aseq, akind = t, seq, kind
+            ht, hseq = (self._heap[0][0], self._heap[0][1]) if self._heap \
+                else (math.inf, -1)
+            if min(at, ht) > t_end:
+                break
+            if (at, aseq) <= (ht, hseq):
+                # Poisson arrival lands on a random active node
+                if len(active_nodes):
+                    node = int(self.rng.choice(active_nodes))
+                    self._mk(akind, node, at)
+                self._sample_arrival(akind, at)
+            else:
+                _, _, op, payload = heapq.heappop(self._heap)
+                if op == _INJECT:
+                    kind, node, sev, dev, dur = payload
+                    self._mk(kind, node, ht, sev, dev, duration_s=dur)
+                elif op == _EXPIRE:
+                    self._revert(payload)
+                elif op == _ESCALATE and payload.active:
+                    self._revert(payload)
+                    self._mk(FaultKind.FAIL_STOP, payload.node, ht,
+                             severity=1.0)
 
     # ----------------------------------------------------- queries/ops
 
     def active_faults(self, node: Optional[int] = None) -> List[Fault]:
-        return [f for f in self.faults if f.active and
-                (node is None or f.node == node)]
+        if node is not None:
+            return [f for f in self._by_node.get(node, ()) if f.active]
+        return [f for lst in self._by_node.values() for f in lst if f.active]
 
     def node_error_signals(self, node: int):
-        """Actionable evidence for triage routing."""
+        """Actionable evidence for triage routing (O(1) via kind counts)."""
         from repro.core.triage import ErrorSignals
-        gpu = nic = False
-        for f in self.active_faults(node):
-            if f.kind in (FaultKind.THERMAL, FaultKind.MEM_ECC):
-                gpu = True
-            if f.kind in (FaultKind.NIC_DOWN, FaultKind.NIC_DEGRADED):
-                nic = True
+        kc = self._kind_count
+        gpu = bool(kc[FaultKind.THERMAL][node] + kc[FaultKind.MEM_ECC][node])
+        nic = bool(kc[FaultKind.NIC_DOWN][node] +
+                   kc[FaultKind.NIC_DEGRADED][node])
         return ErrorSignals(gpu_errors=gpu, nic_errors=nic)
 
     def remediate(self, node: int, stage: str) -> None:

@@ -30,7 +30,7 @@ traces for the figure-level benchmarks.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -38,6 +38,8 @@ from repro.core.sweep import SweepConfig, multi_node_sweep, single_node_sweep
 from repro.guard import GuardSession, JobRestart, Tier
 from repro.simcluster.cluster import SimCluster, WorkloadProfile
 from repro.simcluster.faults import FaultRates
+from repro.simcluster.scenarios import InitialGreyPopulation, Scenario, \
+    arm_all
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +64,11 @@ class RunConfig:
     hunt_downtime_s: Dict[int, float] = dataclasses.field(
         default_factory=lambda: {1: 5_400.0, 2: 2_700.0})
     # grey population a long-unmanaged cluster has accumulated at t=0
+    # (armed through the scenario layer as InitialGreyPopulation)
     initial_grey_p: float = 0.10
+    # declarative correlated-fault scenarios (Scenario instances or
+    # registry names — see repro.simcluster.scenarios)
+    scenarios: Tuple = ()
     # manual grey-hunting model (tiers 1-2 have no online detection)
     manual_trigger_ratio: float = 1.12   # hour-mean step/healthy to notice
     manual_delay_h: Dict[int, float] = dataclasses.field(
@@ -131,24 +137,28 @@ def simulate_run(cfg: RunConfig) -> RunResult:
             cluster, nid, tier, sweep_cfg, session.spare_ids()))
     session.register_active(cluster.active)
     session.register_spares(cluster.spares)
-    # pre-existing grey population (the state of the world Guard inherits)
-    for nid in cluster.active:
-        if rng.rand() < cfg.initial_grey_p:
-            from repro.simcluster.faults import GREY_KINDS
-            kind = GREY_KINDS[rng.randint(len(GREY_KINDS))]
-            cluster.injector.inject(kind, nid, now=0.0)
+    # correlated scenarios + the pre-existing grey population (the state
+    # of the world Guard inherits), all through the declarative layer
+    scenarios: List[Scenario] = list(cfg.scenarios)
+    if cfg.initial_grey_p > 0:
+        scenarios.append(InitialGreyPopulation(p=cfg.initial_grey_p))
+    arm_all(scenarios, cluster, rng)
     cluster.fleet.advance_thermals(3600.0)
 
     duration_s = cfg.duration_h * 3600.0
     healthy_step = cfg.workload.healthy_step_s
+    ckpt_every = cfg.checkpoint_interval_steps
     last_ckpt_step = 0
-    step_times: List[float] = []
+    step_chunks: List[np.ndarray] = []
+    total_steps = 0
     crashes = 0
     human_hours = 0.0
     incidents = 0
     downtime_s = 0.0
     slow_since: Optional[float] = None
-    hour_buf: List[float] = []
+    hour_steps = 0
+    hour_sum = 0.0
+    win_accum = 0                  # steps gathered toward the next window
 
     def restart(reason: str, rewind: bool) -> None:
         nonlocal last_ckpt_step, downtime_s
@@ -164,10 +174,16 @@ def simulate_run(cfg: RunConfig) -> RunResult:
                                    rewind=rewind))
 
     while cluster.t < duration_s:
-        rec = cluster.run_step()
+        # ---------------- one evaluation window (or the slice of one
+        # that reaches the next checkpoint boundary), batched
+        to_ckpt = ckpt_every - (cluster.step % ckpt_every)
+        win = cluster.run_window(min(cfg.window_steps - win_accum, to_ckpt))
 
         # ---------------- crash path (fail-stop)
-        if rec["crashed"]:
+        if win["crashed"]:
+            if win["steps_run"]:
+                step_chunks.append(win["step_times"])
+                total_steps += win["steps_run"]
             crashes += 1
             incidents += 1
             recovery = cfg.crash_recovery_s[int(tier)]
@@ -189,43 +205,54 @@ def simulate_run(cfg: RunConfig) -> RunResult:
                 for bad in dead:
                     cluster.injector.clear_node(bad)  # hw leaves with node
             restart("fail-stop crash", rewind=True)
+            win_accum = 0
+            hour_steps, hour_sum = 0, 0.0
             continue
 
-        step_times.append(rec["step_time"])
-        hour_buf.append(rec["step_time"])
+        step_chunks.append(win["step_times"])
+        total_steps += win["steps_run"]
+        win_accum += win["steps_run"]
+        hour_steps += win["steps_run"]
+        hour_sum += float(win["step_times"].sum())
         # offline qualification overlaps the job: let the sweep bench
-        # catch up to job time on every step
+        # catch up to job time after every window
         session.advance(cluster.t, step=cluster.step)
 
         # ---------------- online monitoring (tiers 3-4)
-        if session.online_monitoring and \
-                cluster.step % cfg.window_steps == 0:
+        if session.online_monitoring and win_accum >= cfg.window_steps:
+            win_accum = 0
             frame = cluster.collect()
             if frame is not None:
                 outcome = session.observe(frame)
+                restarted = False
                 for reason in outcome.restarts:
                     incidents += 1
                     human_hours += cfg.auto_human_h[int(tier)]
                     restart(reason, rewind=True)
+                    restarted = True
+                if restarted:
+                    hour_steps, hour_sum = 0, 0.0
+        elif win_accum >= cfg.window_steps:
+            win_accum = 0
 
         # ---------------- checkpoint boundary
-        if cluster.step > 0 and \
-                cluster.step % cfg.checkpoint_interval_steps == 0:
+        if cluster.step > 0 and cluster.step % ckpt_every == 0:
             last_ckpt_step = cluster.step
             ck = session.on_checkpoint(now=cluster.t, step=cluster.step)
             if ck.applied_swaps:
                 incidents += ck.applied_swaps
                 human_hours += ck.applied_swaps * cfg.auto_human_h[int(tier)]
                 restart("deferred swaps", rewind=False)
+                win_accum = 0
             human_hours += session.drain_human_hours()
             # background warm-pool maintenance overlaps the job
             session.top_up_spares(cfg.n_spare)
 
         # ---------------- manual grey hunting (tiers 1-2)
         if not session.online_monitoring and \
-                len(hour_buf) * healthy_step >= 3600.0:
-            hour_mean = float(np.mean(hour_buf))
-            hour_buf.clear()
+                hour_steps * healthy_step >= 3600.0:
+            hour_mean = hour_sum / hour_steps
+            hour_steps, hour_sum = 0, 0.0
             if hour_mean > cfg.manual_trigger_ratio * healthy_step:
                 if slow_since is None:
                     slow_since = cluster.t
@@ -261,6 +288,7 @@ def simulate_run(cfg: RunConfig) -> RunResult:
                         else:
                             cluster.injector.clear_node(worst)
                         restart("manual grey-node replacement", rewind=False)
+                        win_accum = 0
             else:
                 slow_since = None
 
@@ -269,7 +297,7 @@ def simulate_run(cfg: RunConfig) -> RunResult:
     human_hours += session.drain_human_hours()
 
     # ----------------------------------------------------------- metrics
-    st = np.asarray(step_times)
+    st = np.concatenate(step_chunks) if step_chunks else np.asarray([])
     elapsed_h = cluster.t / 3600.0
     active_h = max(elapsed_h - downtime_s / 3600.0, 1e-9)
     steps = len(st)

@@ -1,0 +1,309 @@
+"""Golden equivalence: the vectorized FleetAssessment detector must be
+bit-identical to the pre-refactor per-node reference implementation —
+flags, slowdowns, stall/step-deviant verdicts, support sets and latch
+state — over recorded frame sequences that exercise warmup, node
+replacement backfill, fleet resize and hysteresis."""
+import copy
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core import DetectorConfig, StragglerDetector
+from repro.core.detector import FleetAssessment, robust_z
+from repro.core.telemetry import HARDWARE_METRICS, METRIC_DIRECTION, Frame
+from repro.simcluster import FaultKind, FaultRates, SimCluster
+
+
+# --------------------------------------------------------------- reference
+# Frozen port of the per-node detector as it existed before the
+# vectorization refactor (list-stacked history + per-id dict latches).
+
+
+class _RefRing:
+    def __init__(self, depth):
+        self.depth = depth
+        self._frames = deque(maxlen=depth)
+
+    def push(self, frame):
+        if self._frames:
+            last_ids = self._frames[-1].node_ids
+            if len(frame.node_ids) != len(last_ids):
+                self._frames.clear()
+            elif not np.array_equal(frame.node_ids, last_ids):
+                changed = frame.node_ids != last_ids
+                for f in self._frames:
+                    for m, vals in f.metrics.items():
+                        if m in frame.metrics:
+                            vals[changed] = frame.metrics[m][changed]
+                    f.valid[changed] = True
+                    f.node_ids = f.node_ids.copy()
+                    f.node_ids[changed] = frame.node_ids[changed]
+        self._frames.append(frame)
+
+    def __len__(self):
+        return len(self._frames)
+
+    def stacked(self, metric):
+        return np.stack([f.metrics[metric] for f in self._frames])
+
+    def last(self):
+        return self._frames[-1]
+
+
+class RefDetector:
+    def __init__(self, cfg=None):
+        self.cfg = cfg or DetectorConfig()
+        self.history = _RefRing(self.cfg.window)
+        self._clean_streak = {}
+        self._latched = {}
+
+    def _deviation_matrix(self, metric):
+        cfg = self.cfg
+        hist = self.history.stacked(metric)
+        direction = METRIC_DIRECTION[metric]
+        med = np.median(hist, axis=1, keepdims=True)
+        floor = np.maximum(np.abs(med) * cfg.mad_floor_frac, 1e-9)
+        z = robust_z(hist, axis=1, mad_floor=floor) * direction
+        return z > cfg.z_threshold
+
+    def update(self, frame):
+        cfg = self.cfg
+        self.history.push(frame)
+        n = len(frame.node_ids)
+        depth = len(self.history)
+        warmed = depth >= cfg.persistence
+        need = cfg.persistence if warmed else depth + 1
+
+        st_hist = self.history.stacked("step_time")
+        med = np.median(st_hist, axis=1, keepdims=True)
+        rel = st_hist / np.maximum(med, 1e-9) - 1.0
+        step_dev_w = self._deviation_matrix("step_time") & \
+            (rel > cfg.slowdown_floor)
+        dev_count = step_dev_w.sum(0)
+        step_deviant = dev_count >= need
+        slow_sum = np.where(step_dev_w, rel, 0.0).sum(0)
+        slowdown = np.where(step_deviant,
+                            slow_sum / np.maximum(dev_count, 1), 0.0)
+
+        last = self.history.last()
+        stalled = (~last.valid) | (
+            last.metrics["step_time"] >
+            cfg.stall_factor * np.median(last.metrics["step_time"]))
+
+        support_masks = {}
+        for m in HARDWARE_METRICS:
+            if m in last.metrics:
+                dev = self._deviation_matrix(m)
+                support_masks[m] = dev.sum(0) >= need
+
+        support_count = np.zeros(n, dtype=int)
+        for mask in support_masks.values():
+            support_count += mask.astype(int)
+
+        raw_flag = stalled | step_deviant | (support_count >= cfg.min_support)
+
+        out = []
+        for i, nid in enumerate(frame.node_ids):
+            nid = int(nid)
+            latched = self._latched.get(nid, False)
+            if raw_flag[i]:
+                self._clean_streak[nid] = 0
+                latched = True
+            elif latched:
+                streak = self._clean_streak.get(nid, 0) + 1
+                self._clean_streak[nid] = streak
+                if streak >= cfg.clear_windows:
+                    latched = False
+            self._latched[nid] = latched
+            out.append(dict(
+                node_id=nid,
+                slowdown=float(slowdown[i]),
+                stalled=bool(stalled[i]),
+                support=[m for m, msk in support_masks.items() if msk[i]],
+                step_deviant=bool(step_deviant[i]),
+                flagged=latched))
+        return out
+
+    def is_latched(self, node_id):
+        return self._latched.get(node_id, False)
+
+    def reset_node(self, node_id):
+        self._latched.pop(node_id, None)
+        self._clean_streak.pop(node_id, None)
+
+
+# ----------------------------------------------------------- frame sources
+
+
+def full_frame(step, step_times, n=None, **hw):
+    n = n or len(step_times)
+    metrics = {
+        "step_time": np.asarray(step_times, float),
+        "gpu_temp": np.asarray(hw.get("temps", np.full(n, 58.0)), float),
+        "gpu_util": np.full(n, 0.97),
+        "gpu_freq": np.asarray(hw.get("freqs", np.full(n, 1.93)), float),
+        "gpu_power": np.full(n, 350.0),
+        "nic_errors": np.asarray(hw.get("nic_err", np.zeros(n)), float),
+        "nic_tx_rate": np.full(n, 50.0),
+        "nic_up": np.ones(n),
+    }
+    ids = hw.get("node_ids", np.arange(n, dtype=np.int64))
+    valid = hw.get("valid", np.ones(n, bool))
+    return Frame(t=step * 60.0, step=step, node_ids=ids,
+                 metrics=metrics, valid=valid)
+
+
+def scripted_sequence():
+    """Warmup -> sustained straggler -> replacement backfill -> stall ->
+    heartbeat loss -> hw-only deviant -> recovery -> fleet resize."""
+    rng = np.random.RandomState(7)
+    frames = []
+    step = 0
+
+    def noise(n=16):
+        return 10.0 * (1 + rng.normal(0, 0.003, n))
+
+    for _ in range(4):                       # warmup, healthy
+        frames.append(full_frame(step, noise())); step += 1
+    for _ in range(6):                       # node 5 sustained +18%
+        t = noise(); t[5] *= 1.18
+        frames.append(full_frame(step, t)); step += 1
+    # node 5 replaced by node 99: backfill must protect the newcomer
+    ids = np.arange(16, dtype=np.int64); ids[5] = 99
+    for _ in range(4):
+        frames.append(full_frame(step, noise(), node_ids=ids.copy()))
+        step += 1
+    # node 3 stalls hard for one window, then recovers
+    t = noise(); t[3] *= 30.0
+    frames.append(full_frame(step, t, node_ids=ids.copy())); step += 1
+    for _ in range(3):
+        frames.append(full_frame(step, noise(), node_ids=ids.copy()))
+        step += 1
+    # node 7 loses heartbeat once
+    v = np.ones(16, bool); v[7] = False
+    frames.append(full_frame(step, noise(), node_ids=ids.copy(), valid=v))
+    step += 1
+    # node 11: two hardware signals deviate, no step impact
+    for _ in range(6):
+        temps = np.full(16, 58.0); temps[11] = 88.0
+        freqs = np.full(16, 1.93); freqs[11] = 1.2
+        frames.append(full_frame(step, noise(), node_ids=ids.copy(),
+                                 temps=temps, freqs=freqs))
+        step += 1
+    for _ in range(6):                       # recovery / hysteresis clears
+        frames.append(full_frame(step, noise(), node_ids=ids.copy()))
+        step += 1
+    # fleet resize: history restarts
+    for _ in range(5):
+        frames.append(full_frame(step, noise(12), n=12)); step += 1
+    return frames
+
+
+def simulated_sequence():
+    """Frames recorded off the simulated fleet under real fault churn."""
+    rates = FaultRates(congestion=0.2, fail_stop=0, admission_grey_p=0)
+    c = SimCluster(24, 4, rates=rates, seed=21)
+    c.injector.inject(FaultKind.POWER, 7, severity=0.9)
+    c.injector.inject(FaultKind.THERMAL, 11, severity=0.8)
+    c.fleet.advance_thermals(3600.0)
+    frames = []
+    for w in range(30):
+        c.run_window(6)
+        if w == 12:                          # mid-sequence replacement
+            c.swap_node(7, c.spares[0])
+        f = c.collect()
+        if f is not None:
+            frames.append(f)
+    return frames
+
+
+# ----------------------------------------------------------------- tests
+
+
+def assert_equivalent(frames, cfg=None, resets=()):
+    new = StragglerDetector(cfg)
+    ref = RefDetector(cfg)
+    resets = dict(resets)
+    for w, frame in enumerate(frames):
+        fa = new.update(copy.deepcopy(frame))
+        rs = ref.update(copy.deepcopy(frame))
+        assert isinstance(fa, FleetAssessment)
+        for i, r in enumerate(rs):
+            a = fa.node(i)
+            assert a.node_id == r["node_id"], (w, i)
+            assert a.flagged == r["flagged"], (w, i)
+            assert a.stalled == r["stalled"], (w, i)
+            assert a.step_deviant == r["step_deviant"], (w, i)
+            assert a.slowdown == r["slowdown"], (w, i)   # bit-identical
+            assert a.support == r["support"], (w, i)
+        # latch state agrees for every id either side has ever seen
+        seen = set(ref._latched) | {int(n) for n in frame.node_ids}
+        for nid in seen:
+            assert new.is_latched(nid) == ref.is_latched(nid), (w, nid)
+        if w in resets:
+            new.reset_node(resets[w])
+            ref.reset_node(resets[w])
+
+
+class TestGoldenEquivalence:
+    def test_scripted_sequence(self):
+        assert_equivalent(scripted_sequence())
+
+    def test_scripted_sequence_strict_config(self):
+        assert_equivalent(scripted_sequence(),
+                          DetectorConfig(persistence=2, clear_windows=2,
+                                         z_threshold=2.5))
+
+    def test_simulated_sequence(self):
+        assert_equivalent(simulated_sequence())
+
+    def test_simulated_sequence_with_reset(self):
+        # reset_node mid-stream (what monitor.node_replaced does)
+        assert_equivalent(simulated_sequence(), resets={13: 7})
+
+    def test_lazy_materialization_budget(self):
+        """The equivalence above materializes every node; the production
+        path must stay O(flagged): a straggler-free fleet materializes
+        nothing, a one-straggler fleet exactly one per window."""
+        det = StragglerDetector()
+        rng = np.random.RandomState(0)
+        for w in range(10):
+            t = 10 + rng.normal(0, 0.01, 256)
+            t[17] = 12.5
+            fa = det.update(full_frame(w, t, n=256))
+            fa.flagged_assessments()
+            # persistence=3: the straggler latches from the 3rd window on
+            assert fa.materialized == (1 if w >= 2 else 0)
+
+
+class TestRunWindowVsRunStepDeterminism:
+    """Satellite: fixed-seed determinism of run_window vs run_step."""
+
+    def test_fixed_seed_bitwise_equal(self):
+        a = SimCluster(16, 2, seed=3)
+        b = SimCluster(16, 2, seed=3)
+        wa = []
+        wb = []
+        for _ in range(20):
+            wa.append(a.run_window(6)["step_times"])
+            wb.append(np.asarray([b.run_step()["step_time"]
+                                  for _ in range(6)]))
+        np.testing.assert_array_equal(np.concatenate(wa),
+                                      np.concatenate(wb))
+        assert a.t == b.t and a.step == b.step
+        fa, fb = a.collect(), b.collect()
+        for m in fa.metrics:
+            np.testing.assert_array_equal(fa.metrics[m], fb.metrics[m],
+                                          err_msg=m)
+
+    def test_repeated_run_window_deterministic(self):
+        def trace(seed):
+            c = SimCluster(16, 2, rates=FaultRates(congestion=0.3),
+                           seed=seed)
+            out = []
+            for _ in range(30):
+                out.append(c.run_window(6)["step_times"])
+            return np.concatenate(out)
+        np.testing.assert_array_equal(trace(5), trace(5))
+        assert not np.array_equal(trace(5), trace(6))

@@ -498,7 +498,7 @@ class TestSimulateRunGuardAPI:
     def test_restart_events_report_lost_steps(self):
         cfg = RunConfig(tier=Tier.ENHANCED, n_nodes=24, n_spare=4,
                         duration_h=4.0, initial_grey_p=0.15,
-                        rates=FaultRates(fail_stop=3e-2), seed=1)
+                        rates=FaultRates(fail_stop=3e-2), seed=2)
         r = simulate_run(cfg)
         assert r.crashes > 0
         crashes = [e for e in r.events if e["kind"] == "crash"]

@@ -1,0 +1,287 @@
+"""Scenario-layer tests: registry plumbing, each built-in's fleet effect,
+window-granular engine equivalence, and the NIC error-baseline regression."""
+import numpy as np
+import pytest
+
+from repro.core import FleetAssessment, StragglerDetector
+from repro.simcluster.node import Fleet
+from repro.simcluster import (CongestionStorm, FaultKind, FaultRates,
+                              InitialGreyPopulation, MaintenanceWindow,
+                              RackThermal, RunConfig, SimCluster,
+                              SwitchFailure, Tier, arm_all,
+                              builtin_scenarios, scenario, simulate_run)
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+
+
+def cluster(**kw):
+    kw.setdefault("rates", QUIET)
+    kw.setdefault("n_active", 32)
+    kw.setdefault("n_spare", 4)
+    return SimCluster(**kw)
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        names = set(builtin_scenarios())
+        assert {"rack_thermal", "switch_failure", "congestion_storm",
+                "maintenance_window", "initial_grey"} <= names
+
+    def test_lookup_by_name_with_overrides(self):
+        sc = scenario("rack_thermal", at_h=1.0, rack_size=4)
+        assert isinstance(sc, RackThermal)
+        assert sc.at_h == 1.0 and sc.rack_size == 4
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(KeyError, match="unknown scenario"):
+            scenario("definitely_not_a_scenario")
+
+    def test_arm_all_accepts_names_and_instances(self):
+        c = cluster()
+        rng = np.random.RandomState(0)
+        faults = arm_all(["initial_grey",
+                          InitialGreyPopulation(p=1.0)], c, rng)
+        # second scenario hits every active node with p=1
+        assert len(faults) >= len(c.active)
+
+
+class TestBuiltinScenarios:
+    def test_rack_thermal_hits_contiguous_rack(self):
+        c = cluster()
+        rng = np.random.RandomState(1)
+        RackThermal(at_h=0.0, rack_size=8, rack_start=4, severity=0.9,
+                    power_fraction=0.0, stagger_s=0.0).arm(c, rng)
+        targets = c.fleet.temp_target.max(axis=1)
+        hot = np.flatnonzero(targets > c.fleet.hw.load_temp_c + 1)
+        assert list(hot) == list(range(4, 12))
+        # the rack ramps into a correlated compute-straggler group
+        c.fleet.advance_thermals(3600.0)
+        slow = c.fleet.node_compute_factor()
+        assert slow[4:12].max() < slow[12:].min()
+
+    def test_rack_thermal_future_events_fire_during_run(self):
+        c = cluster()
+        rng = np.random.RandomState(1)
+        RackThermal(at_h=0.5, rack_size=8, rack_start=0, severity=0.9,
+                    power_fraction=0.0, stagger_s=0.0).arm(c, rng)
+        assert not c.injector.active_faults()         # nothing yet
+        assert c.injector.next_change_t() == pytest.approx(1800.0)
+        while c.t < 2400.0:
+            c.run_window()
+        fired = [f for f in c.injector.faults
+                 if f.kind == FaultKind.THERMAL]
+        assert len(fired) == 8
+        assert {f.node for f in fired} == set(range(8))
+        assert all(f.t_start == pytest.approx(1800.0) for f in fired)
+
+    def test_switch_failure_degrades_many_nics_at_once(self):
+        c = cluster()
+        rng = np.random.RandomState(2)
+        SwitchFailure(at_h=0.0, group_size=16, group_start=8,
+                      down_fraction=0.3).arm(c, rng)
+        group = np.arange(8, 24)
+        nic_bad = (~c.fleet.nic_up[group]).any(axis=1) | \
+            (c.fleet.nic_quality[group] < 0.99).any(axis=1)
+        assert nic_bad.all()
+        others = np.setdiff1d(np.arange(c.fleet.n), group)
+        assert c.fleet.nic_up[others].all()
+        assert (c.fleet.nic_quality[others] == 1.0).all()
+        # comm factor degraded across the whole group
+        assert (c.fleet.node_comm_factor()[group] < 1.0).all()
+
+    def test_congestion_storm_transient_and_clears(self):
+        c = cluster()
+        rng = np.random.RandomState(3)
+        CongestionStorm(at_h=0.1, duration_h=0.2, hit_fraction=0.5,
+                        bursts_per_node=2.0).arm(c, rng)
+        hit_any = False
+        while c.t < 0.5 * 3600.0:
+            c.run_window()
+            if (c.injector.congestion_factor > 1.0).any():
+                hit_any = True
+        assert hit_any
+        # storm is over and every burst expired: factors fully recover
+        c.advance_idle(3600.0)
+        assert (c.injector.congestion_factor == 1.0).all()
+        # congestion is NOT a node fault: nothing stays latched/active
+        assert not c.injector.active_faults()
+
+    def test_maintenance_window_reverts_on_its_own(self):
+        c = cluster()
+        rng = np.random.RandomState(4)
+        MaintenanceWindow(at_h=0.0, duration_h=0.5, group_size=8,
+                          group_start=0, severity=0.5).arm(c, rng)
+        assert (c.fleet.host_factor[:8] < 1.0).all()
+        assert (c.fleet.host_factor[8:] == 1.0).all()
+        # bounded: no escalation clock on planned maintenance
+        assert all(f.escalate_at is None
+                   for f in c.injector.active_faults())
+        c.advance_idle(0.5 * 3600.0 + 60.0)
+        assert (c.fleet.host_factor == 1.0).all()
+        assert not c.injector.active_faults()
+
+    def test_initial_grey_population_seeds_active_only(self):
+        c = cluster(n_active=32, n_spare=8)
+        rng = np.random.RandomState(5)
+        faults = InitialGreyPopulation(p=0.5).arm(c, rng)
+        assert 5 <= len(faults) <= 27          # ~Binomial(32, .5)
+        assert all(f.node in c.active for f in faults)
+        assert all(f.kind != FaultKind.FAIL_STOP for f in faults)
+
+    def test_simulate_run_consumes_scenarios(self):
+        r = simulate_run(RunConfig(
+            tier=Tier.ENHANCED, n_nodes=24, n_spare=6, duration_h=3.0,
+            initial_grey_p=0.0, rates=QUIET, seed=3,
+            scenarios=(RackThermal(at_h=0.5, rack_size=4, rack_start=2,
+                                   severity=0.95, power_fraction=0.0,
+                                   stagger_s=0.0),)))
+        # the correlated rack event produces real detections
+        flagged = [e for e in r.events if e["kind"] == "straggler_flagged"]
+        assert flagged
+        assert {e["node_id"] for e in flagged} & set(range(2, 6))
+
+    def test_scenarios_by_name_in_runconfig(self):
+        r = simulate_run(RunConfig(
+            tier=Tier.BURNIN, n_nodes=16, n_spare=4, duration_h=1.0,
+            initial_grey_p=0.0, rates=QUIET, seed=0,
+            scenarios=("maintenance_window",)))
+        assert r.steps > 0
+
+
+class TestWindowEngine:
+    def test_run_window_matches_run_step_quiet_fleet(self):
+        """Fixed seed: the batched (W, N) fast path must reproduce the
+        per-step path bit for bit (same rng stream, same composition)."""
+        a = cluster(seed=9)
+        b = cluster(seed=9)
+        for _ in range(10):
+            win = a.run_window(6)
+            singles = [b.run_step()["step_time"] for _ in range(6)]
+            np.testing.assert_array_equal(win["step_times"],
+                                          np.asarray(singles))
+        assert a.t == b.t
+        assert a.step == b.step
+        fa, fb = a.collect(), b.collect()
+        np.testing.assert_array_equal(fa.metrics["step_time"],
+                                      fb.metrics["step_time"])
+
+    def test_run_window_matches_run_step_with_faults(self):
+        """Events landing mid-window cut the batch and replay the rng, so
+        the trajectories stay bit-identical through instant-effect fault
+        activity (congestion storms, power faults, host faults...)."""
+        rates = FaultRates(congestion=0.5, power=0.05, host_cpu=0.03,
+                          thermal=0, fail_stop=0, admission_grey_p=0)
+        a = cluster(rates=rates, seed=13)
+        b = cluster(rates=rates, seed=13)
+        win_steps, single_steps = [], []
+        for _ in range(40):
+            win = a.run_window(6)
+            assert not win["crashed"]
+            win_steps.append(win["step_times"])
+            for _ in range(6):
+                single_steps.append(b.run_step()["step_time"])
+        np.testing.assert_array_equal(np.concatenate(win_steps),
+                                      np.asarray(single_steps))
+        assert a.t == b.t
+        assert len(a.injector.faults) == len(b.injector.faults)
+
+    def test_run_window_thermal_ramp_close_to_run_step(self):
+        """Thermal ramps integrate at batch granularity: the window path
+        tracks the per-step path within a tight tolerance through the
+        transient and reaches the identical throttle equilibrium."""
+        a = cluster(seed=7)
+        b = cluster(seed=7)
+        for c in (a, b):
+            c.injector.inject(FaultKind.THERMAL, 3, severity=0.9, device=0)
+        win_steps, single_steps = [], []
+        for _ in range(120):                       # ~20 min: full ramp
+            win_steps.append(a.run_window(6)["step_times"])
+            for _ in range(6):
+                single_steps.append(b.run_step()["step_time"])
+        wa = np.concatenate(win_steps)
+        wb = np.asarray(single_steps)
+        # transiently coarser throttle sampling: bounded pointwise even
+        # on the steepest part of the ramp, tight in aggregate
+        np.testing.assert_allclose(wa, wb, rtol=0.15)
+        rel = np.abs(wa - wb) / wb
+        assert rel.mean() < 0.015
+        assert (rel > 0.03).mean() < 0.05      # <5% of steps off by >3%
+        # same equilibrium temperature and compute factor
+        np.testing.assert_allclose(a.fleet.temp_c[3], b.fleet.temp_c[3],
+                                   atol=Fleet.TEMP_SNAP_C)
+        np.testing.assert_allclose(a.fleet.node_compute_factor()[3],
+                                   b.fleet.node_compute_factor()[3],
+                                   rtol=1e-3)
+
+    def test_run_window_stops_on_crash(self):
+        c = cluster(seed=1)
+        c.injector.schedule(FaultKind.FAIL_STOP, 3, at=25.0, severity=1.0)
+        win = c.run_window(6)
+        assert win["crashed"]
+        assert win["steps_run"] < 6
+        assert c.crashed_nodes() == [3]
+
+    def test_simulate_run_deterministic_with_scenarios(self):
+        cfg = RunConfig(tier=Tier.ENHANCED, n_nodes=24, n_spare=4,
+                        duration_h=3.0, initial_grey_p=0.1, seed=11,
+                        scenarios=(CongestionStorm(at_h=0.5),
+                                   "maintenance_window"))
+        a, b = simulate_run(cfg), simulate_run(cfg)
+        assert a.steps == b.steps and a.crashes == b.crashes
+        np.testing.assert_array_equal(a.step_times, b.step_times)
+        assert a.events == b.events
+
+
+class TestNicErrorBaseline:
+    def test_swapped_in_spare_reports_no_idle_error_spike(self):
+        """Regression (issue satellite): a spare that accrued NIC error
+        counts while idle must not dump them into its first in-job
+        window's delta after a swap."""
+        c = cluster(n_active=16, n_spare=4, seed=2)
+        spare = c.spares[0]
+        # errors accrued while idle (e.g. link flaps during qualification)
+        c.fleet.nic_err_count[spare, :] += 5000.0
+        for _ in range(6):
+            c.run_step()
+        c.collect()                      # establish everyone's baseline
+        c.swap_node(2, spare)
+        for _ in range(6):
+            c.run_step()
+        frame = c.collect()
+        col = int(np.flatnonzero(frame.node_ids == spare)[0])
+        assert frame.metrics["nic_errors"][col] == 0.0
+
+    def test_in_job_errors_still_reported(self):
+        """The swap-time baseline must not mask errors that happen while
+        the node is actually serving the job."""
+        c = cluster(n_active=16, n_spare=4, seed=2)
+        spare = c.spares[0]
+        for _ in range(6):
+            c.run_step()
+        c.collect()
+        c.swap_node(2, spare)
+        c.injector.inject(FaultKind.NIC_DOWN, spare, now=c.t, device=1)
+        for _ in range(6):
+            c.run_step()
+        frame = c.collect()
+        col = int(np.flatnonzero(frame.node_ids == spare)[0])
+        assert frame.metrics["nic_errors"][col] == 1000.0
+
+
+class TestDetectorObjectBudget:
+    def test_update_materializes_no_objects_on_healthy_fleet(self):
+        det = StragglerDetector()
+        rng = np.random.RandomState(0)
+        n = 4096
+        ids = np.arange(n, dtype=np.int64)
+        for w in range(8):
+            frame_metrics = {"step_time": 10 + rng.normal(0, 0.05, n)}
+            from repro.core.telemetry import Frame
+            out = det.update(Frame(t=w * 60.0, step=w * 6, node_ids=ids,
+                                   metrics=frame_metrics,
+                                   valid=np.ones(n, bool)))
+        assert isinstance(out, FleetAssessment)
+        assert out.materialized == 0
+        assert not out.flagged.any()
