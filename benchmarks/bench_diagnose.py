@@ -1,0 +1,320 @@
+"""Attribution benchmark: precision/recall/latency of ``repro.diagnose``
+against scenario ground truth, written to ``BENCH_diagnose.json``.
+
+Three labeled correlated-fault scenarios (plus a mixed run with
+background Poisson wear) drive a barrier-grouped fleet with realistic
+measured-wall telemetry — one degraded node inflates the reported step
+time of every peer in its DP gradient-barrier group, so the raw
+detector flags whole groups. The diagnoser must separate them:
+
+  rack_thermal       8-node rack inside a 16-node barrier group: 8
+                     compute culprits + 8 cascade victims per window
+  switch_failure     16 nodes lose/downtrain NICs: comm culprits
+  congestion_storm   transient fabric congestion: NOBODY is a culprit
+
+Scoring against the injector's fault log (``RunResult.fault_log``):
+
+  precision   culprit attributions (compute/comm/data-stall verdicts)
+              that pointed at a node with a genuinely active fault
+  recall      scenario-injected grey nodes that were culprit-attributed
+  victims     evictions of nodes with NO active fault — must be ZERO
+              (the false-eviction reduction the subsystem exists for)
+  overhead    what-if + classification cost per diagnosed window at
+              1024 nodes — must stay under 1 ms (array-native budget)
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_diagnose [--quick]
+          [--out PATH]
+
+Exit is non-zero if any gate fails (CI runs this in the smoke job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core import DetectorConfig, StragglerDetector
+from repro.core.telemetry import Frame
+from repro.diagnose import Diagnoser, TimingTrace, Topology, WindowTiming
+from repro.guard import Tier
+from repro.simcluster import (CongestionStorm, FaultRates, RackThermal,
+                              RunConfig, SwitchFailure, WorkloadProfile,
+                              simulate_run)
+
+PRECISION_GATE = 0.90
+RECALL_GATE = 0.80
+OVERHEAD_GATE_MS = 1.0
+
+# verdicts that accuse the node itself (vs. held/watched verdicts)
+CULPRIT_CAUSES = ("compute_degraded", "comm_degraded", "data_stall")
+GREY_KINDS = ("thermal", "power", "mem_ecc", "nic_down", "nic_degraded",
+              "host_cpu")
+# expected remediation lane per injected fault kind (lane accuracy)
+EXPECTED_LANE = {
+    "thermal": "compute_degraded", "power": "compute_degraded",
+    "mem_ecc": "compute_degraded", "nic_down": "comm_degraded",
+    "nic_degraded": "comm_degraded", "host_cpu": "data_stall",
+    "congestion": "comm_degraded",
+}
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+# comm-heavier split than the default pretrain profile so link-level
+# faults land above the detector's slowdown floor
+WORKLOAD = WorkloadProfile(name="diagnose_bench", compute_s=6.0,
+                           comm_exposed_s=2.5, host_s=1.5)
+
+
+def base_config(duration_h: float, **kw) -> RunConfig:
+    kw.setdefault("rates", QUIET)
+    kw.setdefault("initial_grey_p", 0.0)
+    return RunConfig(tier=Tier.ENHANCED, n_nodes=128, n_spare=16,
+                     duration_h=duration_h, dp_group_size=16,
+                     diagnose=True, workload=WORKLOAD, seed=7, **kw)
+
+
+def scenario_suite(quick: bool):
+    dur = 2.5 if quick else 4.0
+    return {
+        # rack rows 24-31 sit inside barrier group 16-31: half the group
+        # is genuinely degraded, half is stalled behind the barrier
+        "rack_thermal": base_config(dur, scenarios=(
+            RackThermal(at_h=0.5, rack_size=8, rack_start=24,
+                        severity=0.85, power_fraction=0.0),)),
+        "switch_failure": base_config(dur, scenarios=(
+            SwitchFailure(at_h=0.5, group_size=16, group_start=48,
+                          down_fraction=0.25, severity=0.9),)),
+        "congestion_storm": base_config(dur, scenarios=(
+            CongestionStorm(at_h=0.5, duration_h=1.0, hit_fraction=0.25,
+                            severity=0.7),)),
+        "mixed": base_config(dur, rates=FaultRates(),
+                             initial_grey_p=0.03, scenarios=(
+            RackThermal(at_h=0.6, rack_size=8, rack_start=24,
+                        severity=0.85, power_fraction=0.0),
+            SwitchFailure(at_h=1.0, group_size=8, group_start=96,
+                          down_fraction=0.25, severity=0.9),
+            CongestionStorm(at_h=0.4, duration_h=0.8,
+                            hit_fraction=0.2, severity=0.7),)),
+    }
+
+
+def _active_fault(fault_log, node: int, t: float, kinds,
+                  slack_s: float = 120.0):
+    """The first logged fault of ``kinds`` active on ``node`` around
+    ``t`` (attribution integrates a trace window, hence the slack)."""
+    for f in fault_log:
+        if f["node"] != node or f["kind"] not in kinds:
+            continue
+        cleared = f["t_cleared"]
+        if f["t_start"] - slack_s <= t and \
+                (cleared is None or t <= cleared + slack_s):
+            return f
+    return None
+
+
+def score_run(name: str, result) -> dict:
+    """Attribution + eviction scoring for one simulated run."""
+    log = result.fault_log
+    diag = [e for e in result.events if e["kind"] == "diagnosis"]
+    accusations = [e for e in diag if e["root_cause"] in CULPRIT_CAUSES]
+    held = [e for e in diag if e["held"]]
+
+    tp = fp = lane_ok = 0
+    attributed = set()
+    for e in accusations:
+        f = _active_fault(log, e["node_id"], e["t"],
+                          GREY_KINDS + ("congestion",))
+        if f is not None:
+            tp += 1
+            attributed.add(e["node_id"])
+            if EXPECTED_LANE.get(f["kind"]) == e["root_cause"]:
+                lane_ok += 1
+        else:
+            fp += 1
+
+    # recall denominator: scenario/background grey nodes, minus nodes
+    # that hard-crashed (fail-stop leaves nothing to attribute)
+    crashed = {f["node"] for f in log if f["kind"] == "fail_stop"}
+    truth = {f["node"] for f in log if f["kind"] in GREY_KINDS} - crashed
+
+    # the headline false-eviction gate: evictions of nodes that had NO
+    # active fault of any perf-affecting kind when they were pulled
+    victims_evicted = []
+    for e in result.events:
+        if e["kind"] != "swap" or "crash" in e["reason"]:
+            continue
+        if _active_fault(log, e["old"], e["t"],
+                         GREY_KINDS + ("congestion",), slack_s=600.0) \
+                is None:
+            victims_evicted.append(e["old"])
+
+    return {
+        "scenario": name,
+        "steps": result.steps,
+        "diagnosis_events": len(diag),
+        "accusations": len(accusations),
+        "held_verdicts": len(held),
+        "tp": tp,
+        "fp": fp,
+        "lane_ok": lane_ok,
+        "truth_nodes": sorted(truth),
+        "attributed_nodes": sorted(attributed & truth),
+        "recall_hits": len(attributed & truth),
+        "recall_total": len(truth),
+        "victims_evicted": sorted(set(victims_evicted)),
+    }
+
+
+def overhead_bench(n: int = 1024, windows: int = 30,
+                   group: int = 32) -> dict:
+    """ms/window of ``Diagnoser.diagnose`` (what-if + classification) on
+    a synthetic fleet with latched stragglers — the steady state where
+    attribution actually runs."""
+    rng = np.random.RandomState(3)
+    topo = Topology.grouped(n, group)
+    trace = TimingTrace(depth=8)
+    diag = Diagnoser(trace, topo)
+    det = StragglerDetector(DetectorConfig())
+    stragglers = [(7, 1.4), (n // 2 + 5, 1.3), (n - 9, 1.25)]
+    node_ids = np.arange(n, dtype=np.int64)
+    costs = []
+    for w in range(windows):
+        comp = 8.0 * (1.0 + rng.normal(0, 0.004, n))
+        comm = 0.6 * (1.0 + rng.normal(0, 0.004, n))
+        host = 1.4 * (1.0 + rng.normal(0, 0.004, n))
+        for nid, f in stragglers:
+            comp[nid] *= f
+        own = comp + comm + host
+        wall = topo.group_max(own)
+        trace.push(WindowTiming(t=60.0 * w, step=6 * w, node_ids=node_ids,
+                                compute=comp, comm=comm, host=host,
+                                stall=wall - own))
+        metrics = {
+            "step_time": wall,
+            "gpu_temp": 58.0 + rng.normal(0, 0.8, n),
+            "gpu_util": np.clip(rng.normal(0.97, 0.01, n), 0, 1),
+            "gpu_freq": np.full(n, 1.93) + rng.normal(0, 0.002, n),
+            "gpu_power": 350.0 + rng.normal(0, 3.0, n),
+            "nic_errors": np.zeros(n),
+            "nic_tx_rate": 50.0 + rng.normal(0, 0.5, n),
+            "nic_up": np.ones(n),
+        }
+        frame = Frame(t=60.0 * w, step=6 * w, node_ids=node_ids,
+                      metrics=metrics, valid=np.ones(n, bool))
+        fleet = det.update(frame)
+        t0 = time.perf_counter()
+        out = diag.diagnose(frame, fleet)
+        dt = (time.perf_counter() - t0) * 1e3
+        if out is not None:              # only diagnosing windows count
+            costs.append(dt)
+    return {
+        "n_nodes": n,
+        "group_size": group,
+        "diagnosed_windows": len(costs),
+        "ms_per_window_mean": float(np.mean(costs)) if costs else 0.0,
+        "ms_per_window_p50": float(np.median(costs)) if costs else 0.0,
+        "ms_per_window_max": float(np.max(costs)) if costs else 0.0,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (shorter scenario runs)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_diagnose.json"))
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    runs = {}
+    for name, cfg in scenario_suite(args.quick).items():
+        r = simulate_run(cfg)
+        runs[name] = score_run(name, r)
+
+    tp = sum(s["tp"] for s in runs.values())
+    fp = sum(s["fp"] for s in runs.values())
+    lane_ok = sum(s["lane_ok"] for s in runs.values())
+    # recall over the LABELED scenarios (pinned severities, all
+    # detectable); the mixed run's background greys span arbitrary
+    # severities and score precision/eviction only
+    rec_hits = sum(runs[n]["recall_hits"]
+                   for n in ("rack_thermal", "switch_failure"))
+    rec_total = sum(runs[n]["recall_total"]
+                    for n in ("rack_thermal", "switch_failure"))
+    victims = sorted({v for s in runs.values()
+                      for v in s["victims_evicted"]})
+    precision = tp / max(tp + fp, 1)
+    recall = rec_hits / max(rec_total, 1)
+    lane_accuracy = lane_ok / max(tp, 1)
+
+    overhead = overhead_bench()
+    out = {
+        "benchmark": "guard_diagnose",
+        "mode": "quick" if args.quick else "full",
+        "scenarios": runs,
+        "pooled": {
+            "precision": precision,
+            "recall": recall,
+            "lane_accuracy": lane_accuracy,
+            "tp": tp, "fp": fp,
+            "recall_hits": rec_hits, "recall_total": rec_total,
+            "victims_evicted": victims,
+        },
+        "overhead": overhead,
+        "gates": {
+            "precision_min": PRECISION_GATE,
+            "recall_min": RECALL_GATE,
+            "overhead_ms_max": OVERHEAD_GATE_MS,
+            "victims_evicted_max": 0,
+        },
+        "total_wall_s": time.perf_counter() - t0,
+    }
+
+    print(f"{'scenario':>18s}{'accuse':>8s}{'tp':>5s}{'fp':>5s}"
+          f"{'held':>6s}{'recall':>10s}{'victims':>9s}")
+    for name, s in runs.items():
+        rec = f"{s['recall_hits']}/{s['recall_total']}" \
+            if s["recall_total"] else "-"
+        print(f"{name:>18s}{s['accusations']:8d}{s['tp']:5d}{s['fp']:5d}"
+              f"{s['held_verdicts']:6d}{rec:>10s}"
+              f"{len(s['victims_evicted']):9d}")
+    print(f"\npooled: precision {precision:.3f} (gate {PRECISION_GATE}), "
+          f"recall {recall:.3f} (gate {RECALL_GATE}), "
+          f"lane accuracy {lane_accuracy:.3f}")
+    print(f"overhead @{overhead['n_nodes']} nodes: "
+          f"{overhead['ms_per_window_mean']:.3f} ms/window "
+          f"(gate {OVERHEAD_GATE_MS} ms)")
+
+    ok = True
+    if precision < PRECISION_GATE:
+        print(f"FAIL: precision {precision:.3f} < {PRECISION_GATE}",
+              file=sys.stderr)
+        ok = False
+    if recall < RECALL_GATE:
+        print(f"FAIL: recall {recall:.3f} < {RECALL_GATE}",
+              file=sys.stderr)
+        ok = False
+    if victims:
+        print(f"FAIL: fault-free nodes evicted: {victims}",
+              file=sys.stderr)
+        ok = False
+    if overhead["ms_per_window_mean"] > OVERHEAD_GATE_MS:
+        print(f"FAIL: attribution overhead "
+              f"{overhead['ms_per_window_mean']:.3f} ms/window > "
+              f"{OVERHEAD_GATE_MS}", file=sys.stderr)
+        ok = False
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}  ({out['total_wall_s']:.0f}s)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

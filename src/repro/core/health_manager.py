@@ -123,6 +123,15 @@ class HealthManager:
         self.deferred: List[int] = []     # swap at next checkpoint
         self.pending_since: Dict[int, float] = {}
         self.stats = ManagerStats()
+        # optional attribution hooks (wired by GuardSession when a
+        # repro.diagnose.Diagnoser runs):
+        #   hold_check(nid) -> True  = the latest diagnosis says the node
+        #   is a victim/transient — keep it in the job, do not evict
+        self.hold_check: Optional[Callable[[int], bool]] = None
+        #   signals_for(nid) -> rich ErrorSignals from attribution (or
+        #   None); merged over the substrate's error counters for triage
+        self.signals_for: \
+            Optional[Callable[[int], Optional[ErrorSignals]]] = None
 
     def _notify(self, topic: str, **payload) -> None:
         if self.notify is not None:
@@ -222,6 +231,11 @@ class HealthManager:
                 continue
             if now - since >= self.pending_patience_s and \
                     nid not in self.deferred:
+                # attribution hold: a cascade victim stays latched as
+                # long as its culprit is in the job — patience must not
+                # convert "watched" into an eviction
+                if self.hold_check is not None and self.hold_check(nid):
+                    continue
                 self.deferred.append(nid)
                 self.stats.deferred_swaps += 1
         n = 0
@@ -233,6 +247,10 @@ class HealthManager:
             # still latched by the detector are swapped; transients that
             # cleared themselves stay in the job
             if not self.monitor.detector.is_latched(nid):
+                continue
+            # attribution may have re-classified the node as a victim /
+            # transient since the deferral was queued: hold it
+            if self.hold_check is not None and self.hold_check(nid):
                 continue
             self._swap_out(nid, reason="deferred replacement", deferred=True)
             self.pending_since.pop(nid, None)
@@ -253,6 +271,24 @@ class HealthManager:
         return new
 
     # ------------------------------------------------- qualification
+
+    def _error_signals(self, node_id: int) -> ErrorSignals:
+        """Triage evidence: the substrate's error counters, enriched by
+        the latest blame-attribution diagnosis when a Diagnoser runs
+        (the diagnosis picks the lane; counters fill in what it missed).
+
+        A stale cascade-victim verdict loses to actionable counters: the
+        diagnosis was made while the node sat behind a degraded peer,
+        but the substrate now reports real errors — honoring the old
+        verdict would short-circuit triage (no strike, no stages) and
+        leave a remediable fault untreated."""
+        sig = self.control.error_signals(node_id)
+        if self.signals_for is not None:
+            diag = self.signals_for(node_id)
+            if diag is not None and not (
+                    diag.root_cause == "cascade_victim" and sig.actionable):
+                sig = diag.merged(sig)
+        return sig
 
     def begin_qualification(self, node_id: int) -> QualificationTicket:
         """Run the event-driven offline qualification of a quarantined
@@ -289,7 +325,7 @@ class HealthManager:
                                            duration, sweeps, records)
             self.stats.sweeps_failed += 1
             res: TriageResult = self.triage.run(
-                node_id, self.control.error_signals(node_id),
+                node_id, self._error_signals(node_id),
                 self.control.now(), self.control.remediate,
                 lambda nid: single_pass(self.backend, nid, self.sweep_cfg))
             self.stats.triages_run += 1

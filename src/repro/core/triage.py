@@ -3,10 +3,14 @@
 Remediation is staged from cheap/reversible to invasive, with a health
 re-check gate after every stage:
 
+  cascade-victim attribution   ->  RETURN TO SWEEP, no strike, no stages
+                                   (the node was stalled behind a degraded
+                                   peer — it is not the problem)
   no actionable error signals  ->  EARLY TERMINATION (don't burn remediation
                                    effort on an undiagnosable node)
   GPU errors                   ->  device reset -> reboot -> re-image
   network errors               ->  NIC reset    -> reboot -> re-image
+  host/data errors             ->  reboot -> re-image
 
 A node that passes the post-stage health check returns to the sweep pipeline
 (NOT directly to production — §5.4's conservative rule). A node that
@@ -29,13 +33,32 @@ class TriageOutcome(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class ErrorSignals:
-    """Actionable error evidence gathered by online monitoring."""
+    """Actionable error evidence gathered by online monitoring and (when
+    a ``repro.diagnose.Diagnoser`` runs) by blame attribution.
+
+    The booleans pick the remediation lane; ``root_cause`` carries the
+    attribution taxonomy value (``repro.diagnose.RootCause``) so triage
+    can recognize verdicts — notably ``cascade_victim``, which must
+    neither consume a 3-strikes strike nor burn remediation stages."""
     gpu_errors: bool = False       # XID-equivalent device errors, throttle
     nic_errors: bool = False       # link flaps, retx storms, adapter down
+    host_errors: bool = False      # host/data-pipeline evidence (CPU cfg)
+    root_cause: str = ""           # repro.diagnose taxonomy value, if known
+    detail: str = ""               # human-readable evidence summary
 
     @property
     def actionable(self) -> bool:
-        return self.gpu_errors or self.nic_errors
+        return self.gpu_errors or self.nic_errors or self.host_errors
+
+    def merged(self, other: "ErrorSignals") -> "ErrorSignals":
+        """Union of two evidence sources (diagnosis + substrate counters);
+        this object's attribution fields win when both are set."""
+        return ErrorSignals(
+            gpu_errors=self.gpu_errors or other.gpu_errors,
+            nic_errors=self.nic_errors or other.nic_errors,
+            host_errors=self.host_errors or other.host_errors,
+            root_cause=self.root_cause or other.root_cause,
+            detail=self.detail or other.detail)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +79,10 @@ class TriageConfig:
     )
     nic_stages: tuple = (
         Stage("nic_reset", 600.0, 120.0),
+        Stage("reboot", 1_200.0, 120.0),
+        Stage("reimage", 7_200.0, 600.0),
+    )
+    host_stages: tuple = (
         Stage("reboot", 1_200.0, 120.0),
         Stage("reimage", 7_200.0, 600.0),
     )
@@ -95,6 +122,19 @@ class TriageWorkflow:
             remediate: Callable[[int, str], None],
             verify: Callable[[int], bool]) -> TriageResult:
         cfg = self.cfg
+
+        # attribution says the node is a cascade victim: it was stalled
+        # behind a degraded peer, not degraded itself. Return it to the
+        # sweep pipeline WITHOUT a strike (a strike here would ratchet a
+        # healthy node toward 3-strikes termination) and without burning
+        # remediation stages on it.
+        if signals.root_cause == "cascade_victim":
+            res = TriageResult(node_id, TriageOutcome.RETURNED_TO_SWEEP,
+                               [], 0.0, 0.0,
+                               "cascade victim: no strike, no remediation")
+            self.results.append(res)
+            return res
+
         self._strikes[node_id].append(now)
 
         # 3-strikes: terminally bad, skip the workflow
@@ -113,7 +153,12 @@ class TriageWorkflow:
             self.results.append(res)
             return res
 
-        stages = cfg.gpu_stages if signals.gpu_errors else cfg.nic_stages
+        if signals.gpu_errors:
+            stages = cfg.gpu_stages
+        elif signals.nic_errors:
+            stages = cfg.nic_stages
+        else:
+            stages = cfg.host_stages
         elapsed = human = 0.0
         run: List[str] = []
         for st in stages:

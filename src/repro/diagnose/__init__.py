@@ -1,0 +1,35 @@
+"""``repro.diagnose`` — what-if blame attribution and root-cause routing.
+
+The detector (``repro.core.detector``) says WHO deviates; this package
+says WHY, so the Guard loop routes each flagged node into the right lane
+instead of treating every latch as an eviction:
+
+  trace       per-window, per-node timing decompositions
+              (compute / comm / host / stall) in circular (depth, N)
+              buffers, fed by the simulator and the trainer hook
+  whatif      vectorized counterfactual replay over the collective
+              dependency structure (DP barrier groups / pipeline stages
+              from ``repro.dist`` axes): per-node blame scores that
+              separate culprits from barrier-stalled cascade victims
+  rootcause   blame + telemetry deltas -> RootCause taxonomy + rich
+              ErrorSignals; ``Diagnoser`` is the session stage between
+              detector and policy (victims are watched, not evicted)
+
+Wire-up: build a ``TimingTrace`` + ``Topology``, hand them to a
+``Diagnoser``, attach the trace to the substrate
+(``SimCluster.attach_timing`` / ``GuardStepHook``) and pass the
+diagnoser to ``GuardSession``. ``RunConfig(diagnose=True)`` does all of
+it for simulated runs.
+"""
+from repro.diagnose.rootcause import (HOLD_CAUSES, Diagnoser, Diagnosis,
+                                      FleetDiagnosis, RootCause,
+                                      RootCauseConfig)
+from repro.diagnose.trace import (CHANNELS, OWN_CHANNELS, TimingTrace,
+                                  WindowTiming)
+from repro.diagnose.whatif import Topology, WhatIfReport, whatif
+
+__all__ = [
+    "CHANNELS", "Diagnoser", "Diagnosis", "FleetDiagnosis", "HOLD_CAUSES",
+    "OWN_CHANNELS", "RootCause", "RootCauseConfig", "TimingTrace",
+    "Topology", "WhatIfReport", "WindowTiming", "whatif",
+]

@@ -1,0 +1,163 @@
+"""Per-window, per-node timing decompositions (the diagnosis substrate).
+
+Blame attribution needs more than the detector's step-time metric: it
+needs to know *where* each node's window went — device compute, exposed
+inter-node communication, host/data work, and barrier stall (time spent
+waiting on peers inside a blocking collective). ``TimingTrace`` keeps a
+fixed-depth history of those decompositions as preallocated circular
+``(depth, N)`` float arrays, the same discipline as the detector's
+``RingHistory``: one ``push`` per evaluation window costs one row-write
+per channel, never a re-stack.
+
+Producers:
+
+  - ``SimCluster`` feeds the trace from the step-time model itself (the
+    simulator knows the true compute/comm/host split and the barrier
+    structure), via ``SimCluster.attach_timing``.
+  - ``GuardStepHook`` feeds it from measured trainer step times, using
+    trainer-supplied component timings when available and a configured
+    split otherwise (``repro.guard.hook``).
+  - A real deployment feeds it from device/collective timeline
+    instrumentation (profiler-style busy/wait accounting).
+
+Consumers: the what-if engine (``repro.diagnose.whatif``) and the
+root-cause classifier (``repro.diagnose.rootcause``) read the raw rows —
+their reductions are order-invariant, so the circular buffers are never
+reordered on the hot path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+# decomposition channels, in "own work" order; wall = own + stall
+CHANNELS = ("compute", "comm", "host", "stall")
+OWN_CHANNELS = ("compute", "comm", "host")
+
+
+@dataclasses.dataclass
+class WindowTiming:
+    """One evaluation window's timing decomposition, per node.
+
+    Every channel is window-mean seconds aligned with ``node_ids``.
+    ``stall`` is barrier wait: the gap between the node finishing its own
+    work and its blocking collective completing (group wall - own)."""
+
+    t: float
+    step: int
+    node_ids: np.ndarray                 # (N,) int64
+    compute: np.ndarray                  # (N,) device-gated compute
+    comm: np.ndarray                     # (N,) exposed inter-node comm
+    host: np.ndarray                     # (N,) host/data-pipeline work
+    stall: np.ndarray                    # (N,) barrier wait (>= 0)
+
+    def __post_init__(self):
+        n = len(self.node_ids)
+        for ch in CHANNELS:
+            assert getattr(self, ch).shape == (n,), (ch, n)
+
+    @property
+    def own(self) -> np.ndarray:
+        """(N,) seconds of the node's own work (compute + comm + host)."""
+        return self.compute + self.comm + self.host
+
+    @property
+    def wall(self) -> np.ndarray:
+        """(N,) measured wall seconds (own work + barrier stall)."""
+        return self.own + self.stall
+
+
+class TimingTrace:
+    """Fixed-depth circular history of ``WindowTiming`` rows.
+
+    Preallocated ``(depth, N)`` buffers per channel. Fleet membership
+    changes are handled like the detector's ``RingHistory``: a resize
+    reallocates (history no longer aligns), while a same-size node
+    replacement backfills only the changed columns with the new node's
+    current readings so a freshly swapped-in spare never inherits its
+    predecessor's timing history."""
+
+    def __init__(self, depth: int = 8):
+        assert depth >= 1
+        self.depth = depth
+        self._bufs: Dict[str, np.ndarray] = {}     # channel -> (depth, N)
+        self._ids: Optional[np.ndarray] = None
+        self._used = 0
+        self._head = 0
+        self._last: Optional[WindowTiming] = None
+        self.generation = 0          # bumped on every (re)allocation
+
+    # ------------------------------------------------------------- intake
+
+    def _alloc(self, wt: WindowTiming) -> None:
+        n = len(wt.node_ids)
+        self._bufs = {ch: np.empty((self.depth, n)) for ch in CHANNELS}
+        self._ids = wt.node_ids.copy()
+        self._used = 0
+        self._head = 0
+        self.generation += 1
+
+    def push(self, wt: WindowTiming) -> None:
+        ids = self._ids
+        if ids is None or len(wt.node_ids) != len(ids):
+            self._alloc(wt)
+        elif not np.array_equal(wt.node_ids, ids):
+            changed = wt.node_ids != ids
+            for ch, buf in self._bufs.items():
+                buf[:, changed] = getattr(wt, ch)[changed]
+            self._ids = ids.copy()
+            self._ids[changed] = wt.node_ids[changed]
+        row = self._head
+        for ch, buf in self._bufs.items():
+            buf[row] = getattr(wt, ch)
+        self._head = (row + 1) % self.depth
+        self._used = min(self._used + 1, self.depth)
+        self._last = wt
+
+    # ------------------------------------------------------------ queries
+
+    def __len__(self) -> int:
+        return self._used
+
+    @property
+    def full(self) -> bool:
+        return self._used == self.depth
+
+    @property
+    def node_ids(self) -> Optional[np.ndarray]:
+        return self._ids
+
+    def last(self) -> WindowTiming:
+        if self._last is None:
+            raise IndexError("empty timing trace")
+        return self._last
+
+    def rows(self, channel: str) -> np.ndarray:
+        """(used, N) raw buffer rows in ARBITRARY window order — zero-copy
+        view for order-invariant reductions. Callers must not mutate."""
+        return self._bufs[channel][:self._used]
+
+    def mean(self, channel: str) -> np.ndarray:
+        """(N,) per-node mean of one channel over the kept windows."""
+        return self.rows(channel).mean(axis=0)
+
+    def own_rows(self) -> np.ndarray:
+        """(used, N) own-work seconds per kept window."""
+        return (self.rows("compute") + self.rows("comm") +
+                self.rows("host"))
+
+    def own_mean(self) -> np.ndarray:
+        return self.own_rows().mean(axis=0)
+
+    def wall_mean(self) -> np.ndarray:
+        return self.own_mean() + self.mean("stall")
+
+    def clear(self) -> None:
+        self._used = 0
+        self._head = 0
+        self._last = None
+
+
+__all__ = ["CHANNELS", "OWN_CHANNELS", "TimingTrace", "WindowTiming"]

@@ -10,11 +10,12 @@ Everything above the substrate protocols (``ClusterControl``,
 consumers should not wire ``OnlineMonitor``/``HealthManager`` by hand.
 """
 from repro.guard.events import (EVENT_TYPES, CheckpointSaved, CrashDetected,
-                                EventBus, GuardEvent, JobRestart, JsonlSink,
-                                NodeProvisioned, NodeQuarantined, NodeSwapped,
-                                NodeTerminated, StragglerCleared,
-                                StragglerFlagged, SweepFinished, SweepStarted,
-                                TraceSink, TriageStage)
+                                DiagnosisEvent, EventBus, GuardEvent,
+                                JobRestart, JsonlSink, NodeProvisioned,
+                                NodeQuarantined, NodeSwapped, NodeTerminated,
+                                StragglerCleared, StragglerFlagged,
+                                SweepFinished, SweepStarted, TraceSink,
+                                TriageStage)
 from repro.guard.hook import (GuardStepHook, LocalHostControl,
                               LocalSweepBackend)
 from repro.guard.scheduler import SweepScheduler
@@ -22,7 +23,8 @@ from repro.guard.session import (CheckpointOutcome, GuardSession, Tier,
                                  WindowOutcome)
 
 __all__ = [
-    "CheckpointOutcome", "CheckpointSaved", "CrashDetected", "EVENT_TYPES",
+    "CheckpointOutcome", "CheckpointSaved", "CrashDetected",
+    "DiagnosisEvent", "EVENT_TYPES",
     "EventBus", "GuardEvent", "GuardSession", "GuardStepHook", "JobRestart",
     "JsonlSink", "LocalHostControl", "LocalSweepBackend", "NodeProvisioned",
     "NodeQuarantined", "NodeSwapped", "NodeTerminated", "StragglerCleared",

@@ -53,6 +53,25 @@ class StragglerCleared(GuardEvent):
     node_id: int = -1
 
 
+@dataclasses.dataclass(frozen=True)
+class DiagnosisEvent(GuardEvent):
+    """Blame attribution reached a (new) verdict for a flagged node:
+    ``root_cause`` is the ``repro.diagnose`` taxonomy value, ``blame``
+    the standalone what-if excess in seconds (``blame_rel`` relative to
+    the healthy reference), ``marginal`` the leave-one-out fleet
+    step-time delta, and ``held`` whether the verdict keeps the node in
+    the job (cascade victims / transients are watched, not evicted)."""
+    kind: ClassVar[str] = "diagnosis"
+    node_id: int = -1
+    root_cause: str = ""
+    blame: float = 0.0
+    blame_rel: float = 0.0
+    marginal: float = 0.0
+    stall_share: float = 0.0
+    held: bool = False
+    evidence: Tuple[str, ...] = ()
+
+
 # -------------------------------------------------------------- mitigation
 
 @dataclasses.dataclass(frozen=True)
@@ -142,9 +161,9 @@ class TriageStage(GuardEvent):
 
 
 EVENT_TYPES: Tuple[Type[GuardEvent], ...] = (
-    StragglerFlagged, StragglerCleared, NodeSwapped, NodeQuarantined,
-    NodeTerminated, NodeProvisioned, CrashDetected, JobRestart,
-    CheckpointSaved, SweepStarted, SweepFinished, TriageStage,
+    StragglerFlagged, StragglerCleared, DiagnosisEvent, NodeSwapped,
+    NodeQuarantined, NodeTerminated, NodeProvisioned, CrashDetected,
+    JobRestart, CheckpointSaved, SweepStarted, SweepFinished, TriageStage,
 )
 
 

@@ -16,6 +16,15 @@ hook synthesizes healthy peer timings around the measured baseline so
 the peer-relative detector has a population to score against
 (``n_peers``, deterministic via ``seed``).
 
+If the trainer's metrics dict carries hardware telemetry (any key from
+``repro.core.telemetry.HARDWARE_METRICS``, e.g. a DCGM-style exporter
+feeding ``gpu_temp``/``nic_errors``), the hook aggregates it into the
+Frames — so the detector's supporting-signal masks run on the real path
+— and derives actionable ``ErrorSignals`` from the accumulated window
+telemetry for triage. Without hardware telemetry it falls back to
+step-time evidence for a latched node, so triage no longer
+early-terminates every hardware-backed host for lack of signals.
+
 ``LocalHostControl`` / ``LocalSweepBackend`` are the minimal substrate
 implementations for a training process with no cluster control plane:
 swaps are bookkeeping, restarts raise the hook's restart flag, and
@@ -24,14 +33,15 @@ qualification sweeps trivially pass (there is no hardware to probe).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.detector import DetectorConfig
 from repro.core.sweep import SweepReference
-from repro.core.telemetry import Frame
+from repro.core.telemetry import HARDWARE_METRICS, Frame
 from repro.core.triage import ErrorSignals
+from repro.diagnose import Diagnoser, TimingTrace, Topology, WindowTiming
 from repro.guard.events import NodeSwapped
 from repro.guard.session import GuardSession, Tier
 
@@ -44,6 +54,10 @@ class LocalHostControl:
         self.swaps: List[tuple] = []
         self.restarts: List[str] = []
         self._next = next_provision_id
+        # per-node evidence source (the step hook registers itself here
+        # so triage sees telemetry-derived signals, not empty ones)
+        self.signals_provider: \
+            Optional[Callable[[int], ErrorSignals]] = None
 
     def swap_node(self, old: int, new: int) -> None:
         self.swaps.append((old, new))
@@ -57,6 +71,8 @@ class LocalHostControl:
         return nid
 
     def error_signals(self, node_id: int) -> ErrorSignals:
+        if self.signals_provider is not None:
+            return self.signals_provider(node_id)
         return ErrorSignals()
 
     def remediate(self, node_id: int, stage: str) -> None:
@@ -111,13 +127,28 @@ class GuardStepHook:
                  window_steps: int = 6, n_spares: int = 2,
                  peer_jitter: float = 0.01, seed: int = 0,
                  warmup_windows: int = 1, baseline_alpha: float = 0.25,
-                 detector_cfg: Optional[DetectorConfig] = None):
+                 detector_cfg: Optional[DetectorConfig] = None,
+                 trace: Optional[TimingTrace] = None,
+                 diagnose: bool = False,
+                 own_split: Sequence[float] = (0.75, 0.15, 0.10)):
         owns_session = session is None
         if owns_session:
             control = LocalHostControl()
+            diagnoser = None
+            if diagnose:
+                trace = trace or TimingTrace()
+                diagnoser = Diagnoser(trace, Topology.single(1 + n_peers))
             session = GuardSession.from_tier(
                 Tier.ONLINE, control, LocalSweepBackend(),
-                detector_cfg=detector_cfg)
+                detector_cfg=detector_cfg, diagnoser=diagnoser)
+        elif diagnose:
+            # a caller-supplied session owns its own wiring: silently
+            # dropping the flag would run WITHOUT victim-holding while
+            # the caller believes it is on
+            raise ValueError(
+                "diagnose=True only applies to a hook-owned session; "
+                "build a Diagnoser on your GuardSession and pass its "
+                "TimingTrace via trace= instead")
         self.session = session
         self.control = session.control
         self.node_id = node_id
@@ -142,6 +173,23 @@ class GuardStepHook:
         self._restart_pending = False
         self.frames_fed = 0
         self.restarts_requested = 0
+        # timing-trace feed (repro.diagnose): measured wall split into
+        # compute/comm/host via trainer-supplied component seconds
+        # ("compute_s"/"comm_s"/"host_s" metric keys) or ``own_split``
+        self.trace = trace
+        self.own_split = tuple(own_split)
+        self._comp_sums = np.zeros(3)
+        # hardware telemetry accumulated from the trainer's metrics dict
+        # (HARDWARE_METRICS keys): window sums + per-metric sample counts
+        # (exporters often report at a lower cadence than the step loop)
+        # -> means -> Frame columns + triage ErrorSignals
+        self._hw_sums: Dict[str, float] = {}
+        self._hw_counts: Dict[str, int] = {}
+        self._hw_last: Dict[str, float] = {}
+        self._hw_base: Dict[str, float] = {}
+        # evidence snapshots for node ids this host reported under that
+        # were swapped out (offline triage queries them AFTER the swap)
+        self._evicted_signals: Dict[int, ErrorSignals] = {}
 
         # register the synthetic population only on a session we built
         # ourselves: a caller-supplied session already has real node
@@ -155,6 +203,11 @@ class GuardStepHook:
         # follow our own replacement: after an immediate swap this host
         # reports under its new node identity
         session.bus.subscribe(NodeSwapped, self._on_swap)
+        # triage evidence: the hook is the telemetry accumulator for this
+        # host, so it (not an empty stub) answers error_signals queries
+        if isinstance(self.control, LocalHostControl) and \
+                self.control.signals_provider is None:
+            self.control.signals_provider = self.derive_signals
 
     # -------------------------------------------------------------- faults
 
@@ -173,18 +226,42 @@ class GuardStepHook:
 
     # ------------------------------------------------------------ protocol
 
+    def _reset_window(self) -> None:
+        self._n_walls = 0
+        self._comp_sums[:] = 0.0
+        self._hw_sums.clear()
+        self._hw_counts.clear()
+
     def __call__(self, step: int, wall_s: float,
                  metrics: Dict[str, float]) -> bool:
         if self._restart_pending:
             # deferred swaps landed at the last checkpoint: the manager
             # already replaced the node(s); rewind the job now
             self._restart_pending = False
-            self._n_walls = 0
+            self._reset_window()
             self.restarts_requested += 1
             return True
         wall = wall_s * self._stall_factor(step)
         self._walls[self._n_walls] = wall
         self._n_walls += 1
+        # hardware telemetry riding on the metrics dict (DCGM-style
+        # exporter keys) accumulates into the window
+        for m in HARDWARE_METRICS:
+            v = metrics.get(m)
+            if v is not None:
+                self._hw_sums[m] = self._hw_sums.get(m, 0.0) + float(v)
+                self._hw_counts[m] = self._hw_counts.get(m, 0) + 1
+        # own-time decomposition for the timing trace: measured component
+        # seconds when the trainer reports them, the configured split of
+        # the (stall-scaled) wall otherwise
+        if "compute_s" in metrics:
+            self._comp_sums[0] += float(metrics["compute_s"])
+            self._comp_sums[1] += float(metrics.get("comm_s", 0.0))
+            self._comp_sums[2] += float(metrics.get("host_s", 0.0))
+        else:
+            self._comp_sums[0] += wall * self.own_split[0]
+            self._comp_sums[1] += wall * self.own_split[1]
+            self._comp_sums[2] += wall * self.own_split[2]
         if isinstance(self.control, LocalHostControl):
             # the local control has no other clock source; a real
             # substrate (e.g. the simulator) advances its own time
@@ -193,10 +270,10 @@ class GuardStepHook:
             return False
         self._windows_seen += 1
         if self._windows_seen <= self.warmup_windows:
-            self._n_walls = 0            # compile/warm spikes: re-baseline
+            self._reset_window()         # compile/warm spikes: re-baseline
             return False
         frame = self._make_frame(step)
-        self._n_walls = 0
+        self._reset_window()
         outcome = self.session.observe(frame)
         if outcome.restarts:
             self.restarts_requested += 1
@@ -212,7 +289,7 @@ class GuardStepHook:
         carry checkpoint-load / re-JIT spikes exactly like job start, and
         scoring them would flag the freshly swapped-in node and cascade
         into further spurious restarts."""
-        self._n_walls = 0
+        self._reset_window()
         self._windows_seen = 0
 
     def on_checkpoint(self, step: int) -> None:
@@ -227,12 +304,13 @@ class GuardStepHook:
 
     def _make_frame(self, step: int) -> Frame:
         walls = self._walls[:self._n_walls]
+        n_steps = self._n_walls
         mine = float(walls.mean())
         med = float(np.median(walls))
+        latched = self.session.monitor.detector.is_latched(self.node_id)
         if self._baseline is None:
             self._baseline = med
-        elif not self.session.monitor.detector.is_latched(self.node_id) \
-                and med < self._baseline * 1.5:
+        elif not latched and med < self._baseline * 1.5:
             a = self.baseline_alpha
             self._baseline = (1 - a) * self._baseline + a * med
         peers = self._baseline * (
@@ -240,11 +318,108 @@ class GuardStepHook:
                                   len(self.peer_ids)))
         node_ids = np.asarray([self.node_id, *self.peer_ids], np.int64)
         times = np.concatenate([[mine], peers])
+        metrics: Dict[str, np.ndarray] = {"step_time": times}
+        # hardware telemetry columns: this host's measured window means,
+        # peers synthesized around the rolling healthy baseline (so the
+        # detector's supporting-signal masks run on the real path).
+        # Every metric EVER seen keeps its column — exporters slower
+        # than the window cadence would otherwise flap the frame schema,
+        # and a schema change makes the detector's RingHistory restart
+        # (wiping the K-of-N persistence history every window)
+        for m in sorted(set(self._hw_last) | set(self._hw_sums)):
+            if m in self._hw_sums:
+                v = self._hw_sums[m] / self._hw_counts[m]  # per-sample
+                self._hw_last[m] = v
+                base = self._hw_base.get(m)
+                if base is None:
+                    self._hw_base[m] = base = v
+                elif not latched:
+                    a = self.baseline_alpha
+                    self._hw_base[m] = base = (1 - a) * base + a * v
+            else:
+                v = self._hw_last[m]       # no sample: carry forward
+                base = self._hw_base.get(m, v)
+            pv = base * (1.0 + self.rng.normal(0.0, 0.005,
+                                               len(self.peer_ids)))
+            metrics[m] = np.concatenate([[v], pv])
+        if self.trace is not None:
+            # own-time decomposition: measured for this host, the
+            # baseline scaled by the same split for synthetic peers
+            comp = self._comp_sums / n_steps
+            split = comp / max(float(comp.sum()), 1e-9)
+            self.trace.push(WindowTiming(
+                t=self.control.now(), step=step, node_ids=node_ids,
+                compute=np.concatenate([[comp[0]], peers * split[0]]),
+                comm=np.concatenate([[comp[1]], peers * split[1]]),
+                host=np.concatenate([[comp[2]], peers * split[2]]),
+                stall=np.zeros(len(node_ids))))
         self.frames_fed += 1
         return Frame(t=self.control.now(), step=step, node_ids=node_ids,
-                     metrics={"step_time": times},
+                     metrics=metrics,
                      valid=np.ones(len(node_ids), bool))
+
+    # ------------------------------------------------------------ triage
+
+    def derive_signals(self, node_id: int) -> ErrorSignals:
+        """Actionable triage evidence from the accumulated window
+        telemetry (registered as the LocalHostControl signals provider).
+
+        Lane evidence comes from hardware metrics when the trainer
+        supplies them (temperature rise, frequency/power sag -> GPU
+        lane; NIC error counters, throughput sag, link down -> NIC
+        lane). With no hardware telemetry at all, a latched node still
+        yields GPU-lane evidence from its sustained step-time deviation
+        — the paper's early-termination rule is for nodes with NO
+        evidence, not for hosts whose exporter is missing."""
+        if node_id in self._evicted_signals:
+            return self._evicted_signals[node_id]
+        if node_id != self.node_id:
+            return ErrorSignals()
+        hw, base = self._hw_last, self._hw_base
+        gpu = nic = False
+        notes: List[str] = []
+
+        def sag(metric, tol):
+            v, b = hw.get(metric), base.get(metric)
+            return v is not None and b is not None and b > 0 and \
+                v < b * (1.0 - tol)
+
+        if hw.get("gpu_temp", 0.0) > base.get("gpu_temp", np.inf) + 5.0:
+            gpu = True
+            notes.append("gpu_temp rise")
+        if sag("gpu_freq", 0.03):
+            gpu = True
+            notes.append("gpu_freq sag")
+        if sag("gpu_power", 0.08):
+            gpu = True
+            notes.append("gpu_power sag")
+        if hw.get("nic_errors", 0.0) > 0:
+            nic = True
+            notes.append("nic error counters")
+        if sag("nic_tx_rate", 0.08):
+            nic = True
+            notes.append("nic_tx_rate sag")
+        if hw.get("nic_up", 1.0) < 0.999:
+            nic = True
+            notes.append("nic link down")
+        if not (gpu or nic) and \
+                self.session.monitor.detector.is_latched(self.node_id):
+            gpu = True
+            notes.append("sustained step-time deviation "
+                         "(no hardware telemetry available)")
+        return ErrorSignals(gpu_errors=gpu, nic_errors=nic,
+                            detail="; ".join(notes))
 
     def _on_swap(self, ev: NodeSwapped) -> None:
         if ev.old == self.node_id:
+            # snapshot the accumulated evidence under the departing id —
+            # the detector latch is already reset by the swap, but the
+            # eviction itself is step-time evidence
+            sig = self.derive_signals(ev.old)
+            if not sig.actionable:
+                sig = ErrorSignals(
+                    gpu_errors=True,
+                    detail=f"evicted: {ev.reason} "
+                           f"(no hardware telemetry available)")
+            self._evicted_signals[ev.old] = sig
             self.node_id = ev.new

@@ -40,10 +40,12 @@ from repro.core.policy import PolicyConfig
 from repro.core.sweep import SweepBackend, SweepConfig
 from repro.core.telemetry import Frame
 from repro.core.triage import TriageConfig
-from repro.guard.events import (CheckpointSaved, CrashDetected, EventBus,
-                                GuardEvent, NodeProvisioned, NodeQuarantined,
-                                NodeSwapped, NodeTerminated, StragglerCleared,
-                                StragglerFlagged, TraceSink)
+from repro.guard.events import (CheckpointSaved, CrashDetected,
+                                DiagnosisEvent, EventBus, GuardEvent,
+                                NodeProvisioned, NodeQuarantined,
+                                NodeSwapped, NodeTerminated,
+                                StragglerCleared, StragglerFlagged,
+                                TraceSink)
 from repro.guard.scheduler import SweepScheduler
 
 
@@ -62,6 +64,8 @@ class WindowOutcome:
     flagged: List[int]                # nodes newly decided on
     cleared: List[int]                # nodes whose latch released
     restarts: List[str]               # reasons for immediate restarts
+    diagnoses: List = dataclasses.field(default_factory=list)
+    # ^ new/changed Diagnosis records this window (Diagnoser tiers only)
 
 
 @dataclasses.dataclass
@@ -82,14 +86,20 @@ class GuardSession:
                  pending_patience_s: float = 1800.0,
                  sweep_concurrency: int = 2,
                  on_provision: Optional[Callable[[int], None]] = None,
-                 bus: Optional[EventBus] = None):
+                 bus: Optional[EventBus] = None,
+                 diagnoser=None):
         self.tier = Tier(tier)
         self.control = control
         self.bus = bus or EventBus()
         self.trace = TraceSink()
         self.bus.attach(self.trace)
 
-        self.monitor = OnlineMonitor(detector_cfg, policy_cfg)
+        # optional repro.diagnose.Diagnoser: the attribution stage
+        # between detector and policy (victims watched, not evicted;
+        # triage signals enriched with root causes)
+        self.diagnoser = diagnoser
+        self.monitor = OnlineMonitor(detector_cfg, policy_cfg,
+                                     diagnoser=diagnoser)
         self.manager = HealthManager(
             control, sweep_backend, self.monitor,
             sweep_cfg=sweep_cfg, triage_cfg=triage_cfg,
@@ -97,6 +107,9 @@ class GuardSession:
             pending_patience_s=pending_patience_s,
             on_provision=on_provision,
             notify=self._on_manager_notify)
+        if diagnoser is not None:
+            self.manager.hold_check = diagnoser.should_hold
+            self.manager.signals_for = diagnoser.signals_for
         self.scheduler = SweepScheduler(self.manager, self.bus,
                                         concurrency=sweep_concurrency)
         self._step = 0
@@ -188,7 +201,20 @@ class GuardSession:
         out = WindowOutcome([], [], [], [])
         if not self.online_monitoring:
             return out
-        for ev in self.monitor.observe(frame):
+        events = self.monitor.observe(frame)
+        diag = self.monitor.last_diagnosis
+        if diag is not None:
+            # attribution verdicts first: the flag/mitigation events that
+            # follow are explained by them
+            for rec in diag.new_records:
+                out.diagnoses.append(rec)
+                self.bus.publish(DiagnosisEvent(
+                    t=frame.t, step=frame.step, node_id=rec.node_id,
+                    root_cause=rec.root_cause.value, blame=rec.blame,
+                    blame_rel=rec.blame_rel, marginal=rec.marginal,
+                    stall_share=rec.stall_share, held=rec.held,
+                    evidence=rec.evidence))
+        for ev in events:
             out.events.append(ev)
             out.flagged.append(ev.decision.node_id)
             self._flagged.add(ev.decision.node_id)

@@ -25,6 +25,8 @@ import numpy as np
 
 from repro.core.sweep import SweepReference
 from repro.core.telemetry import Frame, reduce_device_metrics
+from repro.diagnose.trace import TimingTrace, WindowTiming
+from repro.diagnose.whatif import Topology
 from repro.simcluster.faults import FaultInjector, FaultRates
 from repro.simcluster.node import Fleet, HWConfig
 
@@ -77,6 +79,7 @@ class SimCluster:
                  hw: Optional[HWConfig] = None,
                  rates: Optional[FaultRates] = None,
                  window_steps: int = 6,
+                 topology: Optional[Topology] = None,
                  seed: int = 0):
         reserve = reserve if reserve is not None else max(n_active // 2, 32)
         total = n_active + n_spare + reserve
@@ -110,6 +113,19 @@ class SimCluster:
         self._prev_err = np.zeros_like(self.fleet.nic_err_count)
         self._err_seen = self.fleet.err_version
         self._err_dirty = False
+        # --- diagnosis substrate (all optional; the hot path pays only
+        # when wired). ``topology`` is the blocking-collective structure:
+        # when set, telemetry step_time becomes the MEASURED wall (each
+        # node reports its barrier-group max — what real per-host
+        # instrumentation sees, stall contamination included). A
+        # ``TimingTrace`` attached via ``attach_timing`` additionally
+        # receives the true per-window compute/comm/host/stall split.
+        self.topology = topology
+        if topology is not None:
+            assert topology.n == n_active, (topology.n, n_active)
+        self.timing: Optional[TimingTrace] = None
+        self._parts_sum: Optional[np.ndarray] = None   # (3, N) seconds
+        self._wall_sum: Optional[np.ndarray] = None    # (N,) seconds
 
     # ------------------------------------------------------------ stepping
 
@@ -121,17 +137,22 @@ class SimCluster:
             arr = self._active_arr = np.asarray(self.active)
         return arr
 
-    def _barrier_base(self, idx: np.ndarray) -> np.ndarray:
-        """(n_active,) noise-free barrier-time composition. The single
-        source of the step-time model for BOTH the per-step path and the
-        window-batched path (their bit-identical contract depends on
-        sharing it)."""
+    def _barrier_parts(self, idx: np.ndarray):
+        """Noise-free (compute, comm, host) decomposition of the barrier
+        time, each (n_active,). The single source of the step-time model
+        for the per-step path, the window-batched path AND the diagnosis
+        trace (their bit-identical contract depends on sharing it)."""
         w = self.workload
         comp = w.compute_s / self.fleet.node_compute_factor()[idx]
         commf = self.fleet.node_comm_factor()[idx] / \
             self.injector.congestion_factor[idx]
         comm = w.comm_exposed_s / np.maximum(commf, 1e-9)
         host = w.host_s / self.fleet.host_factor[idx]
+        return comp, comm, host
+
+    def _barrier_base(self, idx: np.ndarray) -> np.ndarray:
+        """(n_active,) noise-free barrier-time composition."""
+        comp, comm, host = self._barrier_parts(idx)
         return comp + comm + host
 
     def node_barrier_times(self) -> np.ndarray:
@@ -141,11 +162,62 @@ class SimCluster:
             len(idx), dtype=np.float32) * self.workload.step_noise)
         return self._barrier_base(idx) * noise
 
+    # ------------------------------------------------- diagnosis capture
+
+    def attach_timing(self, trace: TimingTrace) -> None:
+        """Feed per-window timing decompositions into ``trace`` (the
+        ``repro.diagnose`` substrate). One push per ``collect()``."""
+        self.timing = trace
+
+    def _accum_decomp(self, times: np.ndarray, dts: np.ndarray,
+                      parts) -> None:
+        """Accumulate one committed block's decomposition: ``times`` is
+        the (k, N) own barrier times, ``dts`` the (k,) job step times,
+        ``parts`` the PRE-TICK (compute, comm, host) split the times
+        were composed from (the tick that closes the block may fire
+        fault events — the post-event state must not relabel this
+        block's seconds). O(N) per block regardless of k — the
+        multiplicative step noise scales every component alike, so
+        component sums derive from the own-time sums and the noise-free
+        split."""
+        n = times.shape[1]
+        if self._parts_sum is None or self._parts_sum.shape[1] != n:
+            self._parts_sum = np.zeros((3, n))
+            self._wall_sum = np.zeros(n)
+        if self.timing is not None:
+            comp, comm, host = parts
+            scale = times.sum(axis=0) / np.maximum(comp + comm + host,
+                                                   1e-12)
+            self._parts_sum[0] += comp * scale
+            self._parts_sum[1] += comm * scale
+            self._parts_sum[2] += host * scale
+        if self.topology is not None:
+            self._wall_sum += self.topology.group_max(times).sum(axis=0)
+        else:
+            # single global barrier: every node's wall is the step time
+            self._wall_sum += float(dts.sum())
+
+    def _reset_decomp(self) -> None:
+        if self._parts_sum is not None:
+            self._parts_sum[:] = 0.0
+            self._wall_sum[:] = 0.0
+
     def run_step(self) -> dict:
         """Advance the job by one training step; returns the step record."""
         idx = self._active_idx()
         alive = self.fleet.alive[idx]
-        times = self.node_barrier_times()
+        track = self.timing is not None or self.topology is not None
+        if track:
+            # pre-tick split (the tick below may fire events that change
+            # it); compose the barrier times from it directly instead of
+            # rebuilding the identical components in node_barrier_times
+            parts = self._barrier_parts(idx)
+            noise = np.exp(self.rng.standard_normal(
+                len(idx), dtype=np.float32) * self.workload.step_noise)
+            times = (parts[0] + parts[1] + parts[2]) * noise
+        else:
+            parts = None
+            times = self.node_barrier_times()
         step_time = float(times.max())
         crashed = not alive.all()
 
@@ -158,6 +230,9 @@ class SimCluster:
             self.step += 1
             self._win_node_times.append(times[None, :])
             self._win_alive.append(alive)
+            if track:
+                self._accum_decomp(times[None, :],
+                                   np.asarray([step_time]), parts)
         return {"t": self.t, "step": self.step, "step_time": step_time,
                 "crashed": crashed, "node_times": times}
 
@@ -203,7 +278,10 @@ class SimCluster:
             # ---- frozen-state fast path: one (k, N) composition
             self.injector.prime(self.t, idx)
             w = self.workload
-            base = self._barrier_base(idx)                 # (N,)
+            track = self.timing is not None or self.topology is not None
+            parts = self._barrier_parts(idx) if track else None
+            base = parts[0] + parts[1] + parts[2] if track \
+                else self._barrier_base(idx)               # (N,)
             rng_state = self.rng.bit_generator.state
             noise = np.exp(self.rng.standard_normal(
                 (k, len(idx)), dtype=np.float32) * w.step_noise)
@@ -245,6 +323,8 @@ class SimCluster:
             self.step += m
             self._win_node_times.append(times)
             self._win_alive.append(np.ones(len(idx), bool))
+            if track:
+                self._accum_decomp(times, dts, parts)
             step_times.extend(dts.tolist())
         return {"t": self.t, "step": self.step,
                 "step_times": np.asarray(step_times),
@@ -276,7 +356,30 @@ class SimCluster:
             sensors["temp"], sensors["util"], sensors["freq"],
             sensors["power"], sensors["nic_err"], sensors["nic_tx"],
             sensors["nic_up"])
-        metrics["step_time"] = times.mean(axis=0)
+        own_mean = times.mean(axis=0)
+        node_ids = idx.astype(np.int64)
+        w = times.shape[0]
+        wall_mean = None
+        if self.topology is not None:
+            # measured wall: each node reports its blocking-collective
+            # group's completion time — barrier-stall contamination, the
+            # signal a real per-host collector sees (one degraded node
+            # inflates every group peer's step_time)
+            wall_mean = self._wall_sum / w
+            metrics["step_time"] = wall_mean
+        else:
+            metrics["step_time"] = own_mean
+        if self.timing is not None and self._parts_sum is not None and \
+                self._parts_sum.shape[1] == len(idx):
+            if wall_mean is None:
+                wall_mean = self._wall_sum / w
+            self.timing.push(WindowTiming(
+                t=self.t, step=self.step, node_ids=node_ids,
+                compute=self._parts_sum[0] / w,
+                comm=self._parts_sum[1] / w,
+                host=self._parts_sum[2] / w,
+                stall=np.maximum(wall_mean - own_mean, 0.0)))
+        self._reset_decomp()
         # error counters are cumulative — report the window delta. Clean
         # windows (no NIC events since the last collect, no swaps moving
         # baselines) skip the full-fleet delta scan outright.
@@ -288,8 +391,7 @@ class SimCluster:
             metrics["nic_errors"] = delta[idx].sum(axis=1)
             self._err_seen = self.fleet.err_version
             self._err_dirty = False
-        return Frame(t=self.t, step=self.step,
-                     node_ids=idx.astype(np.int64),
+        return Frame(t=self.t, step=self.step, node_ids=node_ids,
                      metrics=metrics, valid=valid)
 
     # ------------------------------------------------------- SweepBackend
@@ -355,6 +457,7 @@ class SimCluster:
                               "reason": reason})
         self._win_node_times.clear()
         self._win_alive.clear()
+        self._reset_decomp()
 
     def provision_node(self) -> int:
         if not self._unprovisioned:

@@ -80,6 +80,14 @@ class Fault:
     t_end: Optional[float]           # None = persistent until remediated
     escalate_at: Optional[float]     # grey -> fail-stop time (None = never)
     active: bool = True
+    t_cleared: Optional[float] = None  # when the fault actually reverted
+    # (injector clock at revert; None while active — benchmark ground
+    # truth for was-this-node-faulty-at-time-t queries)
+
+    def active_at(self, t: float) -> bool:
+        if t < self.t_start:
+            return False
+        return self.t_cleared is None or t < self.t_cleared
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,6 +155,9 @@ class FaultInjector:
         # zero) so one event costs O(1), not an O(N) rebuild
         self.congestion_factor = np.ones(fleet.n)
         self._cong_count = np.zeros(fleet.n, dtype=np.int64)
+        # injector clock: the latest sim time this injector has seen;
+        # stamps Fault.t_cleared for audit/ground-truth queries
+        self.t_last = 0.0
 
     # --------------------------------------------------------- creation
 
@@ -188,6 +199,7 @@ class FaultInjector:
             t_end = now + float(self.rng.uniform(30, 180))
         elif kind in GREY_KINDS:
             esc = now + float(self.rng.exponential(r.escalation_mean_s))
+        self.t_last = max(self.t_last, now)
         f = Fault(next(self._next_id), kind, node, dev, sev, now, t_end, esc)
         self.faults.append(f)
         self._register(f)
@@ -251,9 +263,10 @@ class FaultInjector:
         elif k == FaultKind.FAIL_STOP:
             fl.alive[n] = False
 
-    def _revert(self, f: Fault) -> None:
+    def _revert(self, f: Fault, at: Optional[float] = None) -> None:
         if not f.active:
             return
+        f.t_cleared = self.t_last if at is None else at
         fl = self.fleet
         k, n, d = f.kind, f.node, f.device
         if k == FaultKind.THERMAL:
@@ -313,6 +326,7 @@ class FaultInjector:
         window engine must know the true event horizon BEFORE the first
         tick of a batch (matching the clock state a per-step loop would
         have after its first tick)."""
+        self.t_last = max(self.t_last, now)
         if self._n_active < 0:
             self._n_active = 0
         self._set_active_count(len(active_nodes), now)
@@ -337,6 +351,7 @@ class FaultInjector:
         scenario injections, in global time order. Cost is O(events
         fired), independent of how many faults have ever existed."""
         t_end = now + dt_s
+        self.t_last = max(self.t_last, t_end)
         if self._n_active < 0:
             self._n_active = 0
         self._set_active_count(len(active_nodes), now)
@@ -364,9 +379,9 @@ class FaultInjector:
                     kind, node, sev, dev, dur = payload
                     self._mk(kind, node, ht, sev, dev, duration_s=dur)
                 elif op == _EXPIRE:
-                    self._revert(payload)
+                    self._revert(payload, at=ht)
                 elif op == _ESCALATE and payload.active:
-                    self._revert(payload)
+                    self._revert(payload, at=ht)
                     self._mk(FaultKind.FAIL_STOP, payload.node, ht,
                              severity=1.0)
 
@@ -384,7 +399,9 @@ class FaultInjector:
         gpu = bool(kc[FaultKind.THERMAL][node] + kc[FaultKind.MEM_ECC][node])
         nic = bool(kc[FaultKind.NIC_DOWN][node] +
                    kc[FaultKind.NIC_DEGRADED][node])
-        return ErrorSignals(gpu_errors=gpu, nic_errors=nic)
+        host = bool(kc[FaultKind.HOST_CPU][node])
+        return ErrorSignals(gpu_errors=gpu, nic_errors=nic,
+                            host_errors=host)
 
     def remediate(self, node: int, stage: str) -> None:
         """Apply a triage stage: eligible faults clear with stage-specific

@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.sweep import SweepConfig, multi_node_sweep, single_node_sweep
+from repro.diagnose import Diagnoser, RootCauseConfig, TimingTrace, Topology
 from repro.guard import GuardSession, JobRestart, Tier
 from repro.simcluster.cluster import SimCluster, WorkloadProfile
 from repro.simcluster.faults import FaultRates
@@ -69,6 +70,18 @@ class RunConfig:
     # declarative correlated-fault scenarios (Scenario instances or
     # registry names — see repro.simcluster.scenarios)
     scenarios: Tuple = ()
+    # blocking-collective structure: nodes per DP gradient-barrier group
+    # (0 = legacy idealized telemetry, each node reports its OWN barrier
+    # time; > 0 = realistic measured walls — each node reports its
+    # group's completion time, barrier-stall contamination included)
+    dp_group_size: int = 0
+    # run the repro.diagnose attribution stage (trace -> what-if ->
+    # root cause) between detector and policy: cascade victims are
+    # watched instead of evicted, triage gets root-caused ErrorSignals,
+    # and DiagnosisEvents land in RunResult.events
+    diagnose: bool = False
+    trace_depth: int = 8
+    rootcause_cfg: Optional[RootCauseConfig] = None
     # manual grey-hunting model (tiers 1-2 have no online detection)
     manual_trigger_ratio: float = 1.12   # hour-mean step/healthy to notice
     manual_delay_h: Dict[int, float] = dataclasses.field(
@@ -106,6 +119,9 @@ class RunResult:
     nodes_terminated: int
     step_times: np.ndarray
     events: List[dict]
+    # injector fault history (ground truth for attribution scoring):
+    # one dict per fault with node/kind/severity/t_start/t_cleared
+    fault_log: List[dict] = dataclasses.field(default_factory=list)
 
 
 def _admission_check(cluster: SimCluster, nid: int, tier: Tier,
@@ -125,14 +141,26 @@ def _admission_check(cluster: SimCluster, nid: int, tier: Tier,
 
 def simulate_run(cfg: RunConfig) -> RunResult:
     rng = np.random.RandomState(cfg.seed + 7)
+    topology = Topology.grouped(cfg.n_nodes, cfg.dp_group_size) \
+        if cfg.dp_group_size else None
     cluster = SimCluster(cfg.n_nodes, cfg.n_spare,
                          workload=cfg.workload, rates=cfg.rates,
-                         window_steps=cfg.window_steps, seed=cfg.seed)
+                         window_steps=cfg.window_steps,
+                         topology=topology, seed=cfg.seed)
     sweep_cfg = SweepConfig()
     tier = Tier(cfg.tier)
 
+    diagnoser = None
+    if cfg.diagnose:
+        trace = TimingTrace(depth=cfg.trace_depth)
+        cluster.attach_timing(trace)
+        diagnoser = Diagnoser(trace,
+                              topology or Topology.single(cfg.n_nodes),
+                              cfg=cfg.rootcause_cfg)
+
     session = GuardSession.from_tier(
         tier, control=cluster, sweep_backend=cluster, sweep_cfg=sweep_cfg,
+        diagnoser=diagnoser,
         on_provision=lambda nid: _admission_check(
             cluster, nid, tier, sweep_cfg, session.spare_ids()))
     session.register_active(cluster.active)
@@ -315,4 +343,8 @@ def simulate_run(cfg: RunConfig) -> RunResult:
         guard_restarts=stats.immediate_restarts,
         deferred_swaps=stats.deferred_swaps,
         nodes_terminated=stats.nodes_terminated,
-        step_times=st, events=session.trace.as_dicts())
+        step_times=st, events=session.trace.as_dicts(),
+        fault_log=[{"node": f.node, "kind": f.kind.value,
+                    "device": f.device, "severity": f.severity,
+                    "t_start": f.t_start, "t_cleared": f.t_cleared}
+                   for f in cluster.injector.faults])

@@ -1,0 +1,557 @@
+"""Tests for ``repro.diagnose``: the timing trace, the what-if engine,
+root-cause classification, the Diagnoser stage inside the Guard loop
+(victims watched, not evicted), and the trainer-hook telemetry path."""
+import numpy as np
+
+from repro.core import DetectorConfig, StragglerDetector
+from repro.core.detector import FleetAssessment
+from repro.core.telemetry import Frame
+from repro.diagnose import (Diagnoser, RootCause, RootCauseConfig,
+                            TimingTrace, Topology, WindowTiming, whatif)
+from repro.guard import (DiagnosisEvent, GuardSession, GuardStepHook,
+                         NodeSwapped, Tier)
+from repro.simcluster import FaultKind, FaultRates, RunConfig, SimCluster, \
+    simulate_run
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+
+
+def wt(node_ids, compute, comm, host, stall=None, t=0.0, step=0):
+    n = len(node_ids)
+    z = np.zeros(n)
+    return WindowTiming(
+        t=t, step=step, node_ids=np.asarray(node_ids, np.int64),
+        compute=np.asarray(compute, float), comm=np.asarray(comm, float),
+        host=np.asarray(host, float),
+        stall=z if stall is None else np.asarray(stall, float))
+
+
+# ------------------------------------------------------------------ trace
+
+class TestTimingTrace:
+    def test_circular_depth_and_means(self):
+        tr = TimingTrace(depth=3)
+        ids = [0, 1]
+        for k in range(5):
+            tr.push(wt(ids, [k, k], [1, 1], [0, 0], t=float(k), step=k))
+        assert len(tr) == 3 and tr.full
+        # windows kept: k = 2, 3, 4 -> mean compute 3
+        assert np.allclose(tr.mean("compute"), [3.0, 3.0])
+        assert np.allclose(tr.own_mean(), [4.0, 4.0])
+        assert tr.last().step == 4
+
+    def test_swap_backfills_only_changed_column(self):
+        tr = TimingTrace(depth=4)
+        for k in range(4):
+            tr.push(wt([0, 1, 2], [9, 1, 1], [0, 0, 0], [0, 0, 0]))
+        # node 0 replaced by node 7 reporting healthy 1.0
+        tr.push(wt([7, 1, 2], [1, 1, 1], [0, 0, 0], [0, 0, 0]))
+        assert np.array_equal(tr.node_ids, [7, 1, 2])
+        # the new node must NOT inherit its predecessor's 9.0 history
+        assert np.allclose(tr.rows("compute")[:, 0], 1.0)
+        # peers keep their window
+        assert np.allclose(tr.mean("compute")[1:], 1.0)
+
+    def test_resize_reallocates(self):
+        tr = TimingTrace(depth=4)
+        tr.push(wt([0, 1], [1, 1], [0, 0], [0, 0]))
+        g = tr.generation
+        tr.push(wt([0, 1, 2], [1, 1, 1], [0, 0, 0], [0, 0, 0]))
+        assert tr.generation == g + 1 and len(tr) == 1
+
+
+# --------------------------------------------------------------- topology
+
+class TestTopology:
+    def test_group_max_matches_naive(self):
+        rng = np.random.RandomState(0)
+        stage_of = rng.randint(0, 5, size=37)
+        topo = Topology(stage_of)
+        x = rng.rand(4, 37)
+        got = topo.group_max(x)
+        for g in np.unique(stage_of):
+            cols = stage_of == g
+            expect = x[:, cols].max(axis=1, keepdims=True)
+            assert np.allclose(got[:, cols], expect)
+
+    def test_single_is_global_barrier(self):
+        topo = Topology.single(6)
+        x = np.asarray([1.0, 5.0, 2.0, 3.0, 4.0, 0.5])
+        assert np.allclose(topo.group_max(x), 5.0)
+
+    def test_grouped_and_pipeline(self):
+        t = Topology.grouped(10, 4)
+        assert t.n_groups == 3            # 4 + 4 + 2
+        p = Topology.pipeline(12, 3)
+        assert p.n_groups == 3 and np.all(p.counts == 4)
+
+    def test_from_dist_uses_model_ways(self):
+        class Ctx:
+            def axis_size(self, name):
+                return {"tp": 4}.get(name, 1)
+        t = Topology.from_dist(Ctx(), 16)
+        assert t.n_groups == 4
+
+
+# ----------------------------------------------------------------- whatif
+
+class TestWhatIf:
+    def test_culprit_gets_blame_victims_get_none(self):
+        topo = Topology.grouped(8, 4)
+        own = np.full(8, 10.0)
+        own[2] = 14.0                     # culprit in group 0
+        rep = whatif(own, topo)
+        assert rep.blame[2] > 3.9
+        assert np.all(rep.blame[np.arange(8) != 2] == 0.0)
+        # leave-one-out: fixing node 2 returns the fleet to ~10s
+        assert abs(rep.marginal[2] - 4.0) < 0.2
+        assert np.all(rep.marginal[np.arange(8) != 2] == 0.0)
+
+    def test_shadowed_culprit_still_blamed(self):
+        topo = Topology.grouped(8, 4)
+        own = np.full(8, 10.0)
+        own[1] = 13.0                     # both in group 0
+        own[2] = 14.0
+        rep = whatif(own, topo)
+        assert rep.blame[1] > 2.5 and rep.blame[2] > 3.5
+        # marginal: only the group argmax wins fleet time back, and only
+        # down to the runner-up culprit
+        assert rep.marginal[1] == 0.0
+        assert abs(rep.marginal[2] - 1.0) < 0.1
+
+    def test_marginal_zero_for_non_critical_group(self):
+        topo = Topology.grouped(8, 4)
+        own = np.full(8, 10.0)
+        own[1] = 12.0                     # group 0 max
+        own[6] = 15.0                     # group 1 max -> fleet critical
+        rep = whatif(own, topo)
+        assert rep.marginal[1] == 0.0     # fleet still waits on node 6
+        assert abs(rep.marginal[6] - 3.0) < 0.2
+        assert rep.blame[1] > 1.5         # standalone blame survives
+
+
+# ------------------------------------------------------- classification
+
+def _assess(node_ids, flagged_ids, support=None):
+    n = len(node_ids)
+    flagged = np.isin(node_ids, flagged_ids)
+    masks = {}
+    for name, ids in (support or {}).items():
+        masks[name] = np.isin(node_ids, ids)
+    return FleetAssessment(
+        node_ids=np.asarray(node_ids, np.int64),
+        slowdown=np.where(flagged, 0.3, 0.0), stalled=np.zeros(n, bool),
+        step_deviant=flagged.copy(), support_masks=masks,
+        flagged=flagged)
+
+
+def _frame(node_ids, t=0.0, step=0):
+    n = len(node_ids)
+    return Frame(t=t, step=step,
+                 node_ids=np.asarray(node_ids, np.int64),
+                 metrics={"step_time": np.full(n, 10.0)},
+                 valid=np.ones(n, bool))
+
+
+class TestRootCause:
+    N = 16
+
+    def mk(self, **cfg):
+        trace = TimingTrace(depth=4)
+        topo = Topology.grouped(self.N, 8)
+        return trace, Diagnoser(trace, topo, cfg=RootCauseConfig(**cfg))
+
+    def push_windows(self, trace, compute, comm, host, stall=None, k=4):
+        ids = list(range(self.N))
+        for w in range(k):
+            trace.push(wt(ids, compute, comm, host, stall,
+                          t=60.0 * w, step=6 * w))
+
+    def test_compute_culprit(self):
+        trace, diag = self.mk()
+        comp = np.full(self.N, 8.0)
+        comp[3] = 11.0
+        self.push_windows(trace, comp, np.full(self.N, 0.6),
+                          np.full(self.N, 1.4))
+        d = diag.diagnose(_frame(range(self.N)),
+                          _assess(range(self.N), [3]))
+        assert d.cause_of(3) == RootCause.COMPUTE_DEGRADED
+        assert not d.records[3].held
+        sig = diag.signals_for(3)
+        assert sig.gpu_errors and not sig.nic_errors
+        assert sig.root_cause == "compute_degraded"
+
+    def test_sustained_comm_culprit(self):
+        trace, diag = self.mk()
+        comm = np.full(self.N, 2.0)
+        comm[5] = 4.5
+        self.push_windows(trace, np.full(self.N, 8.0), comm,
+                          np.full(self.N, 1.4))
+        d = diag.diagnose(_frame(range(self.N)),
+                          _assess(range(self.N), [5]))
+        assert d.cause_of(5) == RootCause.COMM_DEGRADED
+        assert diag.signals_for(5).nic_errors
+
+    def test_transient_comm_is_held(self):
+        trace, diag = self.mk()
+        ids = list(range(self.N))
+        comp = np.full(self.N, 8.0)
+        host = np.full(self.N, 1.4)
+        burst = np.full(self.N, 2.0)
+        burst[5] = 6.0
+        calm = np.full(self.N, 2.0)
+        # burst covered 2 of 4 windows and is OVER in the latest one
+        trace.push(wt(ids, comp, burst, host))
+        trace.push(wt(ids, comp, burst, host))
+        trace.push(wt(ids, comp, calm, host))
+        trace.push(wt(ids, comp, calm, host))
+        d = diag.diagnose(_frame(ids), _assess(ids, [5]))
+        assert d.cause_of(5) == RootCause.UNDIAGNOSED
+        assert d.records[5].held and diag.should_hold(5)
+
+    def test_cascade_victim_held(self):
+        trace, diag = self.mk()
+        stall = np.zeros(self.N)
+        stall[np.arange(8)] = 3.0         # group 0 stalled
+        stall[3] = 0.0                    # ...behind node 3
+        comp = np.full(self.N, 8.0)
+        comp[3] = 11.0
+        self.push_windows(trace, comp, np.full(self.N, 0.6),
+                          np.full(self.N, 1.4), stall)
+        d = diag.diagnose(_frame(range(self.N)),
+                          _assess(range(self.N), list(range(8))))
+        assert d.cause_of(3) == RootCause.COMPUTE_DEGRADED
+        for v in range(8):
+            if v == 3:
+                continue
+            assert d.cause_of(v) == RootCause.CASCADE_VICTIM
+            assert d.records[v].held
+        sig = diag.signals_for(0)
+        assert sig.root_cause == "cascade_victim" and not sig.actionable
+
+    def test_data_stall_lane(self):
+        trace, diag = self.mk()
+        host = np.full(self.N, 1.4)
+        host[7] = 4.0
+        self.push_windows(trace, np.full(self.N, 8.0),
+                          np.full(self.N, 0.6), host)
+        d = diag.diagnose(_frame(range(self.N)),
+                          _assess(range(self.N), [7]))
+        assert d.cause_of(7) == RootCause.DATA_STALL
+        assert diag.signals_for(7).host_errors
+
+    def test_presymptomatic_support_lane(self):
+        trace, diag = self.mk()
+        self.push_windows(trace, np.full(self.N, 8.0),
+                          np.full(self.N, 0.6), np.full(self.N, 1.4))
+        d = diag.diagnose(
+            _frame(range(self.N)),
+            _assess(range(self.N), [9],
+                    support={"gpu_temp": [9], "gpu_freq": [9]}))
+        assert d.cause_of(9) == RootCause.COMPUTE_DEGRADED
+        assert not d.records[9].held
+
+    def test_reroute_downgrades_only_held(self):
+        from repro.core.policy import Action, Decision
+        trace, diag = self.mk()
+        stall = np.zeros(self.N)
+        stall[0] = 3.0
+        self.push_windows(trace, np.full(self.N, 8.0),
+                          np.full(self.N, 0.6), np.full(self.N, 1.4),
+                          stall)
+        d = diag.diagnose(_frame(range(self.N)),
+                          _assess(range(self.N), [0]))
+        dec = Decision(0, Action.IMMEDIATE_RESTART, "severe", 0.3)
+        out = d.reroute(dec)
+        assert out.action == Action.PENDING_VERIFICATION
+        assert "cascade_victim" in out.reason
+        other = Decision(4, Action.IMMEDIATE_RESTART, "severe", 0.3)
+        assert d.reroute(other) is other   # not flagged -> untouched
+
+    def test_new_records_dedup_until_cause_changes(self):
+        trace, diag = self.mk()
+        comp = np.full(self.N, 8.0)
+        comp[3] = 11.0
+        self.push_windows(trace, comp, np.full(self.N, 0.6),
+                          np.full(self.N, 1.4))
+        fr, fa = _frame(range(self.N)), _assess(range(self.N), [3])
+        d1 = diag.diagnose(fr, fa)
+        assert len(d1.new_records) == 1
+        d2 = diag.diagnose(fr, fa)
+        assert d2.new_records == []        # unchanged verdict: no re-emit
+        assert d2.records[3] is d1.records[3]
+
+
+# ------------------------------------------------------------ integration
+
+class TestGuardLoopIntegration:
+    def build(self, n=32, group=8, seed=3):
+        topo = Topology.grouped(n, group)
+        cluster = SimCluster(n_active=n, n_spare=4, rates=QUIET,
+                             topology=topo, seed=seed)
+        trace = TimingTrace(depth=8)
+        cluster.attach_timing(trace)
+        diag = Diagnoser(trace, topo)
+        session = GuardSession.from_tier(
+            Tier.ENHANCED, control=cluster, sweep_backend=cluster,
+            diagnoser=diag)
+        session.register_active(cluster.active)
+        session.register_spares(cluster.spares)
+        return cluster, session, diag
+
+    def run_windows(self, cluster, session, n, ckpt_every=5):
+        for w in range(n):
+            cluster.run_window()
+            frame = cluster.collect()
+            if frame is not None:
+                session.observe(frame)
+            if (w + 1) % ckpt_every == 0:
+                session.on_checkpoint()
+
+    def test_victims_watched_culprit_evicted(self):
+        cluster, session, diag = self.build()
+        # severe compute culprit on node 3: its whole barrier group
+        # (rows 0-7) reports the contaminated wall and gets flagged
+        cluster.injector.inject(FaultKind.POWER, 3, severity=0.95)
+        cluster.injector.inject(FaultKind.MEM_ECC, 3, severity=0.95)
+        self.run_windows(cluster, session, 30)
+        assert 3 not in cluster.active            # culprit pulled
+        swapped = [e.old for e in session.trace.events
+                   if isinstance(e, NodeSwapped)]
+        assert swapped == [3]                     # ...and ONLY the culprit
+        diags = [e for e in session.trace.events
+                 if isinstance(e, DiagnosisEvent)]
+        causes = {e.node_id: e.root_cause for e in diags}
+        assert causes[3] == "compute_degraded"
+        victims = [e for e in diags
+                   if e.root_cause == "cascade_victim"]
+        assert {e.node_id for e in victims} <= set(range(8)) - {3}
+        assert len(victims) >= 3 and all(e.held for e in victims)
+        # after the culprit left, the victims' latch released
+        latched = session.monitor.detector.latched_nodes()
+        assert all(v not in latched for v in range(8) if v != 3)
+
+    def test_victim_hold_survives_pending_patience(self):
+        cluster, session, diag = self.build()
+        session.manager.pending_patience_s = 0.0   # pull ASAP
+        cluster.injector.inject(FaultKind.POWER, 3, severity=0.95)
+        cluster.injector.inject(FaultKind.MEM_ECC, 3, severity=0.95)
+        self.run_windows(cluster, session, 30)
+        # zero-patience pending pulls must still not evict held victims
+        swapped = [e.old for e in session.trace.events
+                   if isinstance(e, NodeSwapped)]
+        assert swapped == [3]
+
+    def test_simulate_run_diagnose_smoke(self):
+        cfg = RunConfig(tier=Tier.ENHANCED, n_nodes=32, n_spare=4,
+                        duration_h=1.0, rates=QUIET, initial_grey_p=0.2,
+                        dp_group_size=8, diagnose=True, seed=5)
+        r1 = simulate_run(cfg)
+        r2 = simulate_run(cfg)
+        assert r1.steps == r2.steps
+        assert [e for e in r1.events] == [e for e in r2.events]
+        assert r1.fault_log and \
+            all("t_start" in f for f in r1.fault_log)
+
+
+# ------------------------------------------------------------- step hook
+
+class TestHookSignals:
+    def test_hw_telemetry_yields_lane_signals(self):
+        hook = GuardStepHook(window_steps=4, warmup_windows=1)
+        # healthy baseline windows, then a thermal-throttle signature
+        for s in range(12):
+            hook(s, 1.0, {"gpu_temp": 58.0, "gpu_freq": 1.93})
+        for s in range(12, 20):
+            hook(s, 1.0, {"gpu_temp": 78.0, "gpu_freq": 1.40})
+        sig = hook.session.control.error_signals(hook.node_id)
+        assert sig.gpu_errors and not sig.nic_errors
+        assert "gpu" in sig.detail
+
+    def test_intermittent_exporter_keeps_frame_schema_stable(self):
+        hook = GuardStepHook(window_steps=4, warmup_windows=1)
+        # gpu_temp reported only in every other window: the metric
+        # column must persist (carry-forward) so the detector's ring
+        # history never reallocates and K-of-N persistence accumulates
+        for s in range(16):
+            window = s // 4
+            m = {"gpu_temp": 58.0} if window % 2 == 0 else {}
+            hook(s, 1.0, m)
+        det = hook.session.monitor.detector
+        gen = det.history.generation     # one realloc when the metric
+        for s in range(16, 48):          # first appeared is inherent...
+            window = s // 4
+            m = {"gpu_temp": 58.0} if window % 2 == 0 else {}
+            hook(s, 1.0, m)
+        # ...but absent windows must NOT flap the schema afterwards
+        assert det.history.generation == gen
+        assert "gpu_temp" in det.history.metric_names()
+        assert det.history.full          # history was never wiped
+
+    def test_stale_cascade_verdict_loses_to_real_counters(self):
+        from repro.core.triage import ErrorSignals as ES
+        trace = TimingTrace(depth=4)
+        topo = Topology.grouped(8, 4)
+        cluster = SimCluster(n_active=8, n_spare=2, rates=QUIET,
+                             topology=topo, seed=9)
+        cluster.attach_timing(trace)
+        diag = Diagnoser(trace, topo)
+        session = GuardSession.from_tier(
+            Tier.ENHANCED, control=cluster, sweep_backend=cluster,
+            diagnoser=diag)
+        # fake a stale victim verdict for node 1, then give the node a
+        # real GPU-lane fault: the substrate counters must win
+        from repro.diagnose.rootcause import Diagnosis
+        diag.last[1] = Diagnosis(1, RootCause.CASCADE_VICTIM, 0.0, 0.0,
+                                 0.0, 0.3, ("stale",), 0.0, 0)
+        cluster.injector.inject(FaultKind.THERMAL, 1, severity=0.9)
+        sig = session.manager._error_signals(1)
+        assert sig.gpu_errors
+        assert sig.root_cause != "cascade_victim"
+        # with no contradicting counters the victim verdict still holds
+        diag.last[2] = Diagnosis(2, RootCause.CASCADE_VICTIM, 0.0, 0.0,
+                                 0.0, 0.3, ("stale",), 0.0, 0)
+        assert session.manager._error_signals(2).root_cause == \
+            "cascade_victim"
+        assert isinstance(session.manager._error_signals(2), ES)
+
+    def test_sparse_exporter_cadence_not_diluted(self):
+        hook = GuardStepHook(window_steps=6, warmup_windows=1)
+        # exporter reports every 3rd step only; means must be
+        # per-sample, not per-step (else nic_up reads 1/3 -> link down)
+        for s in range(24):
+            m = {"nic_up": 1.0, "gpu_temp": 58.0} if s % 3 == 0 else {}
+            hook(s, 1.0, m)
+        sig = hook.session.control.error_signals(hook.node_id)
+        assert not sig.actionable
+        assert abs(hook._hw_last["nic_up"] - 1.0) < 1e-9
+
+    def test_step_time_fallback_when_latched(self):
+        hook = GuardStepHook(window_steps=4, warmup_windows=1, seed=1)
+        hook.inject_stall(at_step=16, factor=1.6, steps=40)
+        restarted = False
+        for s in range(80):
+            if hook(s, 1.0, {}):
+                restarted = True
+                break
+        # latched or evicted either way: the old node id must carry
+        # actionable evidence instead of the empty stub
+        nid = hook.node_id if not restarted else hook.control.swaps[0][0]
+        sig = hook.session.control.error_signals(nid)
+        assert sig.actionable
+        assert not hook.session.control.error_signals(99999).actionable
+
+    def test_healthy_unlatched_node_has_no_signals(self):
+        hook = GuardStepHook(window_steps=4, warmup_windows=1)
+        for s in range(20):
+            hook(s, 1.0, {})
+        assert not hook.session.control.error_signals(
+            hook.node_id).actionable
+
+    def test_diagnose_flag_rejected_with_supplied_session(self):
+        import pytest
+        from repro.guard import LocalHostControl, LocalSweepBackend
+        session = GuardSession.from_tier(
+            Tier.ONLINE, LocalHostControl(), LocalSweepBackend())
+        with pytest.raises(ValueError, match="hook-owned"):
+            GuardStepHook(session=session, diagnose=True)
+
+    def test_diagnose_mode_feeds_trace(self):
+        hook = GuardStepHook(window_steps=4, warmup_windows=1,
+                             diagnose=True)
+        for s in range(20):
+            hook(s, 1.0, {"compute_s": 0.7, "comm_s": 0.2,
+                          "host_s": 0.1})
+        assert hook.trace is not None and len(hook.trace) >= 3
+        comp = hook.trace.last().compute
+        assert abs(comp[0] - 0.7) < 1e-6
+        assert hook.session.diagnoser is not None
+
+
+# --------------------------------------------------- sim decomposition
+
+class TestSimDecomposition:
+    def test_trace_matches_fault_decomposition(self):
+        topo = Topology.grouped(16, 8)
+        cluster = SimCluster(n_active=16, n_spare=2, rates=QUIET,
+                             topology=topo, seed=11)
+        trace = TimingTrace(depth=4)
+        cluster.attach_timing(trace)
+        cluster.injector.inject(FaultKind.HOST_CPU, 5, severity=0.9)
+        cluster.injector.inject(FaultKind.NIC_DEGRADED, 12, severity=0.9,
+                                device=1)
+        for _ in range(4):
+            cluster.run_window()
+            cluster.collect()
+        last = trace.last()
+        w = cluster.workload
+        # host fault shows up in the host channel of node 5 only
+        assert last.host[5] > 2.0 * w.host_s
+        assert abs(last.host[4] - w.host_s) < 0.1
+        # NIC fault shows up in the comm channel of node 12 only
+        assert last.comm[12] > 1.5 * w.comm_exposed_s
+        assert abs(last.comm[5] - w.comm_exposed_s) < 0.1
+        # victims in group 1 carry stall, their own channels stay clean
+        assert last.stall[8] > 0.1
+        assert abs(last.compute[8] - w.compute_s) < 0.2
+
+    def test_window_engine_decomposition_matches_per_step(self):
+        def build():
+            topo = Topology.grouped(8, 4)
+            c = SimCluster(n_active=8, n_spare=2, rates=QUIET,
+                           topology=topo, seed=4)
+            tr = TimingTrace(depth=6)
+            c.attach_timing(tr)
+            c.injector.inject(FaultKind.POWER, 2, severity=0.8)
+            return c, tr
+
+        c1, t1 = build()
+        for _ in range(12):
+            c1.run_step()
+        f1 = c1.collect()
+        c2, t2 = build()
+        c2.run_window(12)
+        f2 = c2.collect()
+        assert np.array_equal(f1.metrics["step_time"],
+                              f2.metrics["step_time"])
+        # trace channels: the batched path sums k noise factors in one
+        # reduction instead of k accumulations -> ULP-level association
+        # differences only
+        for ch in ("compute", "comm", "host", "stall"):
+            assert np.allclose(getattr(t1.last(), ch),
+                               getattr(t2.last(), ch),
+                               rtol=1e-12, atol=1e-12), ch
+
+    def test_wall_telemetry_contaminates_group(self):
+        topo = Topology.grouped(8, 4)
+        c = SimCluster(n_active=8, n_spare=2, rates=QUIET,
+                       topology=topo, seed=4)
+        c.injector.inject(FaultKind.POWER, 2, severity=0.9)
+        c.run_window()
+        f = c.collect()
+        st = f.metrics["step_time"]
+        # everyone in group 0 reports the culprit's wall; group 1 clean
+        assert np.allclose(st[:4], st[2])
+        assert st[0] > st[4] * 1.05
+
+
+class TestDetectorGoldenWithTopology:
+    def test_detector_flags_whole_group_without_diagnoser(self):
+        """The failure mode the subsystem exists for: with measured-wall
+        telemetry and no diagnoser, the detector cannot separate the
+        culprit from its barrier group."""
+        topo = Topology.grouped(32, 8)
+        cluster = SimCluster(n_active=32, n_spare=2, rates=QUIET,
+                             topology=topo, seed=2)
+        det = StragglerDetector(DetectorConfig())
+        cluster.injector.inject(FaultKind.POWER, 3, severity=0.95)
+        cluster.injector.inject(FaultKind.MEM_ECC, 3, severity=0.95)
+        flagged = set()
+        for _ in range(8):
+            cluster.run_window()
+            frame = cluster.collect()
+            fa = det.update(frame)
+            flagged |= set(fa.flagged_ids().tolist())
+        assert set(range(8)) <= flagged

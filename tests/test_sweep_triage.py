@@ -117,6 +117,61 @@ class TestTriage:
                          remediate=lambda n, s: None, verify=lambda n: True)
         assert res.outcome == TriageOutcome.RETURNED_TO_SWEEP
 
+    def test_strike_window_expiry_resets_count(self):
+        tw = TriageWorkflow(TriageConfig(strike_limit=3))
+        week = 7 * 86_400.0
+        for i in range(2):
+            tw.run(4, ErrorSignals(gpu_errors=True), now=i * 3600.0,
+                   remediate=lambda n, s: None, verify=lambda n: True)
+        assert tw.strike_count(4, now=3600.0) == 2
+        # both strikes age out of the window: the count RESETS, so a
+        # fresh pair of incidents later does not terminate the node
+        assert tw.strike_count(4, now=2 * week) == 0
+        for i in range(2):
+            res = tw.run(4, ErrorSignals(gpu_errors=True),
+                         now=2 * week + i * 3600.0,
+                         remediate=lambda n, s: None,
+                         verify=lambda n: True)
+        assert res.outcome == TriageOutcome.RETURNED_TO_SWEEP
+        assert tw.strike_count(4, now=2 * week + 3600.0) == 2
+
+    def test_cascade_victim_consumes_no_strike(self):
+        tw = TriageWorkflow(TriageConfig(strike_limit=3))
+        gpu = ErrorSignals(gpu_errors=True)
+        victim = ErrorSignals(root_cause="cascade_victim")
+        tw.run(8, gpu, now=0.0, remediate=lambda n, s: None,
+               verify=lambda n: True)
+        tw.run(8, gpu, now=3600.0, remediate=lambda n, s: None,
+               verify=lambda n: True)
+        # a cascade-victim verdict between strikes: returned to sweep,
+        # no remediation stages, and crucially NO third strike
+        res = tw.run(8, victim, now=7200.0, remediate=lambda n, s: None,
+                     verify=lambda n: True)
+        assert res.outcome == TriageOutcome.RETURNED_TO_SWEEP
+        assert res.stages_run == [] and res.human_s == 0.0
+        assert tw.strike_count(8, now=7200.0) == 2
+        # the next REAL incident is strike 3 and does terminate
+        res = tw.run(8, gpu, now=10_800.0, remediate=lambda n, s: None,
+                     verify=lambda n: True)
+        assert res.outcome == TriageOutcome.TERMINATED
+        assert "strikes" in res.reason
+
+    def test_host_errors_route_to_host_lane(self):
+        tw = TriageWorkflow()
+        res = tw.run(9, ErrorSignals(host_errors=True), now=0.0,
+                     remediate=lambda n, s: None, verify=lambda n: False)
+        assert res.stages_run == ["reboot", "reimage"]
+
+    def test_root_cause_rich_signals_merge(self):
+        diag = ErrorSignals(gpu_errors=True, root_cause="compute_degraded",
+                            detail="blame +20%")
+        counters = ErrorSignals(nic_errors=True)
+        merged = diag.merged(counters)
+        assert merged.gpu_errors and merged.nic_errors
+        assert merged.root_cause == "compute_degraded"
+        assert merged.detail == "blame +20%"
+        assert ErrorSignals().merged(counters).nic_errors
+
 
 class TestRemediationModel:
     def test_reimage_clears_host_fault(self):
