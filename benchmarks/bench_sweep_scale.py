@@ -1,0 +1,224 @@
+"""Fleet-qualification campaign benchmark: the batched sweep pipeline's
+scale target, pinned in CI.
+
+Three measurements, written to ``BENCH_sweep.json``:
+
+  1. ``campaign``: wall-clock of a full 4096-node enhanced
+     ``fleet_qualification`` (batched compute burns + bandwidth probes +
+     round-robin 2-node collective stage with disjoint-buddy retries)
+     over a simulated fleet carrying a deterministic grey population.
+     Gate: < ``--budget-s`` (default 2.0 s) wall.
+  2. ``equivalence``: the same campaign driven through the scalar-compat
+     fallback (batch methods hidden, node-by-node probes) on an
+     identically-seeded fleet — per-node verdicts, failure strings AND
+     raw measurements must be bit-identical to the batched pass. CI
+     gates on this.
+  3. ``detection``: the injected fault classes the campaign must catch
+     (power/thermal/memory via the single-node stage, degraded links via
+     the 2-node stage) — zero misses, zero false evictions of healthy
+     nodes.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_sweep_scale [--quick]
+          [--nodes N] [--budget-s S] [--out PATH]
+
+``--quick`` is the CI smoke sizing: the scalar-equivalence pass runs at
+1024 nodes (the fallback is a Python loop) while the batched wall
+measurement stays at the full campaign size.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.core.sweep import SweepCampaign, fleet_qualification
+from repro.simcluster import FaultKind, FaultRates, SimCluster
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+
+# deterministic grey population: (stride, kind, severity, device)
+FAULT_PLAN = (
+    (97, FaultKind.POWER, 0.75, 4),
+    (131, FaultKind.MEM_ECC, 0.85, 2),
+    (211, FaultKind.THERMAL, 0.9, 0),
+    (173, FaultKind.NIC_DEGRADED, 0.7, 1),   # only the 2-node stage sees it
+)
+
+
+class ScalarOnlyBackend:
+    """Hides the batched protocol so ``fleet_qualification`` exercises
+    the scalar-compat fallback (the golden reference path)."""
+
+    def __init__(self, backend):
+        self._b = backend
+
+    def device_count(self, node_id):
+        return self._b.device_count(node_id)
+
+    def compute_probe(self, node_id, device, seconds):
+        return self._b.compute_probe(node_id, device, seconds)
+
+    def intra_bw_probe(self, node_id, a, b):
+        return self._b.intra_bw_probe(node_id, a, b)
+
+    def multi_node_probe(self, node_ids, steps):
+        return self._b.multi_node_probe(node_ids, steps)
+
+    def reference(self):
+        return self._b.reference()
+
+
+def build_cluster(n_nodes: int, seed: int = 0) -> SimCluster:
+    c = SimCluster(n_active=n_nodes, n_spare=max(16, n_nodes // 64),
+                   reserve=0, rates=QUIET, seed=seed)
+    for stride, kind, sev, dev in FAULT_PLAN:
+        for node in range(stride // 2, n_nodes, stride):
+            c.injector.inject(kind, node, severity=sev, device=dev)
+    c.fleet.advance_thermals(7200.0)          # let thermal faults settle
+    return c
+
+
+def faulted_nodes(n_nodes: int) -> set:
+    return {node for stride, *_ in FAULT_PLAN
+            for node in range(stride // 2, n_nodes, stride)}
+
+
+def campaign_for(c: SimCluster) -> SweepCampaign:
+    return SweepCampaign(node_ids=tuple(range(len(c.active))),
+                         reference_pool=tuple(c.spares), enhanced=True)
+
+
+def reports_equal(a, b) -> bool:
+    if len(a) != len(b):
+        return False
+    for ra, rb in zip(a, b):
+        if (ra.node_id, ra.passed, ra.failures, ra.duration_s) != \
+                (rb.node_id, rb.passed, rb.failures, rb.duration_s):
+            return False
+        if set(ra.measurements) != set(rb.measurements):
+            return False
+        for k, va in ra.measurements.items():
+            vb = rb.measurements[k]
+            if isinstance(va, np.ndarray):
+                if not np.array_equal(va, vb):
+                    return False
+            elif isinstance(va, dict):
+                if set(va) != set(vb) or \
+                        any(va[p] != vb[p] for p in va):
+                    return False
+            elif va != vb:
+                return False
+    return True
+
+
+def run_campaign(n_nodes: int, repeats: int = 3) -> dict:
+    """Batched campaign wall at full size (min over repeats — wall-clock
+    gates want the least-interference sample)."""
+    walls = []
+    res = None
+    for _ in range(max(repeats, 1)):
+        c = build_cluster(n_nodes)
+        t0 = time.perf_counter()
+        res = fleet_qualification(c, campaign_for(c))
+        walls.append(time.perf_counter() - t0)
+    expected = faulted_nodes(n_nodes)
+    failed = set(res.failed)
+    return {
+        "n_nodes": n_nodes,
+        "wall_s": min(walls),
+        "wall_s_all": walls,
+        "passed": len(res.passed),
+        "failed": len(res.failed),
+        "retried": len(res.retry_buddies),
+        "sweeps": res.sweeps,
+        "node_seconds": res.node_seconds,
+        "calibrated": res.calibrated,
+        "missed_faulty": sorted(expected - failed),
+        "false_failures": sorted(failed - expected),
+    }
+
+
+def run_equivalence(n_nodes: int) -> dict:
+    """Batched vs scalar-fallback campaign on identically-seeded fleets:
+    bit-identical verdicts, failure strings and measurements."""
+    cb = build_cluster(n_nodes)
+    cs = build_cluster(n_nodes)
+    t0 = time.perf_counter()
+    batched = fleet_qualification(cb, campaign_for(cb))
+    t1 = time.perf_counter()
+    scalar = fleet_qualification(ScalarOnlyBackend(cs), campaign_for(cs))
+    t2 = time.perf_counter()
+    return {
+        "n_nodes": n_nodes,
+        "identical": reports_equal(batched.reports, scalar.reports),
+        "batched_wall_s": t1 - t0,
+        "scalar_wall_s": t2 - t1,
+        "speedup": (t2 - t1) / max(t1 - t0, 1e-9),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (equivalence at 1024 nodes)")
+    ap.add_argument("--nodes", type=int, default=4096)
+    ap.add_argument("--budget-s", type=float, default=2.0,
+                    help="wall-time budget for the batched campaign")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_sweep.json"))
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    campaign = run_campaign(args.nodes, repeats=1 if args.quick else 3)
+    equiv = run_equivalence(1024 if args.quick else args.nodes)
+    out = {
+        "benchmark": "sweep_scale",
+        "mode": "quick" if args.quick else "full",
+        "campaign": campaign,
+        "equivalence": equiv,
+        "budget_s": args.budget_s,
+        "total_wall_s": time.perf_counter() - t0,
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+
+    print(f"campaign: {campaign['n_nodes']} nodes qualified in "
+          f"{campaign['wall_s']:.2f}s wall "
+          f"({campaign['passed']} passed, {campaign['failed']} failed, "
+          f"{campaign['retried']} buddy retries, "
+          f"{campaign['node_seconds'] / 3600.0:.0f}h bench time)")
+    print(f"equivalence @{equiv['n_nodes']}: "
+          f"{'IDENTICAL' if equiv['identical'] else 'DIVERGED'} "
+          f"(batched {equiv['batched_wall_s']:.2f}s vs scalar "
+          f"{equiv['scalar_wall_s']:.2f}s, {equiv['speedup']:.1f}x)")
+
+    ok = True
+    if campaign["wall_s"] > args.budget_s:
+        print(f"FAIL: campaign {campaign['wall_s']:.2f}s over the "
+              f"{args.budget_s:.1f}s budget", file=sys.stderr)
+        ok = False
+    if not equiv["identical"]:
+        print("FAIL: batched campaign verdicts diverge from the scalar "
+              "path", file=sys.stderr)
+        ok = False
+    if campaign["missed_faulty"]:
+        print(f"FAIL: campaign missed faulty nodes "
+              f"{campaign['missed_faulty'][:8]}...", file=sys.stderr)
+        ok = False
+    if campaign["false_failures"]:
+        print(f"FAIL: campaign failed healthy nodes "
+              f"{campaign['false_failures'][:8]}...", file=sys.stderr)
+        ok = False
+    print(f"wrote {args.out}  ({out['total_wall_s']:.0f}s)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,9 +17,11 @@ from repro.core.health_manager import (ClusterControl, HealthManager,
                                        QualificationTicket)
 from repro.core.monitor import HealthEvent, OnlineMonitor
 from repro.core.policy import Action, Decision, PolicyConfig, TieredPolicy
-from repro.core.sweep import (SweepBackend, SweepConfig, SweepReference,
-                              SweepReport, multi_node_sweep,
-                              qualification_sweep, single_node_sweep)
+from repro.core.sweep import (CampaignResult, SweepBackend, SweepCampaign,
+                              SweepConfig, SweepReference, SweepReport,
+                              fleet_qualification, intra_pairs,
+                              multi_node_sweep, qualification_sweep,
+                              single_node_sweep)
 from repro.core.telemetry import (HARDWARE_METRICS, METRIC_DIRECTION, METRICS,
                                   Collector, Frame, RingHistory,
                                   reduce_device_metrics)
@@ -27,15 +29,18 @@ from repro.core.triage import (ErrorSignals, Stage, TriageConfig,
                                TriageOutcome, TriageResult, TriageWorkflow)
 
 __all__ = [
-    "Action", "ClusterControl", "Collector", "Decision", "DetectorConfig",
+    "Action", "CampaignResult", "ClusterControl", "Collector", "Decision",
+    "DetectorConfig",
     "ErrorSignals", "FleetAssessment", "Frame", "HARDWARE_METRICS",
     "HealthEvent",
     "HealthManager", "METRICS", "METRIC_DIRECTION", "ManagerStats",
     "NodeAssessment", "NodeState", "OnlineMonitor", "PolicyConfig",
     "QualificationTicket",
     "RingHistory", "Stage", "StragglerDetector", "SweepBackend",
+    "SweepCampaign",
     "SweepConfig", "SweepReference", "SweepReport", "TieredPolicy",
     "TriageConfig", "TriageOutcome", "TriageResult", "TriageWorkflow",
-    "multi_node_sweep", "qualification_sweep", "reduce_device_metrics",
+    "fleet_qualification", "intra_pairs", "multi_node_sweep",
+    "qualification_sweep", "reduce_device_metrics",
     "robust_z", "single_node_sweep",
 ]

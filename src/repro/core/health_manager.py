@@ -26,7 +26,7 @@ from typing import Callable, Dict, List, Optional, Protocol, Tuple
 from repro.core.monitor import HealthEvent, OnlineMonitor
 from repro.core.policy import Action
 from repro.core.sweep import (SweepBackend, SweepConfig, SweepReport,
-                              qualification_sweep)
+                              multi_node_sweep, single_node_sweep)
 from repro.core.triage import (ErrorSignals, TriageConfig, TriageOutcome,
                                TriageResult, TriageWorkflow)
 
@@ -83,13 +83,18 @@ class QualificationTicket:
     ``duration_s`` is the node-down time the sweep→triage loop consumed —
     a scheduler uses it to decide *when* (in job time) the outcome lands.
     ``records`` interleaves the sweep reports and triage results in the
-    order they ran, for event emission and audit."""
+    order they ran, for event emission and audit. ``buddy_exhausted``
+    marks a qualification that could not disambiguate the node from a
+    (possibly contaminated) buddy for lack of a DISJOINT second buddy —
+    the outcome is then ``QUARANTINED`` (parked until buddy capacity
+    exists), never a silent pass."""
     node_id: int
     outcome: NodeState
     duration_s: float
     sweeps: int
     records: List[Tuple[str, object]]
     applied: bool = False
+    buddy_exhausted: bool = False
 
 
 # Manager-level notification callback: (topic, payload). Kept as a plain
@@ -299,30 +304,57 @@ class HealthManager:
         scheduler overlap the sweep's ``duration_s`` with the job.
 
         The 2-node stage needs a known-good buddy: a failure is re-tried
-        against a second buddy before it counts (disambiguates a
-        contaminated buddy from a genuinely bad node)."""
+        against a DISJOINT second buddy before it counts (disambiguates
+        a contaminated buddy from a genuinely bad node). When there is
+        no buddy at all, or no disjoint retry buddy after a group
+        failure, the node is parked with ``buddy_exhausted`` set and a
+        QUARANTINED outcome — it is neither passed unverified nor
+        condemned on one ambiguous measurement."""
         nb = max(self.sweep_cfg.group_size - 1, 1)
         duration = 0.0
         sweeps = 0
         records: List[Tuple[str, object]] = []
+
+        def run(rep: SweepReport) -> SweepReport:
+            nonlocal duration, sweeps
+            self.stats.sweeps_run += 1
+            sweeps += 1
+            self.stats.downtime_seconds += rep.duration_s
+            duration += rep.duration_s
+            records.append(("sweep", rep))
+            return rep
+
+        def ticket(outcome: NodeState,
+                   exhausted: bool = False) -> QualificationTicket:
+            return QualificationTicket(node_id, outcome, duration, sweeps,
+                                       records, buddy_exhausted=exhausted)
+
         for _ in range(self.max_rounds):
-            rep: Optional[SweepReport] = None
-            for attempt in range(2):
-                buddies = self.spares[attempt * nb:(attempt + 1) * nb] or \
-                    self.spares[:nb]
-                rep = qualification_sweep(self.backend, node_id, buddies,
-                                          self.sweep_cfg,
-                                          enhanced=self.enhanced_sweep)
-                self.stats.sweeps_run += 1
-                sweeps += 1
-                self.stats.downtime_seconds += rep.duration_s
-                duration += rep.duration_s
-                records.append(("sweep", rep))
-                if rep.passed or not buddies:
-                    break
-            if rep.passed:
-                return QualificationTicket(node_id, NodeState.HEALTHY_SPARE,
-                                           duration, sweeps, records)
+            rep = run(single_node_sweep(self.backend, node_id,
+                                        self.sweep_cfg,
+                                        enhanced=self.enhanced_sweep))
+            passed = rep.passed
+            if passed and self.enhanced_sweep:
+                buddies = self.spares[:nb]
+                if not buddies:
+                    # no known-good buddy: the multi-node stage cannot
+                    # run — park the node instead of passing it blind
+                    return ticket(NodeState.QUARANTINED, exhausted=True)
+                multi = run(multi_node_sweep(self.backend, node_id,
+                                             buddies, self.sweep_cfg))
+                if not multi.passed:
+                    retry = [s for s in self.spares[nb:]
+                             if s not in buddies][:nb]
+                    if not retry:
+                        # the only buddy may itself be contaminated —
+                        # one ambiguous failure condemns nobody
+                        return ticket(NodeState.QUARANTINED,
+                                      exhausted=True)
+                    multi = run(multi_node_sweep(self.backend, node_id,
+                                                 retry, self.sweep_cfg))
+                passed = multi.passed
+            if passed:
+                return ticket(NodeState.HEALTHY_SPARE)
             self.stats.sweeps_failed += 1
             res: TriageResult = self.triage.run(
                 node_id, self._error_signals(node_id),
@@ -334,11 +366,9 @@ class HealthManager:
             duration += res.elapsed_s
             records.append(("triage", res))
             if res.outcome == TriageOutcome.TERMINATED:
-                return QualificationTicket(node_id, NodeState.TERMINATED,
-                                           duration, sweeps, records)
+                return ticket(NodeState.TERMINATED)
             # else: returned to sweep — loop re-sweeps
-        return QualificationTicket(node_id, NodeState.TERMINATED,
-                                   duration, sweeps, records)
+        return ticket(NodeState.TERMINATED)
 
     def complete_qualification(self, ticket: QualificationTicket
                                ) -> NodeState:
@@ -349,6 +379,10 @@ class HealthManager:
         if ticket.outcome == NodeState.HEALTHY_SPARE:
             self.return_spare(ticket.node_id)
             self.stats.nodes_requalified += 1
+        elif ticket.outcome == NodeState.QUARANTINED:
+            # unresolved (buddy exhaustion): the node stays parked and a
+            # later submission retries once buddy capacity exists
+            self.state[ticket.node_id] = NodeState.QUARANTINED
         else:
             self.state[ticket.node_id] = NodeState.TERMINATED
             self.stats.nodes_terminated += 1

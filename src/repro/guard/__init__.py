@@ -9,7 +9,8 @@ Everything above the substrate protocols (``ClusterControl``,
 ``SweepBackend``, telemetry ``Collector``) goes through this package;
 consumers should not wire ``OnlineMonitor``/``HealthManager`` by hand.
 """
-from repro.guard.events import (EVENT_TYPES, CheckpointSaved, CrashDetected,
+from repro.guard.events import (EVENT_TYPES, CampaignFinished,
+                                CheckpointSaved, CrashDetected,
                                 DiagnosisEvent, EventBus, GuardEvent,
                                 JobRestart, JsonlSink, NodeProvisioned,
                                 NodeQuarantined, NodeSwapped, NodeTerminated,
@@ -23,7 +24,8 @@ from repro.guard.session import (CheckpointOutcome, GuardSession, Tier,
                                  WindowOutcome)
 
 __all__ = [
-    "CheckpointOutcome", "CheckpointSaved", "CrashDetected",
+    "CampaignFinished", "CheckpointOutcome", "CheckpointSaved",
+    "CrashDetected",
     "DiagnosisEvent", "EVENT_TYPES",
     "EventBus", "GuardEvent", "GuardSession", "GuardStepHook", "JobRestart",
     "JsonlSink", "LocalHostControl", "LocalSweepBackend", "NodeProvisioned",

@@ -160,10 +160,28 @@ class TriageStage(GuardEvent):
     reason: str = ""
 
 
+@dataclasses.dataclass(frozen=True)
+class CampaignFinished(GuardEvent):
+    """A fleet-qualification campaign concluded (§5 at fleet scale):
+    every candidate node was swept in one batched pass. ``failed`` lists
+    the nodes routed into per-node quarantine/triage, ``node_seconds``
+    the summed bench occupancy the campaign represents, ``wall_s`` the
+    real compute wall of the batched pass, and ``calibrated`` whether
+    the SweepReference was auto-derived from fleet medians."""
+    kind: ClassVar[str] = "campaign_finish"
+    nodes: int = 0
+    passed: int = 0
+    failed: Tuple[int, ...] = ()
+    calibrated: bool = False
+    node_seconds: float = 0.0
+    wall_s: float = 0.0
+
+
 EVENT_TYPES: Tuple[Type[GuardEvent], ...] = (
     StragglerFlagged, StragglerCleared, DiagnosisEvent, NodeSwapped,
     NodeQuarantined, NodeTerminated, NodeProvisioned, CrashDetected,
     JobRestart, CheckpointSaved, SweepStarted, SweepFinished, TriageStage,
+    CampaignFinished,
 )
 
 

@@ -1,4 +1,5 @@
-"""Non-blocking offline-qualification scheduler.
+"""Non-blocking offline-qualification scheduler with sweep-bench
+capacity modeling.
 
 The paper's qualification pipeline (§5) is *event-driven and offline*: a
 quarantined node is swept/triaged on the side while the job keeps
@@ -9,18 +10,26 @@ with the job.
 
 ``SweepScheduler`` restores the real semantics: quarantined nodes queue
 up, at most ``concurrency`` qualifications are in flight, and each one
-occupies the sweep-bench for the simulated ``duration_s`` its
-sweep→triage loop consumed. ``advance(now)`` is the only clock input —
-call it whenever job time moves (the simulator does so every step) and
-it starts queued work and lands finished work, publishing
-``SweepStarted`` / ``TriageStage`` / ``SweepFinished`` events on the
-session bus. ``drain(now)`` force-completes everything for end-of-run
-accounting.
+occupies a sweep-bench slot for the simulated ``duration_s`` its
+sweep→triage loop consumed. The bench is modeled as ``concurrency``
+slots with explicit free times: dequeued work starts at
+``max(slot_free_t, enqueue_t)`` — the moment the freeing slot's
+previous occupant actually finished, NOT the next time ``advance()``
+happened to be called — so bench occupancy and qualification landing
+times are exact regardless of how coarsely the caller drives the clock.
+``advance(now)`` is the only clock input — call it whenever job time
+moves (the simulator does so every window) and it chains starts and
+landings in event order up to ``now``, publishing ``SweepStarted`` /
+``TriageStage`` / ``SweepFinished`` events on the session bus at their
+TRUE times. ``drain(now, step)`` runs the bench to completion for
+end-of-run accounting (event times may lie beyond ``now``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Set
+import heapq
+import math
+from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.health_manager import HealthManager, QualificationTicket
 from repro.guard.events import (EventBus, SweepFinished, SweepStarted,
@@ -44,25 +53,47 @@ class SweepScheduler:
         self.manager = manager
         self.bus = bus
         self.concurrency = concurrency
-        self.queue: List[int] = []
+        self.queue: List[Tuple[int, float]] = []    # (node_id, enqueued_t)
         self.in_flight: List[InFlight] = []
         self._tracked: Set[int] = set()
+        # nodes whose last qualification ended buddy_exhausted, keyed to
+        # the spare count they exhausted it at: re-running the identical
+        # ambiguous sweep against the identical buddy pool would burn
+        # the bench for the identical parked verdict, so the periodic
+        # quarantine scan skips them until the pool has GROWN (an
+        # explicit submit() still overrides)
+        self._parked: Dict[int, int] = {}
         self.completed: List[QualificationTicket] = []
         self._step = 0               # last known global step, for events
+        self._now = 0.0              # last clock input (submit default)
+        # free times of the bench slots; work dequeues against the
+        # EARLIEST one so capacity is modeled exactly
+        self._free_at: List[float] = [0.0] * concurrency
+        heapq.heapify(self._free_at)
 
     # ------------------------------------------------------------- intake
 
-    def submit(self, node_id: int) -> bool:
-        """Enqueue one quarantined node; no-op if already queued/running."""
+    def submit(self, node_id: int, now: Optional[float] = None) -> bool:
+        """Enqueue one quarantined node; no-op if already queued/running.
+        ``now`` is the time the node became available for the bench
+        (defaults to the last clock input)."""
         if node_id in self._tracked:
             return False
         self._tracked.add(node_id)
-        self.queue.append(node_id)
+        self._parked.pop(node_id, None)
+        self.queue.append((node_id, self._now if now is None else
+                           float(now)))
         return True
 
-    def submit_quarantined(self) -> int:
-        """Scan the manager for quarantined nodes and enqueue the new ones."""
-        return sum(self.submit(nid) for nid in self.manager.quarantined())
+    def submit_quarantined(self, now: Optional[float] = None) -> int:
+        """Scan the manager for quarantined nodes and enqueue the new
+        ones — except buddy-exhausted parked nodes whose spare pool has
+        not grown since they parked (re-sweeping them would repeat the
+        same ambiguous verdict)."""
+        spares = self.manager.spare_count
+        return sum(self.submit(nid, now=now)
+                   for nid in self.manager.quarantined()
+                   if spares > self._parked.get(nid, -1))
 
     # ------------------------------------------------------------- clock
 
@@ -81,46 +112,71 @@ class SweepScheduler:
 
     def advance(self, now: float, step: int = -1
                 ) -> List[QualificationTicket]:
-        """Land finished qualifications and start queued ones; returns the
-        tickets that completed at or before ``now``."""
+        """Chain starts and landings in event order up to ``now``;
+        returns the tickets that completed at or before ``now``."""
         if step >= 0:
             self._step = step
-        done: List[QualificationTicket] = []
-        still: List[InFlight] = []
-        for f in self.in_flight:
-            if f.finish_t <= now:
-                self._finish(f, f.finish_t)
-                done.append(f.ticket)
-            else:
-                still.append(f)
-        self.in_flight = still
-        while self.queue and len(self.in_flight) < self.concurrency:
-            nid = self.queue.pop(0)
-            ticket = self.manager.begin_qualification(nid)
-            self._publish(SweepStarted(
-                t=now, step=self._step, node_id=nid,
-                enhanced=self.manager.enhanced_sweep))
-            self.in_flight.append(
-                InFlight(ticket, now, now + ticket.duration_s))
-        return done
+        now = float(now)
+        self._now = max(self._now, now)
+        return self._run_until(now)
 
-    def drain(self, now: float) -> List[QualificationTicket]:
-        """Force-complete all queued and in-flight work (end of run)."""
-        done: List[QualificationTicket] = []
-        while self.queue or self.in_flight:
-            done.extend(self.advance(now))   # start queued work
-            for f in self.in_flight:         # then land it immediately
-                self._finish(f, max(now, f.finish_t))
-                done.append(f.ticket)
-            self.in_flight = []
-        return done
+    def drain(self, now: float, step: Optional[int] = None
+              ) -> List[QualificationTicket]:
+        """Force-run the bench to completion (end of run). Events are
+        stamped at their true start/finish times — which may lie beyond
+        ``now`` — and carry ``step`` when given (the caller's final
+        global step, so end-of-run events aren't stamped with whatever
+        step the last mid-run ``advance`` happened to see)."""
+        if step is not None:
+            self._step = step
+        self._now = max(self._now, float(now))
+        return self._run_until(math.inf)
 
     # ----------------------------------------------------------- internal
+
+    def _next_start_t(self) -> Optional[float]:
+        """Earliest moment the queue head could occupy a bench slot."""
+        if not self.queue or not self._free_at:
+            return None
+        return max(self._free_at[0], self.queue[0][1])
+
+    def _run_until(self, horizon: float) -> List[QualificationTicket]:
+        done: List[QualificationTicket] = []
+        while True:
+            nf = self.next_finish_t()
+            ns = self._next_start_t()
+            # process the earliest event not beyond the horizon; landings
+            # first on ties — a freed slot may let queued work start at
+            # that same instant
+            if nf is not None and nf <= horizon and \
+                    (ns is None or nf <= ns):
+                i = min(range(len(self.in_flight)),
+                        key=lambda j: self.in_flight[j].finish_t)
+                f = self.in_flight.pop(i)
+                self._finish(f, f.finish_t)
+                heapq.heappush(self._free_at, f.finish_t)
+                done.append(f.ticket)
+                continue
+            if ns is not None and ns <= horizon:
+                free_t = heapq.heappop(self._free_at)
+                nid, enq_t = self.queue.pop(0)
+                start = max(free_t, enq_t)
+                ticket = self.manager.begin_qualification(nid)
+                self._publish(SweepStarted(
+                    t=start, step=self._step, node_id=nid,
+                    enhanced=self.manager.enhanced_sweep))
+                self.in_flight.append(
+                    InFlight(ticket, start, start + ticket.duration_s))
+                continue
+            break
+        return done
 
     def _finish(self, f: InFlight, at: float) -> None:
         ticket = f.ticket
         outcome = self.manager.complete_qualification(ticket)
         self._tracked.discard(ticket.node_id)
+        if ticket.buddy_exhausted:
+            self._parked[ticket.node_id] = self.manager.spare_count
         self.completed.append(ticket)
         failures: List[str] = []
         for kind, rec in ticket.records:

@@ -37,10 +37,13 @@ from repro.core.health_manager import (ClusterControl, HealthManager,
                                        ManagerStats, NodeState)
 from repro.core.monitor import HealthEvent, OnlineMonitor
 from repro.core.policy import PolicyConfig
-from repro.core.sweep import SweepBackend, SweepConfig
+from repro.core.sweep import (CampaignResult, SweepBackend, SweepCampaign,
+                              SweepConfig, SweepReference,
+                              fleet_qualification)
 from repro.core.telemetry import Frame
 from repro.core.triage import TriageConfig
-from repro.guard.events import (CheckpointSaved, CrashDetected,
+from repro.guard.events import (CampaignFinished, CheckpointSaved,
+                                CrashDetected,
                                 DiagnosisEvent, EventBus, GuardEvent,
                                 NodeProvisioned, NodeQuarantined,
                                 NodeSwapped, NodeTerminated,
@@ -257,7 +260,7 @@ class GuardSession:
                                          applied_swaps=applied))
         submitted = 0
         if self.sweep_tooling:
-            submitted = self.scheduler.submit_quarantined()
+            submitted = self.scheduler.submit_quarantined(now=t)
         self.advance(t)
         return CheckpointOutcome(applied, submitted)
 
@@ -311,10 +314,74 @@ class GuardSession:
             self.manager.state[bad] = NodeState.QUARANTINED
             self.bus.publish(NodeQuarantined(t=now, step=self._step,
                                              node_id=bad, reason=reason))
-            self.scheduler.submit(bad)
+            self.scheduler.submit(bad, now=now)
         else:
             self.manager.retire(bad, reason=reason)
         return spare
+
+    def prequalify_fleet(self, node_ids: Optional[Sequence[int]] = None,
+                         reference_pool: Optional[Sequence[int]] = None,
+                         enhanced: Optional[bool] = None,
+                         reference: Optional[SweepReference] = None,
+                         replace: bool = True,
+                         step: Optional[int] = None) -> CampaignResult:
+        """Offline fleet-qualification phase (§5 at fleet scale): sweep
+        every candidate node in one batched campaign BEFORE it serves
+        the job, so early-run failures are caught on the bench, not in
+        the first thousand steps.
+
+        Defaults: all ACTIVE nodes are candidates and the current
+        healthy spares form the known-good reference pool for the
+        multi-node buddy stage (round-robin — suspects are never each
+        other's buddies). ``reference=None`` auto-calibrates the
+        SweepReference from fleet medians. Nodes that fail are pulled:
+        active failures are swapped for spares (``replace=True``) and
+        every failure is quarantined and routed into the event-driven
+        per-node sweep→triage loop. Publishes one ``CampaignFinished``
+        summary event (plus the usual swap/quarantine events per
+        failing node)."""
+        if not self.sweep_tooling:
+            raise RuntimeError(
+                "fleet qualification needs sweep tooling "
+                "(tier >= NODE_SWEEP)")
+        self._note_step(step)
+        now = self.control.now()
+        if node_ids is None:
+            node_ids = sorted(n for n, st in self.manager.state.items()
+                              if st == NodeState.ACTIVE)
+        if reference_pool is None:
+            reference_pool = tuple(self.manager.spares)
+        campaign = SweepCampaign(
+            node_ids=tuple(int(n) for n in node_ids),
+            reference_pool=tuple(int(n) for n in reference_pool),
+            enhanced=(self.tier == Tier.ENHANCED) if enhanced is None
+            else enhanced,
+            reference=reference)
+        res = fleet_qualification(self.manager.backend, campaign,
+                                  self.manager.sweep_cfg)
+        self.manager.stats.sweeps_run += res.sweeps
+        self.manager.stats.sweeps_failed += len(res.failed)
+        for rep in res.reports:
+            if rep.passed:
+                continue
+            nid = rep.node_id
+            if replace and self.manager.state.get(nid) == NodeState.ACTIVE:
+                self.replace_node(nid, reason="fleet prequalification",
+                                  step=self._step)
+            else:
+                self.manager.state[nid] = NodeState.QUARANTINED
+                self.manager.spares = [s for s in self.manager.spares
+                                       if s != nid]
+                self.bus.publish(NodeQuarantined(
+                    t=now, step=self._step, node_id=nid,
+                    reason="fleet prequalification"))
+                self.scheduler.submit(nid, now=now)
+        self.bus.publish(CampaignFinished(
+            t=now, step=self._step, nodes=len(res.reports),
+            passed=len(res.passed), failed=tuple(res.failed),
+            calibrated=res.calibrated, node_seconds=res.node_seconds,
+            wall_s=res.wall_s))
+        return res
 
     def take_spare(self) -> int:
         return self.manager.take_spare()
@@ -352,7 +419,7 @@ class GuardSession:
                 t=t, step=self._step, node_id=payload["old"],
                 reason=payload.get("reason", "")))
             if self.sweep_tooling:      # event-driven qualification (§5)
-                self.scheduler.submit(payload["old"])
+                self.scheduler.submit(payload["old"], now=t)
         elif topic == "provision":
             self.bus.publish(NodeProvisioned(
                 t=t, step=self._step, node_id=payload["node_id"]))

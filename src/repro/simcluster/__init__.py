@@ -3,7 +3,7 @@ window-granular synchronous step engine, the declarative correlated-fault
 scenario layer, and the multi-week run simulator. Everything above this
 layer (Guard's detection/triage/sweep logic) is substrate-independent."""
 from repro.simcluster.cluster import SWEEP_PROFILE, SimCluster, \
-    WorkloadProfile
+    SimSweepBackend, WorkloadProfile
 from repro.simcluster.faults import (FaultInjector, FaultKind, FaultRates,
                                      GREY_KINDS)
 from repro.simcluster.node import (Fleet, HWConfig, THROTTLE_CURVE_C,
@@ -20,7 +20,8 @@ __all__ = [
     "CongestionStorm", "FaultInjector", "FaultKind", "FaultRates", "Fleet",
     "GREY_KINDS", "HWConfig", "InitialGreyPopulation", "MaintenanceWindow",
     "RackThermal", "RunConfig", "RunResult", "SWEEP_PROFILE", "Scenario",
-    "SimCluster", "SwitchFailure", "THROTTLE_CURVE_C", "THROTTLE_CURVE_GHZ",
+    "SimCluster", "SimSweepBackend", "SwitchFailure", "THROTTLE_CURVE_C",
+    "THROTTLE_CURVE_GHZ",
     "Tier", "WorkloadProfile", "arm_all", "builtin_scenarios",
     "freq_at_temp", "register_scenario", "scenario", "simulate_run",
 ]

@@ -28,7 +28,7 @@ from repro.core.telemetry import Frame, reduce_device_metrics
 from repro.diagnose.trace import TimingTrace, WindowTiming
 from repro.diagnose.whatif import Topology
 from repro.simcluster.faults import FaultInjector, FaultRates
-from repro.simcluster.node import Fleet, HWConfig
+from repro.simcluster.node import Fleet, HWConfig, freq_at_temp
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +70,112 @@ SWEEP_PROFILE = WorkloadProfile(
     step_noise=0.01)
 
 
+class SimSweepBackend:
+    """``SweepBackend`` over a simulated :class:`Fleet` — scalar probes
+    plus the batched fleet-campaign protocol (``batch_compute_probe`` /
+    ``batch_intra_bw_probe`` / ``batch_multi_node_probe``), all reading
+    the same keyed probe noise and the same cached node perf factors, so
+    a batched campaign over N nodes is a handful of ``(N, D)`` array
+    expressions and its measurements are bit-identical to N scalar
+    sweeps."""
+
+    def __init__(self, fleet: Fleet):
+        self.fleet = fleet
+
+    def device_count(self, node_id: int) -> int:
+        return self.fleet.d
+
+    # --- compute -----------------------------------------------------
+
+    def _effective_temp(self, temp, target, seconds: float):
+        # longer burns average away sensor noise and surface slow thermal
+        # ramps: let the node reach its thermal target first
+        frac = min(seconds / self.fleet.hw.temp_tau_s, 5.0)
+        return temp + (1 - math.exp(-frac)) * (target - temp)
+
+    def compute_probe(self, node_id: int, device: int,
+                      seconds: float) -> float:
+        fl = self.fleet
+        t_eff = self._effective_temp(fl.temp_c[node_id, device],
+                                     fl.temp_target[node_id, device],
+                                     seconds)
+        saved = fl.temp_c[node_id, device]
+        fl.temp_c[node_id, device] = t_eff
+        try:
+            return fl.probe_device_tflops(node_id, device)
+        finally:
+            fl.temp_c[node_id, device] = saved
+
+    def batch_compute_probe(self, node_ids: Sequence[int],
+                            seconds: float) -> np.ndarray:
+        """(len(node_ids), D) sustained throughputs, one array pass."""
+        fl = self.fleet
+        idx = np.asarray(list(node_ids))
+        temp = fl.temp_c[idx]
+        t_eff = self._effective_temp(temp, fl.temp_target[idx], seconds)
+        f = freq_at_temp(t_eff) / fl.hw.base_freq_ghz * \
+            fl.power_factor[idx] * fl.mem_factor[idx]
+        return fl.hw.base_tflops * f * fl.probe_noise_compute()[idx]
+
+    # --- intra-node bandwidth ----------------------------------------
+
+    def intra_bw_probe(self, node_id: int, dev_a: int, dev_b: int) -> float:
+        return self.fleet.probe_intra_bw(node_id, dev_a, dev_b)
+
+    def batch_intra_bw_probe(self, node_ids: Sequence[int],
+                             pairs: Sequence[tuple]) -> np.ndarray:
+        """(len(node_ids), len(pairs)) pairwise bandwidths."""
+        fl = self.fleet
+        idx = np.asarray(list(node_ids))
+        pa = np.asarray([p[0] for p in pairs])
+        pb = np.asarray([p[1] for p in pairs])
+        mem = fl.mem_factor[idx]
+        q = np.minimum(mem[:, pa], mem[:, pb])
+        lo = np.minimum(pa, pb)
+        hi = np.maximum(pa, pb)
+        noise = fl.probe_noise_bw()[idx[:, None], lo[None, :], hi[None, :]]
+        return fl.hw.intra_bw_gbps * q * noise
+
+    # --- multi-node collective stage ---------------------------------
+
+    def _group_base(self, groups: np.ndarray) -> np.ndarray:
+        """(G,) noise-free group step times over the perf caches."""
+        fl = self.fleet
+        w = SWEEP_PROFILE
+        comp = w.compute_s / fl.node_compute_factor()[groups]
+        comm = w.comm_exposed_s / np.maximum(
+            fl.node_comm_factor()[groups], 1e-9)
+        host = w.host_s / fl.host_factor[groups]
+        return (comp + comm + host).max(axis=-1)
+
+    def multi_node_probe(self, node_ids: Sequence[int],
+                         steps: int) -> np.ndarray:
+        """2/4/8-node collective mini-workload (§5.3)."""
+        idx = np.asarray(list(node_ids))
+        base = self._group_base(idx)
+        noise = np.exp(self.fleet.pair_noise(int(idx[0]), steps,
+                                             SWEEP_PROFILE.step_noise))
+        return base * noise
+
+    def batch_multi_node_probe(self, groups: Sequence[Sequence[int]],
+                               steps: int) -> np.ndarray:
+        """(len(groups), steps) step times; group g's noise is keyed on
+        its candidate (first member), exactly as the scalar probe."""
+        g = np.asarray([list(gr) for gr in groups])
+        base = self._group_base(g)
+        sigma = SWEEP_PROFILE.step_noise
+        noise = np.stack([self.fleet.pair_noise(int(gr[0]), steps, sigma)
+                          for gr in g])
+        return base[:, None] * np.exp(noise)
+
+    def reference(self) -> SweepReference:
+        return SweepReference(
+            device_tflops=self.fleet.hw.base_tflops,
+            intra_bw_gbps=self.fleet.hw.intra_bw_gbps,
+            pair_step_time=SWEEP_PROFILE.healthy_step_s,
+        )
+
+
 class SimCluster:
     """N-node synchronous training job over a simulated fleet."""
 
@@ -85,6 +191,7 @@ class SimCluster:
         total = n_active + n_spare + reserve
         self.fleet = Fleet(total, hw, seed=seed)
         self.injector = FaultInjector(self.fleet, rates, seed=seed + 1)
+        self.sweep_backend = SimSweepBackend(self.fleet)
         self.workload = workload or WorkloadProfile()
         self.window_steps = window_steps
         # barrier-noise source; must support exact state save/restore and
@@ -395,48 +502,39 @@ class SimCluster:
                      metrics=metrics, valid=valid)
 
     # ------------------------------------------------------- SweepBackend
+    # Probe logic lives in SimSweepBackend (scalar + batched protocol);
+    # the cluster keeps the protocol surface by delegation so passing
+    # ``sweep_backend=cluster`` stays valid — and batched campaigns get
+    # the array path automatically.
 
     def device_count(self, node_id: int) -> int:
-        return self.fleet.d
+        return self.sweep_backend.device_count(node_id)
 
     def compute_probe(self, node_id: int, device: int,
                       seconds: float) -> float:
-        # longer burns average away sensor noise and surface slow thermal
-        # ramps: let the node reach its thermal target first
-        frac = min(seconds / self.fleet.hw.temp_tau_s, 5.0)
-        t_eff = self.fleet.temp_c[node_id, device] + \
-            (1 - math.exp(-frac)) * (self.fleet.temp_target[node_id, device]
-                                     - self.fleet.temp_c[node_id, device])
-        saved = self.fleet.temp_c[node_id, device]
-        self.fleet.temp_c[node_id, device] = t_eff
-        try:
-            return self.fleet.probe_device_tflops(node_id, device)
-        finally:
-            self.fleet.temp_c[node_id, device] = saved
+        return self.sweep_backend.compute_probe(node_id, device, seconds)
+
+    def batch_compute_probe(self, node_ids: Sequence[int],
+                            seconds: float) -> np.ndarray:
+        return self.sweep_backend.batch_compute_probe(node_ids, seconds)
 
     def intra_bw_probe(self, node_id: int, dev_a: int, dev_b: int) -> float:
-        return self.fleet.probe_intra_bw(node_id, dev_a, dev_b)
+        return self.sweep_backend.intra_bw_probe(node_id, dev_a, dev_b)
+
+    def batch_intra_bw_probe(self, node_ids: Sequence[int],
+                             pairs: Sequence[tuple]) -> np.ndarray:
+        return self.sweep_backend.batch_intra_bw_probe(node_ids, pairs)
 
     def multi_node_probe(self, node_ids: Sequence[int],
                          steps: int) -> np.ndarray:
-        """2/4/8-node collective mini-workload (§5.3)."""
-        idx = np.asarray(list(node_ids))
-        w = SWEEP_PROFILE
-        comp = w.compute_s / self.fleet.node_compute_factor()[idx]
-        comm = w.comm_exposed_s / np.maximum(
-            self.fleet.node_comm_factor()[idx], 1e-9)
-        host = w.host_s / self.fleet.host_factor[idx]
-        per_node = comp + comm + host
-        base = per_node.max()
-        noise = np.exp(self.rng.normal(0.0, w.step_noise, steps))
-        return base * noise
+        return self.sweep_backend.multi_node_probe(node_ids, steps)
+
+    def batch_multi_node_probe(self, groups: Sequence[Sequence[int]],
+                               steps: int) -> np.ndarray:
+        return self.sweep_backend.batch_multi_node_probe(groups, steps)
 
     def reference(self) -> SweepReference:
-        return SweepReference(
-            device_tflops=self.fleet.hw.base_tflops,
-            intra_bw_gbps=self.fleet.hw.intra_bw_gbps,
-            pair_step_time=SWEEP_PROFILE.healthy_step_s,
-        )
+        return self.sweep_backend.reference()
 
     # ------------------------------------------------------ ClusterControl
 

@@ -99,6 +99,14 @@ class Fleet:
         # bumped whenever NIC error counters may have moved (collectors
         # skip the full-fleet delta scan across clean windows)
         self.err_version = 0
+        # probe noise is KEYED, not streamed: each (node, device) / pair /
+        # group measurement has a fixed noise value derived from the fleet
+        # seed, so the scalar sweep path and the batched fleet-campaign
+        # path read bit-identical measurements regardless of probe order
+        # (the batched-vs-scalar golden contract). Lazily materialized.
+        self._seed = seed
+        self._probe_noise_compute: Optional[np.ndarray] = None  # (N, D)
+        self._probe_noise_bw: Optional[np.ndarray] = None       # (N, D, D)
 
     # ------------------------------------------------------------ dynamics
 
@@ -328,17 +336,43 @@ class Fleet:
 
     # ------------------------------------------------------- probes
 
+    def probe_noise_compute(self) -> np.ndarray:
+        """(N, D) fixed relative measurement noise of the compute probes."""
+        if self._probe_noise_compute is None:
+            gen = np.random.Generator(np.random.SFC64([self._seed, 1]))
+            self._probe_noise_compute = gen.normal(
+                1.0, self.hw.sensor_rate_sigma, (self.n, self.d))
+        return self._probe_noise_compute
+
+    def probe_noise_bw(self) -> np.ndarray:
+        """(N, D, D) fixed relative noise of the pairwise bw probes;
+        read at the canonical (lo, hi) device ordering."""
+        if self._probe_noise_bw is None:
+            gen = np.random.Generator(np.random.SFC64([self._seed, 2]))
+            self._probe_noise_bw = gen.normal(
+                1.0, self.hw.sensor_rate_sigma, (self.n, self.d, self.d))
+        return self._probe_noise_bw
+
+    def pair_noise(self, node: int, steps: int, sigma: float) -> np.ndarray:
+        """(steps,) log-noise of a multi-node sweep mini-workload, keyed
+        on the candidate node (the group's first member)."""
+        gen = np.random.Generator(
+            np.random.SFC64([self._seed, 3, int(node), int(steps)]))
+        return gen.normal(0.0, sigma, steps)
+
     def probe_device_tflops(self, node: int, device: int) -> float:
         """Sustained matmul burn measurement (sweep compute probe)."""
         f = float(freq_at_temp(self.temp_c[node, device])) / \
             self.hw.base_freq_ghz * self.power_factor[node, device] * \
             self.mem_factor[node, device]
-        noise = self.rng.normal(1.0, self.hw.sensor_rate_sigma)
+        noise = self.probe_noise_compute()[node, device]
         return float(self.hw.base_tflops * f * noise)
 
     def probe_intra_bw(self, node: int, a: int, b: int) -> float:
         """Pairwise intra-node bandwidth; a marginal memory/link device
-        drags the pair."""
+        drags the pair. Symmetric: (a, b) and (b, a) measure the same
+        link and read the same noise cell."""
+        lo, hi = (a, b) if a <= b else (b, a)
         q = min(self.mem_factor[node, a], self.mem_factor[node, b])
-        noise = self.rng.normal(1.0, self.hw.sensor_rate_sigma)
+        noise = self.probe_noise_bw()[node, lo, hi]
         return float(self.hw.intra_bw_gbps * q * noise)

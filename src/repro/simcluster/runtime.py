@@ -321,7 +321,9 @@ def simulate_run(cfg: RunConfig) -> RunResult:
                 slow_since = None
 
     # land any still-running offline qualifications for final accounting
-    session.scheduler.drain(cluster.t)
+    # (drain stamps the end-of-run events with the FINAL global step, not
+    # whatever step the last mid-run advance happened to see)
+    session.scheduler.drain(cluster.t, step=cluster.step)
     human_hours += session.drain_human_hours()
 
     # ----------------------------------------------------------- metrics

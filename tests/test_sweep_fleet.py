@@ -1,0 +1,490 @@
+"""Offline-qualification fleet scaling + the sweep accounting bugfixes.
+
+Covers, with regression tests that fail on the pre-fix code:
+  - single-node sweep duration: sequential burns cost ``burn * nd``
+    (the pre-fix ``burn * nd / max(nd, 1)`` collapsed to ``burn``);
+  - degenerate intra-node pairs: no (0, 0) self-probe on single-device
+    nodes, no duplicate ring/cross pairs for small ``nd``;
+  - buddy retry: a multi-stage failure is only re-tried against a
+    DISJOINT buddy, and buddy exhaustion parks the node
+    (QUARANTINED + ticket.buddy_exhausted) instead of silently passing
+    or condemning it;
+  - scheduler capacity: dequeued work starts when the freeing slot's
+    occupant actually finished, and drain stamps the caller's step;
+plus the batched-vs-scalar golden contract of ``fleet_qualification``
+and the ``GuardSession.prequalify_fleet`` phase.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ErrorSignals, NodeState, QualificationTicket,
+                        SweepCampaign, SweepConfig, SweepReference,
+                        fleet_qualification, intra_pairs, multi_node_sweep,
+                        single_node_sweep)
+from repro.guard import EventBus, GuardSession, SweepScheduler, Tier, \
+    TraceSink
+from repro.simcluster import FaultKind, FaultRates, SimCluster
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+
+CFG = SweepConfig()
+
+
+class StubBackend:
+    """Healthy scalar backend with a configurable device count."""
+
+    def __init__(self, devices=8):
+        self._d = devices
+        self._ref = SweepReference(device_tflops=100.0, intra_bw_gbps=100.0,
+                                   pair_step_time=1.0)
+
+    def device_count(self, node_id):
+        return self._d
+
+    def compute_probe(self, node_id, device, seconds):
+        return 100.0
+
+    def intra_bw_probe(self, node_id, a, b):
+        assert a != b, f"degenerate self-pair probe ({a}, {b})"
+        return 100.0
+
+    def multi_node_probe(self, node_ids, steps):
+        return np.full(steps, 1.0)
+
+    def reference(self):
+        return self._ref
+
+
+class PairFailBackend(StubBackend):
+    """Single-node stage healthy; the 2-node stage fails whenever a
+    contaminated buddy is in the group."""
+
+    def __init__(self, bad=(10,), devices=2):
+        super().__init__(devices)
+        self.bad = set(bad)
+        self.groups = []
+
+    def multi_node_probe(self, node_ids, steps):
+        self.groups.append(tuple(node_ids))
+        return np.full(steps, 2.0 if self.bad & set(node_ids) else 1.0)
+
+
+class FakeControl:
+    def __init__(self):
+        self.t = 0.0
+        self._next = 500
+
+    def swap_node(self, old, new):
+        pass
+
+    def restart_job(self, reason):
+        pass
+
+    def provision_node(self):
+        self._next += 1
+        return self._next
+
+    def error_signals(self, node_id):
+        return ErrorSignals()
+
+    def remediate(self, node_id, stage):
+        pass
+
+    def now(self):
+        return self.t
+
+
+def manager_with(backend, spares):
+    s = GuardSession.from_tier(Tier.ENHANCED, FakeControl(), backend,
+                               sweep_cfg=SweepConfig())
+    s.register_spares(spares)
+    return s.manager
+
+
+# ------------------------------------------------- duration accounting
+
+class TestSweepDuration:
+    def test_enhanced_sweep_costs_sequential_burns(self):
+        """8 devices burn SEQUENTIALLY: an enhanced sweep occupies the
+        bench for burn*8 (+ pair setup), not for one device's burn —
+        the pre-fix `burn * nd / max(nd, 1)` released qualifications
+        ~8x early."""
+        rep = single_node_sweep(StubBackend(devices=8), 0, CFG,
+                                enhanced=True)
+        n_pairs = len(intra_pairs(8))
+        assert n_pairs == 12
+        assert rep.duration_s == pytest.approx(
+            CFG.enhanced_burn_seconds * 8 + 30.0 * n_pairs)
+        assert rep.duration_s > 8 * CFG.enhanced_burn_seconds  # not 1x burn
+
+    def test_basic_sweep_duration_scales_with_devices(self):
+        four = single_node_sweep(StubBackend(devices=4), 0, CFG)
+        eight = single_node_sweep(StubBackend(devices=8), 0, CFG)
+        assert four.duration_s == pytest.approx(
+            CFG.burn_seconds * 4 + 30.0 * len(intra_pairs(4)))
+        assert eight.duration_s - 30.0 * len(intra_pairs(8)) == \
+            pytest.approx(2 * (four.duration_s - 30.0 * len(intra_pairs(4))))
+
+
+# ------------------------------------------------- degenerate pairs
+
+class TestIntraPairs:
+    def test_single_device_node_has_no_bw_stage(self):
+        """nd == 1 used to emit a (0, 0) self-pair probe; now the bw
+        stage is skipped entirely (StubBackend asserts a != b)."""
+        rep = single_node_sweep(StubBackend(devices=1), 0, CFG)
+        assert rep.passed
+        assert rep.measurements["bw"] == {}
+        assert rep.duration_s == pytest.approx(CFG.burn_seconds)
+
+    def test_two_device_pairs_deduped(self):
+        # ring gives (0,1) and (1,0); cross gives (0,1) again
+        assert intra_pairs(2) == [(0, 1)]
+
+    def test_no_self_or_duplicate_pairs(self):
+        for nd in range(1, 17):
+            pairs = intra_pairs(nd)
+            assert all(a != b for a, b in pairs), nd
+            assert all(a < b for a, b in pairs), nd
+            assert len(set(pairs)) == len(pairs), nd
+            if nd > 1:   # every device still covered
+                covered = {d for p in pairs for d in p}
+                assert covered == set(range(nd)), nd
+
+
+# ------------------------------------------------- buddy retry fix
+
+class TestBuddyExhaustion:
+    def test_single_spare_never_retried_against_same_buddy(self):
+        """With one (contaminated) spare the pre-fix retry slice wrapped
+        back to the SAME buddy and the node was condemned via triage;
+        now the ambiguous failure parks it QUARANTINED with
+        buddy_exhausted set."""
+        backend = PairFailBackend(bad=(10,))
+        mgr = manager_with(backend, spares=[10])
+        mgr.state[5] = NodeState.QUARANTINED
+        ticket = mgr.begin_qualification(5)
+        assert backend.groups == [(5, 10)]          # no same-buddy retest
+        assert ticket.buddy_exhausted
+        assert ticket.outcome == NodeState.QUARANTINED
+        assert mgr.complete_qualification(ticket) == NodeState.QUARANTINED
+        assert mgr.state[5] == NodeState.QUARANTINED
+        assert mgr.stats.nodes_terminated == 0
+        assert mgr.stats.nodes_requalified == 0
+        assert 5 not in mgr.spares
+
+    def test_no_buddies_does_not_silently_pass(self):
+        """With an empty spare pool the pre-fix enhanced qualification
+        skipped the multi stage and requalified the node unverified."""
+        backend = PairFailBackend(bad=())
+        mgr = manager_with(backend, spares=[])
+        mgr.state[5] = NodeState.QUARANTINED
+        assert mgr.qualify(5) == NodeState.QUARANTINED
+        assert backend.groups == []                 # multi never ran
+        assert mgr.state[5] == NodeState.QUARANTINED
+        assert 5 not in mgr.spares
+        assert mgr.begin_qualification(5).buddy_exhausted
+
+    def test_disjoint_retry_still_disambiguates(self):
+        backend = PairFailBackend(bad=(10,))
+        mgr = manager_with(backend, spares=[10, 11])
+        mgr.state[5] = NodeState.QUARANTINED
+        assert mgr.qualify(5) == NodeState.HEALTHY_SPARE
+        assert backend.groups == [(5, 10), (5, 11)]
+        assert 5 in mgr.spares
+
+    def test_parked_node_waits_for_buddy_capacity(self):
+        """A buddy-exhausted node is not re-swept every checkpoint scan
+        while the spare pool is unchanged — only once it has GROWN (the
+        identical ambiguous sweep would burn the bench for the identical
+        parked verdict)."""
+        backend = PairFailBackend(bad=(10,))
+        s = GuardSession.from_tier(Tier.ENHANCED, FakeControl(), backend,
+                                   sweep_cfg=SweepConfig())
+        s.register_spares([10])
+        s.manager.state[5] = NodeState.QUARANTINED
+        assert s.scheduler.submit_quarantined(now=0.0) == 1
+        s.scheduler.drain(0.0)
+        assert s.manager.state[5] == NodeState.QUARANTINED   # parked
+        sweeps = s.manager.stats.sweeps_run
+        # pool unchanged: the periodic scan skips the parked node
+        assert s.scheduler.submit_quarantined(now=10.0) == 0
+        assert s.manager.stats.sweeps_run == sweeps
+        # pool grows: the node is retried (and the disjoint buddy clears
+        # the contaminated-buddy ambiguity)
+        s.register_spares([11])
+        assert s.scheduler.submit_quarantined(now=20.0) == 1
+        s.scheduler.drain(20.0)
+        assert s.manager.state[5] == NodeState.HEALTHY_SPARE
+
+
+# ------------------------------------------------- scheduler capacity
+
+class FakeManager:
+    enhanced_sweep = False
+    spare_count = 0
+
+    def __init__(self, durations):
+        self.durations = durations
+
+    def begin_qualification(self, nid):
+        return QualificationTicket(nid, NodeState.HEALTHY_SPARE,
+                                   self.durations[nid], 1, [])
+
+    def complete_qualification(self, ticket):
+        ticket.applied = True
+        return ticket.outcome
+
+    def quarantined(self):
+        return []
+
+
+class TestSchedulerCapacity:
+    def _sched(self, durations, concurrency=1):
+        bus = EventBus()
+        trace = TraceSink()
+        bus.attach(trace)
+        sched = SweepScheduler(FakeManager(durations), bus,
+                               concurrency=concurrency)
+        return sched, trace
+
+    def test_dequeued_work_starts_at_slot_finish_time(self):
+        """The pre-fix advance started queued work at ``now``: one
+        coarse clock tick under-reported bench occupancy and could
+        leave finished work unlanded."""
+        sched, trace = self._sched({1: 100.0, 2: 50.0})
+        sched.submit(1, now=0.0)
+        sched.submit(2, now=0.0)
+        assert sched.advance(0.0) == []
+        assert sched.busy == 1 and sched.backlog == 1
+        done = sched.advance(1000.0)        # ONE coarse tick
+        assert [t.node_id for t in done] == [1, 2]
+        assert sched.busy == 0 and sched.backlog == 0
+        starts = trace.of_kind("sweep_start")
+        finishes = trace.of_kind("sweep_finish")
+        assert [e.t for e in starts] == [0.0, 100.0]    # not 1000.0
+        assert [e.t for e in finishes] == [100.0, 150.0]
+
+    def test_enqueue_time_floors_the_start(self):
+        sched, trace = self._sched({7: 10.0})
+        sched.submit(7, now=500.0)          # quarantined mid-run
+        sched.advance(1000.0)
+        start = trace.of_kind("sweep_start")[0]
+        assert start.t == 500.0             # not slot-free time 0.0
+
+    def test_drain_stamps_step_and_true_finish_times(self):
+        """The pre-fix drain published SweepFinished with whatever step
+        the last advance saw; now the caller passes the final step and
+        events carry the true (possibly beyond-now) finish times."""
+        sched, trace = self._sched({3: 40.0, 4: 40.0})
+        sched.submit(3, now=0.0)
+        sched.submit(4, now=0.0)
+        done = sched.drain(5.0, step=77)
+        assert len(done) == 2
+        finishes = trace.of_kind("sweep_finish")
+        assert [e.step for e in finishes] == [77, 77]
+        assert [e.t for e in finishes] == [40.0, 80.0]  # serialized slots
+
+    def test_concurrency_slots_run_in_parallel(self):
+        sched, trace = self._sched({1: 60.0, 2: 60.0, 3: 60.0},
+                                   concurrency=2)
+        for nid in (1, 2, 3):
+            sched.submit(nid, now=0.0)
+        sched.advance(200.0)
+        starts = {e.node_id: e.t for e in trace.of_kind("sweep_start")}
+        assert starts[1] == 0.0 and starts[2] == 0.0
+        assert starts[3] == 60.0            # third waits for a slot
+
+
+# ------------------------------------------------- batched campaign
+
+def fleet_cluster(n=64, seed=11):
+    c = SimCluster(n_active=n, n_spare=8, reserve=0, rates=QUIET, seed=seed)
+    c.injector.inject(FaultKind.POWER, 5, severity=0.8, device=3)
+    c.injector.inject(FaultKind.MEM_ECC, 17, severity=0.85, device=1)
+    c.injector.inject(FaultKind.NIC_DEGRADED, 29, severity=0.7, device=2)
+    c.injector.inject(FaultKind.THERMAL, 41, severity=0.9, device=0)
+    c.fleet.advance_thermals(7200.0)
+    return c
+
+
+def fleet_campaign(c, **kw):
+    kw.setdefault("reference_pool", tuple(c.spares))
+    return SweepCampaign(node_ids=tuple(range(len(c.active))), **kw)
+
+
+class ScalarOnly:
+    """Hides the batched protocol: forces the scalar-compat fallback."""
+
+    def __init__(self, b):
+        self._b = b
+
+    def device_count(self, n):
+        return self._b.device_count(n)
+
+    def compute_probe(self, n, d, s):
+        return self._b.compute_probe(n, d, s)
+
+    def intra_bw_probe(self, n, a, b):
+        return self._b.intra_bw_probe(n, a, b)
+
+    def multi_node_probe(self, ids, steps):
+        return self._b.multi_node_probe(ids, steps)
+
+    def reference(self):
+        return self._b.reference()
+
+
+def assert_reports_identical(a, b):
+    assert len(a) == len(b)
+    for ra, rb in zip(a, b):
+        assert ra.node_id == rb.node_id
+        assert ra.passed == rb.passed, (ra.node_id, ra.failures,
+                                        rb.failures)
+        assert ra.failures == rb.failures
+        assert ra.duration_s == rb.duration_s
+        assert set(ra.measurements) == set(rb.measurements)
+        for k, va in ra.measurements.items():
+            vb = rb.measurements[k]
+            if isinstance(va, np.ndarray):
+                np.testing.assert_array_equal(va, vb)
+            elif isinstance(va, dict):
+                assert set(va) == set(vb)
+                for p in va:
+                    assert va[p] == vb[p], (ra.node_id, k, p)
+            else:
+                assert va == vb
+
+
+class TestFleetQualificationGolden:
+    def test_batched_equals_scalar_fallback(self):
+        """Identical RNG-seeded fleets, one batched pass vs the scalar
+        fallback: verdicts, failure strings, durations and raw
+        measurements must be bit-identical."""
+        cb, cs = fleet_cluster(), fleet_cluster()
+        batched = fleet_qualification(cb, fleet_campaign(cb))
+        scalar = fleet_qualification(ScalarOnly(cs), fleet_campaign(cs))
+        assert_reports_identical(batched.reports, scalar.reports)
+        assert batched.reference == scalar.reference
+        assert batched.buddies == scalar.buddies
+        assert batched.retry_buddies == scalar.retry_buddies
+        assert batched.sweeps == scalar.sweeps
+
+    def test_campaign_matches_per_node_scalar_sweeps(self):
+        """Each campaign report decomposes into the exact scalar
+        single_node_sweep / multi_node_sweep calls with the recorded
+        reference and buddy assignment — including the fixed duration
+        math."""
+        c = fleet_cluster()
+        res = fleet_qualification(c, fleet_campaign(c))
+        c2 = fleet_cluster()
+        for rep in res.reports:
+            n = rep.node_id
+            s = single_node_sweep(c2, n, CFG, enhanced=True,
+                                  reference=res.reference)
+            np.testing.assert_array_equal(rep.measurements["tflops"],
+                                          s.measurements["tflops"])
+            assert rep.measurements["bw"] == s.measurements["bw"]
+            expected_dur = s.duration_s
+            expected_failures = list(s.failures)
+            if s.passed and res.buddies.get(n):
+                m = multi_node_sweep(c2, n, res.buddies[n], CFG,
+                                     reference=res.reference)
+                expected_dur += m.duration_s
+                if not m.passed and res.retry_buddies.get(n):
+                    m = multi_node_sweep(c2, n, res.retry_buddies[n], CFG,
+                                         reference=res.reference)
+                    expected_dur += m.duration_s
+                expected_failures += m.failures
+                np.testing.assert_array_equal(
+                    rep.measurements["step_times"],
+                    m.measurements["step_times"])
+            assert rep.duration_s == expected_dur
+            assert rep.failures == expected_failures
+
+    def test_campaign_detects_all_fault_classes(self):
+        c = fleet_cluster()
+        res = fleet_qualification(c, fleet_campaign(c))
+        assert set(res.failed) == {5, 17, 29, 41}
+        assert res.calibrated
+        # calibrated reference sits at the (healthy-majority) medians
+        assert res.reference.device_tflops == pytest.approx(
+            c.fleet.hw.base_tflops, rel=0.05)
+        # 8-device enhanced sweeps: the campaign's bench time reflects
+        # sequential burns (the duration fix at fleet scale)
+        healthy = next(r for r in res.reports if r.passed)
+        assert healthy.duration_s > 8 * CFG.enhanced_burn_seconds
+
+    def test_heterogeneous_fleet_rejected_loudly(self):
+        class Hetero(StubBackend):
+            def device_count(self, node_id):
+                return 8 if node_id == 0 else 4
+
+        with pytest.raises(ValueError, match="uniform device count"):
+            fleet_qualification(Hetero(), SweepCampaign(node_ids=(0, 1)))
+
+    def test_bootstrap_pool_with_disjoint_retry(self):
+        """No reference pool: buddies bootstrap from single-stage
+        passers, so a comm-degraded suspect can land in a healthy
+        node's group — the disjoint-buddy retry must clear the healthy
+        node and still fail the suspect."""
+        c = fleet_cluster()
+        res = fleet_qualification(c, fleet_campaign(c, reference_pool=()))
+        for nid, bs in res.buddies.items():
+            assert nid not in bs
+        for nid, bs in res.retry_buddies.items():
+            assert not (set(bs) & set(res.buddies[nid]))
+        assert set(res.failed) == {5, 17, 29, 41}
+
+
+# ------------------------------------------------- session integration
+
+class TestPrequalifyFleet:
+    def _session(self, c, tier=Tier.ENHANCED):
+        s = GuardSession.from_tier(tier, control=c, sweep_backend=c)
+        s.register_active(c.active)
+        s.register_spares(c.spares)
+        return s
+
+    def test_failures_quarantined_and_replaced(self):
+        c = SimCluster(n_active=16, n_spare=4, reserve=0, rates=QUIET,
+                       seed=5)
+        c.injector.inject(FaultKind.POWER, 3, severity=0.8, device=2)
+        c.injector.inject(FaultKind.NIC_DEGRADED, 7, severity=0.7,
+                          device=1)
+        s = self._session(c)
+        res = s.prequalify_fleet()
+        assert set(res.failed) == {3, 7}
+        for nid in (3, 7):
+            assert s.manager.state[nid] == NodeState.QUARANTINED
+            assert nid not in c.active
+        # failures are routed into the event-driven per-node loop
+        assert s.scheduler.busy + s.scheduler.backlog == 2
+        camp = s.trace.of_kind("campaign_finish")
+        assert len(camp) == 1
+        assert camp[0].nodes == 16 and camp[0].passed == 14
+        assert set(camp[0].failed) == {3, 7}
+        assert camp[0].calibrated
+        swaps = s.trace.of_kind("swap")
+        assert {e.old for e in swaps} == {3, 7}
+        for e in swaps:
+            assert e.new in c.active
+
+    def test_clean_fleet_passes_untouched(self):
+        c = SimCluster(n_active=12, n_spare=2, reserve=0, rates=QUIET,
+                       seed=9)
+        s = self._session(c)
+        active_before = list(c.active)
+        res = s.prequalify_fleet()
+        assert res.failed == []
+        assert c.active == active_before
+        assert s.scheduler.busy + s.scheduler.backlog == 0
+
+    def test_requires_sweep_tooling(self):
+        c = SimCluster(n_active=8, n_spare=2, reserve=0, rates=QUIET,
+                       seed=1)
+        s = self._session(c, tier=Tier.BURNIN)
+        with pytest.raises(RuntimeError):
+            s.prequalify_fleet()
