@@ -3,7 +3,12 @@ with the real Guard pipeline in the loop: per-step wall times flow
 through ``GuardStepHook`` into telemetry Frames, the peer-relative
 detector and tiered policy run on them, and a (synthetically injected)
 stall triggers the IMMEDIATE-restart path — the health manager swaps the
-host's node for a spare and the trainer rewinds to its last checkpoint.
+host's node for a spare and the trainer resumes from the fastest
+checkpoint tier: the ``TieredCheckpointManager``'s in-memory peer
+replica (hot-spare promotion) rather than a cold restart from durable
+storage. The hook publishes the incident as a ``RecoveryEvent`` with
+the tier used and re-tunes the fast-snapshot cadence from the session's
+live MTTF estimate at every checkpoint boundary.
 
 This is the single-host version of the production loop; on a fleet, each
 host reports its barrier time and the same session runs fleet-side.
@@ -16,10 +21,10 @@ import time
 
 
 from repro.configs import get_config, reduced
-from repro.guard import GuardStepHook, NodeSwapped
+from repro.guard import GuardStepHook, NodeSwapped, RecoveryEvent
 from repro.models.model import Model
-from repro.train import (AdamWConfig, CheckpointManager, DataConfig,
-                         SyntheticLM, TrainConfig, Trainer)
+from repro.train import (AdamWConfig, DataConfig, SyntheticLM,
+                         TieredCheckpointManager, TrainConfig, Trainer)
 
 
 def main():
@@ -54,18 +59,28 @@ def main():
     hook.inject_stall(at_step=args.steps // 2, factor=8.0, steps=4)
     hook.session.bus.subscribe(NodeSwapped, lambda ev: print(
         f"  [guard] node {ev.old} swapped for spare {ev.new} ({ev.reason}) "
-        f"-> immediate restart from last checkpoint"))
+        f"-> immediate restart"))
+    hook.session.bus.subscribe(RecoveryEvent, lambda ev: print(
+        f"  [guard] recovered from {ev.ckpt_tier} tier at step {ev.step} "
+        f"({'hot-spare promotion' if ev.hot_spare else 'restart'}, "
+        f"{ev.replay_steps} steps to replay)"))
 
     # fresh checkpoint dir per run: a stale checkpoint at/after --steps
     # would make restore() skip training entirely
     ckpt_dir = tempfile.mkdtemp(
         prefix=f"guard_example_ckpt_{cfg.d_model}x{cfg.num_layers}_")
+    # tiered checkpointing: durable tier every ckpt_interval steps plus
+    # peer-replica/local-shard fast snapshots on the MTTF-tuned cadence
+    # (min_interval floors it to seconds here — CPU steps are slow)
+    ckpt = TieredCheckpointManager(ckpt_dir, node_id=hook.node_id,
+                                   fast_interval_s=5.0)
+    hook.bind_checkpoint(ckpt)
     trainer = Trainer(
         model, data,
         TrainConfig(steps=args.steps, ckpt_interval=50,
                     opt=AdamWConfig(peak_lr=6e-4, warmup_steps=20,
                                     total_steps=args.steps)),
-        ckpt=CheckpointManager(ckpt_dir),
+        ckpt=ckpt,
         hook=hook)
 
     t0 = time.perf_counter()
@@ -74,12 +89,17 @@ def main():
     dt = time.perf_counter() - t0
     losses = [h["loss"] for h in out["history"]]
     flags = [e for e in hook.session.events() if e.kind == "straggler_flagged"]
+    recoveries = [e for e in hook.session.events() if e.kind == "recovery"]
     print(f"[example] {out['final_step']} steps in {dt:.0f}s; "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
           f"{len(flags)} detector flag(s), "
           f"{hook.restarts_requested} guard restart(s), "
+          f"{len(recoveries)} recovery event(s), "
+          f"{ckpt.snapshots_taken} fast snapshot(s), "
           f"{hook.frames_fed} telemetry frames")
     assert hook.restarts_requested >= 1, "stall was not detected"
+    assert recoveries and any(e.hot_spare for e in recoveries), \
+        "restart did not resume from the peer-replica tier"
     assert losses[-1] < losses[0]
 
 

@@ -4,6 +4,8 @@
   events      typed GuardEvent hierarchy, EventBus, trace/JSONL sinks
   scheduler   non-blocking offline-qualification queue (§5)
   hook        Trainer StepHook adapter: step timings → Frames → monitor
+  goodput     recovery accounting: checkpoint tiers, MTTF-tuned snapshot
+              cadence, MTTR decomposition, goodput metric
 
 Everything above the substrate protocols (``ClusterControl``,
 ``SweepBackend``, telemetry ``Collector``) goes through this package;
@@ -14,9 +16,13 @@ from repro.guard.events import (EVENT_TYPES, CampaignFinished,
                                 DiagnosisEvent, EventBus, GuardEvent,
                                 JobRestart, JsonlSink, NodeProvisioned,
                                 NodeQuarantined, NodeSwapped, NodeTerminated,
-                                StragglerCleared, StragglerFlagged,
-                                SweepFinished, SweepStarted, TraceSink,
-                                TriageStage)
+                                RecoveryEvent, StragglerCleared,
+                                StragglerFlagged, SweepFinished,
+                                SweepStarted, TraceSink, TriageStage)
+from repro.guard.goodput import (MTTR_PHASES, CheckpointTier,
+                                 MTTFEstimator, RecoveryModel,
+                                 goodput_tflop_h, mttr_decomposition,
+                                 replica_partner, young_daly_interval)
 from repro.guard.hook import (GuardStepHook, LocalHostControl,
                               LocalSweepBackend)
 from repro.guard.scheduler import SweepScheduler
@@ -25,11 +31,16 @@ from repro.guard.session import (CheckpointOutcome, GuardSession, Tier,
 
 __all__ = [
     "CampaignFinished", "CheckpointOutcome", "CheckpointSaved",
-    "CrashDetected",
+    "CheckpointTier", "CrashDetected",
     "DiagnosisEvent", "EVENT_TYPES",
     "EventBus", "GuardEvent", "GuardSession", "GuardStepHook", "JobRestart",
-    "JsonlSink", "LocalHostControl", "LocalSweepBackend", "NodeProvisioned",
-    "NodeQuarantined", "NodeSwapped", "NodeTerminated", "StragglerCleared",
+    "JsonlSink", "LocalHostControl", "LocalSweepBackend", "MTTFEstimator",
+    "MTTR_PHASES",
+    "NodeProvisioned",
+    "NodeQuarantined", "NodeSwapped", "NodeTerminated", "RecoveryEvent",
+    "RecoveryModel", "StragglerCleared",
     "StragglerFlagged", "SweepFinished", "SweepScheduler", "SweepStarted",
     "Tier", "TraceSink", "TriageStage", "WindowOutcome",
+    "goodput_tflop_h", "mttr_decomposition", "replica_partner",
+    "young_daly_interval",
 ]

@@ -129,6 +129,27 @@ class CheckpointSaved(GuardEvent):
     applied_swaps: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class RecoveryEvent(GuardEvent):
+    """One completed recovery incident, decomposed into MTTR phases:
+    ``detect_s`` (failure start → detection), ``drain_s`` (triage /
+    replacement / provisioning before the restore can begin),
+    ``restore_s`` (loading state from ``ckpt_tier``: peer / local /
+    cold), ``warmup_s`` (re-shard, compile, rejoin collectives).
+    ``hot_spare`` marks a promotion that resumed from a DP peer's
+    in-memory replica; ``replay_steps`` is the unique progress lost to
+    the rewind (the goodput penalty)."""
+    kind: ClassVar[str] = "recovery"
+    reason: str = ""
+    ckpt_tier: str = "cold"
+    hot_spare: bool = False
+    detect_s: float = 0.0
+    drain_s: float = 0.0
+    restore_s: float = 0.0
+    warmup_s: float = 0.0
+    replay_steps: int = 0
+
+
 # ----------------------------------------------------- offline qualification
 
 @dataclasses.dataclass(frozen=True)
@@ -180,8 +201,8 @@ class CampaignFinished(GuardEvent):
 EVENT_TYPES: Tuple[Type[GuardEvent], ...] = (
     StragglerFlagged, StragglerCleared, DiagnosisEvent, NodeSwapped,
     NodeQuarantined, NodeTerminated, NodeProvisioned, CrashDetected,
-    JobRestart, CheckpointSaved, SweepStarted, SweepFinished, TriageStage,
-    CampaignFinished,
+    JobRestart, CheckpointSaved, RecoveryEvent, SweepStarted, SweepFinished,
+    TriageStage, CampaignFinished,
 )
 
 

@@ -42,7 +42,7 @@ from repro.core.sweep import SweepReference
 from repro.core.telemetry import HARDWARE_METRICS, Frame
 from repro.core.triage import ErrorSignals
 from repro.diagnose import Diagnoser, TimingTrace, Topology, WindowTiming
-from repro.guard.events import NodeSwapped
+from repro.guard.events import NodeSwapped, RecoveryEvent
 from repro.guard.session import GuardSession, Tier
 
 
@@ -171,6 +171,7 @@ class GuardStepHook:
         self._baseline: Optional[float] = None
         self._stalls: List[_Stall] = []
         self._restart_pending = False
+        self._ckpt = None        # TieredCheckpointManager, bind_checkpoint
         self.frames_fed = 0
         self.restarts_requested = 0
         # timing-trace feed (repro.diagnose): measured wall split into
@@ -297,8 +298,34 @@ class GuardStepHook:
         pending-patience mitigations land here (§4.2) — if the manager
         applied swaps, the next step call requests the rewind."""
         ck = self.session.on_checkpoint(step=step)
+        if self._ckpt is not None:
+            # fast-tier cadence follows the live MTTF estimate
+            self._ckpt.update_mttf(
+                self.session.mttf.estimate(self.control.now()))
         if ck.applied_swaps:
             self._restart_pending = True
+
+    def bind_checkpoint(self, ckpt) -> None:
+        """Attach a ``TieredCheckpointManager`` so its fast-snapshot
+        cadence is re-tuned (Young-Daly) from the session's live MTTF
+        estimate at every checkpoint boundary."""
+        self._ckpt = ckpt
+        ckpt.update_mttf(self.session.mttf.estimate(self.control.now()))
+
+    def on_recovery(self, step: int, info: Dict) -> None:
+        """Trainer notification: a restore completed. Publishes the
+        incident as a ``RecoveryEvent`` with the tier the state came
+        from, so the MTTR decomposition covers the real path too."""
+        self.session.publish(RecoveryEvent(
+            t=self.control.now(), step=step,
+            reason=str(info.get("reason", "guard restart")),
+            ckpt_tier=str(info.get("ckpt_tier", "cold")),
+            hot_spare=bool(info.get("hot_spare", False)),
+            restore_s=float(info.get("restore_s", 0.0)),
+            detect_s=float(info.get("detect_s", 0.0)),
+            drain_s=float(info.get("drain_s", 0.0)),
+            warmup_s=float(info.get("warmup_s", 0.0)),
+            replay_steps=int(info.get("replay_steps", 0))))
 
     # ------------------------------------------------------------ internal
 

@@ -49,6 +49,7 @@ from repro.guard.events import (CampaignFinished, CheckpointSaved,
                                 NodeSwapped, NodeTerminated,
                                 StragglerCleared, StragglerFlagged,
                                 TraceSink)
+from repro.guard.goodput import MTTFEstimator
 from repro.guard.scheduler import SweepScheduler
 
 
@@ -117,6 +118,9 @@ class GuardSession:
                                         concurrency=sweep_concurrency)
         self._step = 0
         self._flagged: Set[int] = set()
+        # live mean-time-between-job-interrupts: tunes the fast-tier
+        # snapshot cadence (Young-Daly) of the tiered checkpoint manager
+        self.mttf = MTTFEstimator(t0=control.now())
 
     # ------------------------------------------------------------ builders
 
@@ -229,6 +233,7 @@ class GuardSession:
             self.manager.handle(ev)
             if self.manager.stats.immediate_restarts > pre:
                 out.restarts.append(ev.decision.reason)
+                self.mttf.observe_failure(frame.t)
         # hysteresis released: report clears for nodes still in the job
         # (one vectorized latch query instead of a fleet scan per id)
         if self._flagged:
@@ -280,6 +285,7 @@ class GuardSession:
         node. Returns the replacement ids."""
         now = self.control.now()
         self._note_step(step)
+        self.mttf.observe_failure(now)
         self.bus.publish(CrashDetected(t=now, step=self._step,
                                        nodes=tuple(int(n) for n in dead),
                                        lost_steps=lost_steps))

@@ -41,6 +41,7 @@ class WorkloadProfile:
     bytes_per_link_gb: float = 4.0  # per-step per-link transmit (Fig. 4)
     step_noise: float = 0.01        # lognormal sigma on node barrier times
     mfu_at_healthy: float = 0.20    # job MFU when every node is healthy
+    step_tflops: float = 4500.0     # model FLOPs per step (goodput scale)
 
     @property
     def healthy_step_s(self) -> float:

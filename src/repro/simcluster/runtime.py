@@ -36,7 +36,10 @@ import numpy as np
 
 from repro.core.sweep import SweepConfig, multi_node_sweep, single_node_sweep
 from repro.diagnose import Diagnoser, RootCauseConfig, TimingTrace, Topology
-from repro.guard import GuardSession, JobRestart, Tier
+from repro.guard import (CheckpointTier, GuardSession, JobRestart,
+                         RecoveryEvent, RecoveryModel, Tier,
+                         goodput_tflop_h, mttr_decomposition,
+                         replica_partner, young_daly_interval)
 from repro.simcluster.cluster import SimCluster, WorkloadProfile
 from repro.simcluster.faults import FaultRates
 from repro.simcluster.scenarios import InitialGreyPopulation, Scenario, \
@@ -94,6 +97,13 @@ class RunConfig:
     # ticket hygiene): online needs more eyes than enhanced
     auto_human_h: Dict[int, float] = dataclasses.field(
         default_factory=lambda: {3: 0.9, 4: 0.35})
+    # tiered-checkpoint recovery model: per-tier restore seconds, fast-
+    # snapshot cost, and the cadence clamp for the Young-Daly auto-tuner.
+    # Which checkpoint tiers exist follows the ablation tier (goodput.py):
+    # BURNIN/NODE_SWEEP cold-only, ONLINE + local shard, ENHANCED + peer
+    # replica with hot-spare promotion.
+    recovery: RecoveryModel = dataclasses.field(
+        default_factory=RecoveryModel)
     workload: WorkloadProfile = dataclasses.field(
         default_factory=WorkloadProfile)
     rates: FaultRates = dataclasses.field(default_factory=FaultRates)
@@ -122,6 +132,11 @@ class RunResult:
     # injector fault history (ground truth for attribution scoring):
     # one dict per fault with node/kind/severity/t_start/t_cleared
     fault_log: List[dict] = dataclasses.field(default_factory=list)
+    # good (unique-progress) FLOPs per wall hour: replayed steps excluded
+    goodput_tflop_h: float = 0.0
+    # recovery accounting: MTTR decomposition over the run's
+    # RecoveryEvents + fast-snapshot cadence + unique progress
+    recovery: Dict = dataclasses.field(default_factory=dict)
 
 
 def _admission_check(cluster: SimCluster, nid: int, tier: Tier,
@@ -176,7 +191,14 @@ def simulate_run(cfg: RunConfig) -> RunResult:
     duration_s = cfg.duration_h * 3600.0
     healthy_step = cfg.workload.healthy_step_s
     ckpt_every = cfg.checkpoint_interval_steps
-    last_ckpt_step = 0
+    rec = cfg.recovery
+    fast_tiers = rec.fast_tier_enabled(int(tier))
+    last_ckpt_step = 0             # durable (COLD) restore point
+    last_fast_step = 0             # fast-tier restore point (peer/local)
+    snap_interval = young_daly_interval(
+        session.mttf.estimate(cluster.t), rec.snapshot_cost_s,
+        rec.min_interval_s, rec.max_interval_s)
+    next_snap_t = cluster.t + snap_interval
     step_chunks: List[np.ndarray] = []
     total_steps = 0
     crashes = 0
@@ -188,18 +210,42 @@ def simulate_run(cfg: RunConfig) -> RunResult:
     hour_sum = 0.0
     win_accum = 0                  # steps gathered toward the next window
 
-    def restart(reason: str, rewind: bool) -> None:
-        nonlocal last_ckpt_step, downtime_s
-        cluster.advance_idle(cfg.restart_overhead_s)
-        downtime_s += cfg.restart_overhead_s
+    def recover(reason: str, *, rewind: bool, node_alive: bool = True,
+                replica_lost: bool = False, detect_s: float = 0.0,
+                drain_s: float = 0.0) -> None:
+        """One restart, charged at the recovery model's rate: restore from
+        the fastest checkpoint tier this ablation tier has built, then the
+        generic warmup (re-shard / re-JIT / rejoin). Non-COLD restores
+        rewind only to the last *fast* snapshot — the whole point of the
+        fast tiers is a shorter replay. Publishes the JobRestart plus the
+        MTTR-decomposed RecoveryEvent. ``detect_s``/``drain_s`` were
+        already charged by the caller (they precede the restore); they
+        ride along for the decomposition only."""
+        nonlocal last_fast_step, downtime_s
+        ck = rec.pick(int(tier), node_alive, replica_lost)
+        restore_s = rec.restore_s(ck)
+        warmup_s = cfg.restart_overhead_s
+        cluster.advance_idle(restore_s + warmup_s)
+        downtime_s += restore_s + warmup_s
         lost = 0
         if rewind:
-            lost = cluster.step - last_ckpt_step
-            cluster.step = last_ckpt_step
+            target = last_fast_step if ck is not CheckpointTier.COLD \
+                else last_ckpt_step
+            target = min(target, cluster.step)
+            lost = cluster.step - target
+            cluster.step = target
+        # a fast snapshot taken past the current position is unusable now
+        last_fast_step = min(last_fast_step, cluster.step)
         cluster.restart_job(reason)
         session.publish(JobRestart(t=cluster.t, step=cluster.step,
                                    reason=reason, lost_steps=lost,
                                    rewind=rewind))
+        session.publish(RecoveryEvent(
+            t=cluster.t, step=cluster.step, reason=reason,
+            ckpt_tier=ck.value,
+            hot_spare=ck is CheckpointTier.PEER,
+            detect_s=detect_s, drain_s=drain_s,
+            restore_s=restore_s, warmup_s=warmup_s, replay_steps=lost))
 
     while cluster.t < duration_s:
         # ---------------- one evaluation window (or the slice of one
@@ -214,25 +260,42 @@ def simulate_run(cfg: RunConfig) -> RunResult:
                 total_steps += win["steps_run"]
             crashes += 1
             incidents += 1
-            recovery = cfg.crash_recovery_s[int(tier)]
-            cluster.advance_idle(cfg.crash_detect_s + recovery)
-            downtime_s += cfg.crash_detect_s + recovery
+            drain = cfg.crash_recovery_s[int(tier)]
+            cluster.advance_idle(cfg.crash_detect_s + drain)
+            downtime_s += cfg.crash_detect_s + drain
             human_hours += cfg.crash_human_h[int(tier)]
             # batch handling: every node found dead during this recovery
             # window is swapped in the same restart
+            replica_lost = False
             while cluster.crashed_nodes():
                 dead = cluster.crashed_nodes()
+                # peer-replica coverage check BEFORE the swaps rewrite the
+                # active list: if both members of a DP mirror pair died,
+                # some shard has no surviving in-memory replica and the
+                # restore degrades to the cold tier
+                idx = {n: i for i, n in enumerate(cluster.active)}
+                n_act = len(cluster.active)
+                dead_idx = {idx[d] for d in dead}
+                replica_lost |= any(
+                    replica_partner(i, n_act) in dead_idx
+                    for i in dead_idx)
                 missing = max(0, len(dead) - session.spares_free)
                 if missing:
                     # pool ran dry mid-incident: the job waits for delivery
                     cluster.advance_idle(missing * cfg.provision_delay_s)
+                    drain += missing * cfg.provision_delay_s
                     downtime_s += missing * cfg.provision_delay_s
                 session.handle_crash(
                     dead, lost_steps=cluster.step - last_ckpt_step,
                     step=cluster.step)
                 for bad in dead:
                     cluster.injector.clear_node(bad)  # hw leaves with node
-            restart("fail-stop crash", rewind=True)
+            # the dead nodes' local shards died with them (node_alive
+            # False); the ENHANCED tier still hot-spare-promotes from the
+            # surviving peer replicas unless a whole mirror pair is gone
+            recover("fail-stop crash", rewind=True, node_alive=False,
+                    replica_lost=replica_lost,
+                    detect_s=cfg.crash_detect_s, drain_s=drain)
             win_accum = 0
             hour_steps, hour_sum = 0, 0.0
             continue
@@ -246,6 +309,18 @@ def simulate_run(cfg: RunConfig) -> RunResult:
         # catch up to job time after every window
         session.advance(cluster.t, step=cluster.step)
 
+        # ---------------- fast-tier snapshot (peer replica + local shard)
+        if fast_tiers and cluster.t >= next_snap_t:
+            last_fast_step = cluster.step
+            cluster.advance_idle(rec.snapshot_cost_s)
+            downtime_s += rec.snapshot_cost_s
+            # cadence follows the live MTTF estimate (Young-Daly): a
+            # crashing fleet snapshots more often, a quiet one backs off
+            snap_interval = young_daly_interval(
+                session.mttf.estimate(cluster.t), rec.snapshot_cost_s,
+                rec.min_interval_s, rec.max_interval_s)
+            next_snap_t = cluster.t + snap_interval
+
         # ---------------- online monitoring (tiers 3-4)
         if session.online_monitoring and win_accum >= cfg.window_steps:
             win_accum = 0
@@ -256,7 +331,10 @@ def simulate_run(cfg: RunConfig) -> RunResult:
                 for reason in outcome.restarts:
                     incidents += 1
                     human_hours += cfg.auto_human_h[int(tier)]
-                    restart(reason, rewind=True)
+                    # eviction: the grey node is alive, so even the
+                    # local-shard tier can serve; ENHANCED promotes the
+                    # spare from the peer replica (hot-spare resume)
+                    recover(reason, rewind=True, node_alive=True)
                     restarted = True
                 if restarted:
                     hour_steps, hour_sum = 0, 0.0
@@ -266,11 +344,17 @@ def simulate_run(cfg: RunConfig) -> RunResult:
         # ---------------- checkpoint boundary
         if cluster.step > 0 and cluster.step % ckpt_every == 0:
             last_ckpt_step = cluster.step
+            if fast_tiers:
+                # the durable snapshot is (at least) as fresh as any
+                # fast-tier one: both restore points now coincide
+                last_fast_step = cluster.step
             ck = session.on_checkpoint(now=cluster.t, step=cluster.step)
             if ck.applied_swaps:
                 incidents += ck.applied_swaps
                 human_hours += ck.applied_swaps * cfg.auto_human_h[int(tier)]
-                restart("deferred swaps", rewind=False)
+                # planned restart at the boundary: state is fresh, no
+                # rewind; the swapped-out nodes are alive (evictions)
+                recover("deferred swaps", rewind=False, node_alive=True)
                 win_accum = 0
             human_hours += session.drain_human_hours()
             # background warm-pool maintenance overlaps the job
@@ -315,7 +399,8 @@ def simulate_run(cfg: RunConfig) -> RunResult:
                                 cluster.injector.clear_node(worst)
                         else:
                             cluster.injector.clear_node(worst)
-                        restart("manual grey-node replacement", rewind=False)
+                        recover("manual grey-node replacement",
+                                rewind=False, node_alive=True)
                         win_accum = 0
             else:
                 slow_since = None
@@ -335,6 +420,16 @@ def simulate_run(cfg: RunConfig) -> RunResult:
     # MFU: completed useful FLOPs over total elapsed time
     mfu = cfg.workload.mfu_at_healthy * (steps * healthy_step) / cluster.t
     stats = session.stats
+    events = session.trace.as_dicts()
+    # goodput counts only unique forward progress: every step re-executed
+    # after a rewind is excluded (MFU above counts it — that's throughput)
+    good_steps = int(cluster.step)
+    recovery_summary = mttr_decomposition(
+        e for e in events if e.get("kind") == "recovery")
+    recovery_summary["good_steps"] = good_steps
+    recovery_summary["wasted_steps"] = max(steps - good_steps, 0)
+    recovery_summary["snap_interval_s"] = float(snap_interval) \
+        if fast_tiers else 0.0
     return RunResult(
         tier=tier, elapsed_h=elapsed_h, active_h=active_h, steps=steps,
         crashes=crashes, mttf_h=mttf_h, mfu=float(mfu),
@@ -345,8 +440,11 @@ def simulate_run(cfg: RunConfig) -> RunResult:
         guard_restarts=stats.immediate_restarts,
         deferred_swaps=stats.deferred_swaps,
         nodes_terminated=stats.nodes_terminated,
-        step_times=st, events=session.trace.as_dicts(),
+        step_times=st, events=events,
         fault_log=[{"node": f.node, "kind": f.kind.value,
                     "device": f.device, "severity": f.severity,
                     "t_start": f.t_start, "t_cleared": f.t_cleared}
-                   for f in cluster.injector.faults])
+                   for f in cluster.injector.faults],
+        goodput_tflop_h=goodput_tflop_h(
+            good_steps, cfg.workload.step_tflops, elapsed_h),
+        recovery=recovery_summary)

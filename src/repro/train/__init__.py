@@ -1,4 +1,4 @@
-from repro.train.checkpoint import CheckpointManager
+from repro.train.checkpoint import CheckpointManager, TieredCheckpointManager
 from repro.train.data import DataConfig, SyntheticLM
 from repro.train.optimizer import (AdamWConfig, apply_adamw, global_norm,
                                    init_opt_state, lr_at)
@@ -7,6 +7,7 @@ from repro.train.trainer import (TrainConfig, Trainer, make_serve_step,
 
 __all__ = [
     "AdamWConfig", "CheckpointManager", "DataConfig", "SyntheticLM",
+    "TieredCheckpointManager",
     "TrainConfig", "Trainer", "apply_adamw", "global_norm", "init_opt_state",
     "lr_at", "make_serve_step", "make_train_step",
 ]

@@ -116,6 +116,7 @@ class Trainer:
         self.hook = hook
         self.seed = seed
         self.history: list = []
+        self.last_recovery: Optional[Dict[str, Any]] = None
 
         self.params, self.axes = model.init_params(jax.random.key(seed))
         self.opt_state = init_opt_state(self.params)
@@ -137,12 +138,27 @@ class Trainer:
     # ------------------------------------------------------------- loop
 
     def restore(self) -> int:
+        """Restore from the fastest checkpoint tier available. With a
+        ``TieredCheckpointManager`` this is the hot-spare path: the peer
+        replica or local shard serves before durable storage; the tier
+        used is recorded in ``self.last_recovery``."""
         if self.ckpt is None:
             return 0
+        restore_any = getattr(self.ckpt, "restore_any", None)
+        if restore_any is not None:
+            out = restore_any(self.params, self.opt_state)
+            if out is None:
+                return 0
+            self.params, self.opt_state, step, tier = out
+            self.last_recovery = {"step": step, "ckpt_tier": tier.value,
+                                  "hot_spare": tier.value == "peer"}
+            return step
         out = self.ckpt.restore(self.params, self.opt_state)
         if out is None:
             return 0
         self.params, self.opt_state, step = out
+        self.last_recovery = {"step": step, "ckpt_tier": "cold",
+                              "hot_spare": False}
         return step
 
     def run(self, on_metrics: Optional[Callable[[int, dict], None]] = None
@@ -161,6 +177,13 @@ class Trainer:
             if on_metrics:
                 on_metrics(step, m)
 
+            if self.ckpt:
+                # fast-tier snapshots (tiered manager only): peer replica
+                # + local shard on the MTTF-tuned cadence
+                on_step = getattr(self.ckpt, "on_step", None)
+                if on_step:
+                    on_step(step, self.params, self.opt_state)
+
             if self.ckpt and step % self.cfg.ckpt_interval == 0:
                 self.ckpt.save(step, self.params, self.opt_state)
                 # checkpoint boundary: Guard lands deferred mitigations
@@ -172,10 +195,20 @@ class Trainer:
             if self.hook and self.hook(step, wall, m):
                 # Guard requested an immediate restart: rewind to the last
                 # checkpoint (replacement happens at the cluster layer)
+                fail_step = step
+                t_restore = time.perf_counter()
                 step = self.restore()
+                restore_wall = time.perf_counter() - t_restore
                 on_restart = getattr(self.hook, "on_restart", None)
                 if on_restart:
                     on_restart(step)
+                on_recovery = getattr(self.hook, "on_recovery", None)
+                if on_recovery:
+                    info = dict(self.last_recovery or
+                                {"ckpt_tier": "cold", "hot_spare": False})
+                    info["restore_s"] = restore_wall
+                    info["replay_steps"] = max(fail_step - step, 0)
+                    on_recovery(step, info)
         if self.ckpt:
             self.ckpt.wait()
         return {"final_step": step, "history": self.history}

@@ -1,0 +1,21 @@
+"""Shared test configuration: hypothesis settings profiles.
+
+The property suite (test_properties.py) runs wherever hypothesis is
+installed — locally that may be nowhere (it importorskips), in CI the
+``[test]`` extra provides it. CI selects the "ci" profile via
+``HYPOTHESIS_PROFILE=ci``: capped examples, no deadline (shared runners
+have noisy clocks), and derandomized so a red run is reproducible from
+the log instead of depending on the runner's entropy.
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci", max_examples=20, deadline=None, derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile("dev", deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ImportError:
+    pass

@@ -10,6 +10,12 @@ from repro.configs import ARCH_NAMES, get_config, reduced
 from repro.models import common as cm
 from repro.models.model import Model
 
+# recurrent state-space archs JIT far slower than the attention family on
+# CPU; they run in the full lane (and on main pushes), not the fast one
+_HEAVY = {"rwkv6_7b", "recurrentgemma_9b"}
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY
+               else a for a in ARCH_NAMES]
+
 
 def _batch(cfg, B=2, S=16, key=0):
     rng = np.random.RandomState(key)
@@ -28,7 +34,7 @@ def _batch(cfg, B=2, S=16, key=0):
     return b
 
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_step(arch):
     cfg = reduced(get_config(arch))
     model = Model(cfg)
@@ -46,7 +52,7 @@ def test_train_step(arch):
         f"{arch}: non-finite grads"
 
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_prefill_and_decode(arch):
     cfg = reduced(get_config(arch))
     model = Model(cfg)

@@ -54,6 +54,7 @@ class TestDivisibilityFallbackBigMesh:
         # the real 16-wide check is exercised by the dry-run (whisper cells)
 
 
+@pytest.mark.slow
 class TestShardedEquivalence:
     @pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-moe-16b",
                                       "rwkv6-7b", "recurrentgemma-9b"])

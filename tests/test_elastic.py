@@ -4,6 +4,7 @@ import tempfile
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduced
 from repro.dist import api as dist
@@ -21,6 +22,7 @@ def _mk_trainer(model, data, d, steps):
                    ckpt=CheckpointManager(d, async_save=False))
 
 
+@pytest.mark.slow
 def test_restore_across_topologies():
     cfg = reduced(get_config("qwen3-4b"))
     model = Model(cfg)

@@ -1,0 +1,176 @@
+"""Recovery-path coverage: tier selection, MTTF-driven cadence, hot-spare
+promotion economics in the simulator, and RecoveryEvent stamping."""
+import math
+
+import pytest
+
+from repro.guard import Tier
+from repro.guard.goodput import (MTTR_PHASES, CheckpointTier, MTTFEstimator,
+                                 RecoveryModel, goodput_tflop_h,
+                                 mttr_decomposition, replica_partner,
+                                 young_daly_interval)
+from repro.simcluster import RunConfig, simulate_run
+from repro.simcluster.faults import FaultRates
+
+# pure fail-stop fault load: no grey faults, no admission greys — every
+# incident is a crash, so the recovery path is the only thing under test
+CRASH_ONLY = FaultRates(thermal=0.0, power=0.0, mem_ecc=0.0, nic_down=0.0,
+                        nic_degraded=0.0, host_cpu=0.0, congestion=0.0,
+                        fail_stop=4.0e-2, admission_grey_p=0.0)
+QUIET = FaultRates(thermal=0.0, power=0.0, mem_ecc=0.0, nic_down=0.0,
+                   nic_degraded=0.0, host_cpu=0.0, congestion=0.0,
+                   fail_stop=0.0, admission_grey_p=0.0)
+
+
+def crash_run(tier, rates=CRASH_ONLY, hours=10.0, seed=0):
+    return simulate_run(RunConfig(tier=tier, n_nodes=24, n_spare=8,
+                                  duration_h=hours, initial_grey_p=0.0,
+                                  rates=rates, seed=seed))
+
+
+class TestGoodputPrimitives:
+    def test_young_daly_monotone_and_clamped(self):
+        rm = RecoveryModel()
+        a = young_daly_interval(1 * 3600.0, rm.snapshot_cost_s)
+        b = young_daly_interval(9 * 3600.0, rm.snapshot_cost_s)
+        assert a < b
+        # sqrt(2*C*M) scaling between the clamps
+        assert b == pytest.approx(a * 3.0)
+        assert young_daly_interval(1.0, rm.snapshot_cost_s) == 60.0
+        assert young_daly_interval(1e9, rm.snapshot_cost_s) == 1800.0
+
+    def test_replica_partner_pairs(self):
+        # buddies are symmetric within each pair...
+        for n in (2, 4, 8, 48):
+            for i in range(n):
+                j = replica_partner(i, n)
+                assert j != i
+                if i % 2 == 0 and i + 1 < n:
+                    assert replica_partner(j, n) == i
+        # ...the odd tail mirrors onto rank 0, and n<=1 has no partner
+        assert replica_partner(4, 5) == 0
+        assert replica_partner(0, 1) == 0
+
+    def test_mttf_estimator_shrinks_with_failures(self):
+        est = MTTFEstimator(t0=0.0)
+        quiet = est.estimate(8 * 3600.0)
+        for t in (3600.0, 7200.0, 10800.0):
+            est.observe_failure(t)
+        noisy = est.estimate(8 * 3600.0)
+        assert noisy < quiet
+        assert est.failures == 3
+        # Bayesian blend: (elapsed + prior) / (failures + 1)
+        expect = (8 * 3600.0 + est.prior_mttf_s) / 4.0
+        assert noisy == pytest.approx(expect)
+
+    def test_pick_matrix(self):
+        rm = RecoveryModel()
+        # ENHANCED: peer replica unless the whole mirror pair is gone
+        assert rm.pick(4, node_alive=False, replica_lost=False) \
+            is CheckpointTier.PEER
+        assert rm.pick(4, node_alive=False, replica_lost=True) \
+            is CheckpointTier.COLD
+        # ONLINE: local shard survives eviction but not a dead node
+        assert rm.pick(3, node_alive=True, replica_lost=False) \
+            is CheckpointTier.LOCAL
+        assert rm.pick(3, node_alive=False, replica_lost=False) \
+            is CheckpointTier.COLD
+        # untooled tiers are always cold
+        for t in (1, 2):
+            assert rm.pick(t, node_alive=True, replica_lost=False) \
+                is CheckpointTier.COLD
+
+    def test_mttr_decomposition_schema(self):
+        empty = mttr_decomposition([])
+        assert empty["incidents"] == 0
+        for p in MTTR_PHASES:
+            assert f"{p}_mean" in empty and f"{p}_total" in empty
+        evs = [{"kind": "recovery", "detect_s": 10.0, "drain_s": 20.0,
+                "restore_s": 30.0, "warmup_s": 40.0, "replay_steps": 5,
+                "ckpt_tier": "peer", "hot_spare": True},
+               {"kind": "step", "t": 0.0},   # ignored
+               {"kind": "recovery", "detect_s": 10.0, "drain_s": 20.0,
+                "restore_s": 480.0, "warmup_s": 40.0, "replay_steps": 45,
+                "ckpt_tier": "cold", "hot_spare": False}]
+        d = mttr_decomposition(evs)
+        assert d["incidents"] == 2
+        assert d["restore_s_mean"] == pytest.approx(255.0)
+        assert d["mttr_s"] == pytest.approx((100.0 + 550.0) / 2.0)
+        assert d["replay_steps_total"] == 50
+        assert d["hot_spare_promotions"] == 1
+        assert d["by_tier"] == {"peer": 1, "local": 0, "cold": 1}
+
+    def test_goodput_units(self):
+        assert goodput_tflop_h(100, 4500.0, 2.0) == pytest.approx(225000.0)
+        assert goodput_tflop_h(100, 4500.0, 0.0) == 0.0
+
+
+class TestSimRecovery:
+    def test_tier_routes_to_expected_checkpoint_tier(self):
+        burnin = crash_run(Tier.BURNIN)
+        enhanced = crash_run(Tier.ENHANCED)
+        assert burnin.recovery["incidents"] > 0
+        assert enhanced.recovery["incidents"] > 0
+        # untooled crashes always restore cold from the durable checkpoint
+        assert burnin.recovery["by_tier"]["cold"] == burnin.recovery["incidents"]
+        assert burnin.recovery["by_tier"]["peer"] == 0
+        assert burnin.recovery["hot_spare_promotions"] == 0
+        # ENHANCED promotes the DP peer's in-memory replica
+        assert enhanced.recovery["by_tier"].get("peer", 0) > 0
+        assert enhanced.recovery["hot_spare_promotions"] > 0
+
+    def test_hot_spare_charges_fewer_lost_steps_than_cold(self):
+        burnin = crash_run(Tier.BURNIN)
+        enhanced = crash_run(Tier.ENHANCED)
+        # restore is the in-memory replica (30 s) vs durable reload (480 s)
+        assert enhanced.recovery["restore_s_mean"] \
+            < burnin.recovery["restore_s_mean"]
+        # replay from the last FAST snapshot, not the 90-step durable one
+        mean_replay = lambda r: (r.recovery["replay_steps_total"]
+                                 / r.recovery["incidents"])
+        assert mean_replay(enhanced) < mean_replay(burnin)
+        # end to end the automated tier turns the same fault load into
+        # more unique progress per wall hour
+        assert enhanced.recovery["mttr_s"] < burnin.recovery["mttr_s"]
+        assert enhanced.goodput_tflop_h > burnin.goodput_tflop_h
+
+    def test_mttr_decomposition_present_per_tier(self):
+        for tier in (Tier.BURNIN, Tier.ONLINE, Tier.ENHANCED):
+            r = crash_run(tier, hours=6.0)
+            for p in MTTR_PHASES:
+                assert f"{p}_mean" in r.recovery
+            assert r.recovery["mttr_s"] >= 0.0
+            assert r.recovery["good_steps"] <= r.steps
+            assert r.goodput_tflop_h > 0.0
+
+    def test_cadence_tightens_under_fault_load(self):
+        quiet = crash_run(Tier.ENHANCED, rates=QUIET)
+        crashy = crash_run(Tier.ENHANCED)
+        assert quiet.recovery["incidents"] == 0
+        assert quiet.recovery["snap_interval_s"] > 0.0
+        # failures pull the MTTF estimate down -> Young-Daly shortens the
+        # snapshot cadence
+        assert crashy.recovery["snap_interval_s"] \
+            < quiet.recovery["snap_interval_s"]
+        # untooled tiers have no fast-snapshot machinery at all
+        assert crash_run(Tier.BURNIN).recovery["snap_interval_s"] == 0.0
+
+    def test_recovery_events_step_stamped(self):
+        r = crash_run(Tier.ENHANCED)
+        events = r.events
+        recs = [e for e in events if e.get("kind") == "recovery"]
+        assert len(recs) == r.recovery["incidents"]
+        ts = [e["t"] for e in events]
+        assert ts == sorted(ts)
+        for e in recs:
+            assert 0 <= e["step"] <= r.steps
+            assert e["ckpt_tier"] in {"peer", "local", "cold"}
+            assert e["restore_s"] > 0.0 and e["warmup_s"] > 0.0
+            assert math.isfinite(e["t"])
+        # every recovery rides on the restart that triggered it: same
+        # timestamp, same post-rewind step
+        restarts = [e for e in events if e.get("kind") == "restart"]
+        by_t = {e["t"]: e for e in restarts}
+        for e in recs:
+            assert e["t"] in by_t
+            assert by_t[e["t"]]["step"] == e["step"]

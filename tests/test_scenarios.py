@@ -270,6 +270,7 @@ class TestNicErrorBaseline:
         assert frame.metrics["nic_errors"][col] == 1000.0
 
 
+@pytest.mark.scale
 class TestDetectorObjectBudget:
     def test_update_materializes_no_objects_on_healthy_fleet(self):
         det = StragglerDetector()

@@ -114,6 +114,7 @@ class TestTrainer:
             steps_seen = [h["step"] for h in out["history"]]
             assert steps_seen.count(5) == 2      # replayed after rewind
 
+    @pytest.mark.slow
     def test_grad_accumulation_matches_full_batch(self, small):
         cfg, model, data = small
         params, _ = model.init_params(jax.random.key(1))
