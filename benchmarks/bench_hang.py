@@ -1,0 +1,276 @@
+"""Hang-watchdog benchmark: culprit/victim attribution of
+``repro.ccltrace`` against scenario ground truth, written to
+``BENCH_hang.json``.
+
+Three labeled hang scenarios drive a barrier-grouped fleet with the
+collective-granular span trace and barrier-timeout watchdog armed. A
+hung collective produces NO step samples, so the z-score detector never
+sees it — the watchdog must detect the silence, attribute it, and evict
+only the culprits:
+
+  deadlocked_collective      ranks wedge inside (or never reach) a
+                             collective: never-entered / entered-stalled
+                             culprits, group peers blocked as victims
+  partial_nic_brownout       one barrier group's NICs degrade, the worst
+                             past the hang threshold: entered-stalled
+                             culprits with link evidence
+  straggler_timeout_cascade  a thermal straggler degrades, then wedges:
+                             the fail-slow -> fail-stop escalation path
+
+Scoring against the injector's fault log (``RunResult.fault_log``):
+
+  precision   culprit accusations that pointed at a node with a
+              genuinely active hang-class fault — gate >= 0.90
+  recall      injected hang-grade nodes that were culprit-attributed
+  victims     hang-reason evictions of nodes with NO active hang-class
+              fault — must be ZERO (victims are watched, never evicted)
+  latency     median detection latency in evaluation windows from hang
+              onset to verdict — gate <= 3 windows (the framework CCL
+              abort is ~10 windows of silence)
+
+A no-watchdog baseline run of the deadlock scenario shows what the
+subsystem buys: the same fault handled by blind CCL-timeout restarts.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_hang [--quick]
+          [--out PATH]
+
+Exit is non-zero if any gate fails (CI runs this in the scale job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.guard import Tier
+from repro.simcluster import (BROWNOUT_HANG_SEV, DeadlockedCollective,
+                              FaultRates, PartialNicBrownout, RunConfig,
+                              StragglerTimeoutCascade, WorkloadProfile,
+                              simulate_run)
+
+PRECISION_GATE = 0.90
+LATENCY_GATE_WINDOWS = 3.0
+
+# fault kinds that wedge a rank (the attribution ground truth)
+HANG_TRUTH_KINDS = ("collective_hang", "nic_brownout")
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+WORKLOAD = WorkloadProfile(name="hang_bench", compute_s=6.0,
+                           comm_exposed_s=2.5, host_s=1.5)
+
+
+def base_config(duration_h: float, **kw) -> RunConfig:
+    kw.setdefault("rates", QUIET)
+    kw.setdefault("initial_grey_p", 0.0)
+    kw.setdefault("hang_watchdog", True)
+    return RunConfig(tier=Tier.ENHANCED, n_nodes=64, n_spare=10,
+                     duration_h=duration_h, dp_group_size=16,
+                     diagnose=True, workload=WORKLOAD, seed=11, **kw)
+
+
+def scenario_suite(quick: bool):
+    dur = 3.0 if quick else 8.0
+    return {
+        "deadlocked_collective": base_config(dur, scenarios=(
+            DeadlockedCollective(at_h=1.0, count=2, interval_h=0.75),)),
+        "partial_nic_brownout": base_config(dur, scenarios=(
+            PartialNicBrownout(at_h=1.0, group_size=8),)),
+        "straggler_timeout_cascade": base_config(dur, scenarios=(
+            StragglerTimeoutCascade(at_h=1.0, count=2,
+                                    interval_h=0.75),)),
+    }
+
+
+def _active_fault(fault_log, node: int, t: float, kinds,
+                  slack_s: float = 600.0):
+    """The first logged fault of ``kinds`` active on ``node`` around
+    ``t`` (the verdict lags onset by the poll cadence, hence slack)."""
+    for f in fault_log:
+        if f["node"] != node or f["kind"] not in kinds:
+            continue
+        cleared = f["t_cleared"]
+        if f["t_start"] - slack_s <= t and \
+                (cleared is None or t <= cleared + slack_s):
+            return f
+    return None
+
+
+def score_run(name: str, result) -> dict:
+    """Attribution + eviction + latency scoring for one simulated run."""
+    log = result.fault_log
+    # fleet-side watchdog verdicts only (op "step" would be the hook's
+    # single-host liveness path, which has no culprit attribution)
+    hangs = [e for e in result.events
+             if e["kind"] == "hang" and e["op"] != "step"]
+
+    tp = fp = 0
+    attributed = set()
+    for e in hangs:
+        for culprit in e["culprits"]:
+            if _active_fault(log, culprit, e["t"],
+                             HANG_TRUTH_KINDS) is not None:
+                tp += 1
+                attributed.add(culprit)
+            else:
+                fp += 1
+
+    # recall denominator: nodes whose injected fault actually wedges a
+    # rank — every collective_hang, plus brownouts past the hang
+    # severity (milder brownouts degrade without hanging)
+    truth = {f["node"] for f in log
+             if f["kind"] == "collective_hang"
+             or (f["kind"] == "nic_brownout"
+                 and f["severity"] >= BROWNOUT_HANG_SEV)}
+
+    # the headline gate: a hang-reason eviction of a node with no active
+    # hang-class fault evicted a VICTIM (blocked on the barrier, healthy)
+    victims_evicted = []
+    for e in result.events:
+        if e["kind"] != "swap" or "hang" not in e["reason"]:
+            continue
+        if _active_fault(log, e["old"], e["t"],
+                         HANG_TRUTH_KINDS) is None:
+            victims_evicted.append(e["old"])
+
+    latencies = [e["latency_windows"] for e in hangs]
+    return {
+        "scenario": name,
+        "steps": result.steps,
+        "goodput_tflop_h": result.goodput_tflop_h,
+        "hang_events": len(hangs),
+        "attributed_events": sum(1 for e in hangs if e["culprits"]),
+        "tp": tp,
+        "fp": fp,
+        "truth_nodes": sorted(truth),
+        "attributed_nodes": sorted(attributed & truth),
+        "recall_hits": len(attributed & truth),
+        "recall_total": len(truth),
+        "victims_evicted": sorted(set(victims_evicted)),
+        "latency_windows_median": float(np.median(latencies))
+        if latencies else float("nan"),
+        "latency_windows_max": float(np.max(latencies))
+        if latencies else float("nan"),
+        "pools": result.pools,
+    }
+
+
+def baseline_run(quick: bool) -> dict:
+    """The deadlock scenario with NO watchdog: every hang rides out the
+    blind framework CCL abort and the wedged rank stays in the job."""
+    cfg = base_config(3.0 if quick else 8.0, hang_watchdog=False,
+                      scenarios=(DeadlockedCollective(
+                          at_h=1.0, count=2, interval_h=0.75),))
+    r = simulate_run(cfg)
+    restarts = sum(1 for e in r.events
+                   if e["kind"] == "restart" and "hang" in e["reason"])
+    return {"steps": r.steps, "goodput_tflop_h": r.goodput_tflop_h,
+            "blind_restarts": restarts, "mfu": r.mfu}
+
+
+def hang_summary(quick: bool = True) -> dict:
+    """Pooled hang-watchdog metrics + gate verdicts (reused by
+    ``benchmarks.run_all`` for the regression gate)."""
+    runs = {name: score_run(name, simulate_run(cfg))
+            for name, cfg in scenario_suite(quick).items()}
+    tp = sum(s["tp"] for s in runs.values())
+    fp = sum(s["fp"] for s in runs.values())
+    rec_hits = sum(s["recall_hits"] for s in runs.values())
+    rec_total = sum(s["recall_total"] for s in runs.values())
+    victims = sorted({v for s in runs.values()
+                      for v in s["victims_evicted"]})
+    medians = [s["latency_windows_median"] for s in runs.values()
+               if np.isfinite(s["latency_windows_median"])]
+    latency = float(np.median(medians)) if medians else float("inf")
+    precision = tp / max(tp + fp, 1)
+    return {
+        "scenarios": runs,
+        "pooled": {
+            "precision": precision,
+            "recall": rec_hits / max(rec_total, 1),
+            "tp": tp, "fp": fp,
+            "recall_hits": rec_hits, "recall_total": rec_total,
+            "victims_evicted": victims,
+            "latency_windows_median": latency,
+        },
+        "gates": {
+            "precision_min": PRECISION_GATE,
+            "latency_windows_max": LATENCY_GATE_WINDOWS,
+            "victims_evicted_max": 0,
+        },
+        "ok": (precision >= PRECISION_GATE and not victims
+               and latency <= LATENCY_GATE_WINDOWS
+               and all(s["hang_events"] > 0 for s in runs.values())),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (shorter scenario runs)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_hang.json"))
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    summary = hang_summary(args.quick)
+    baseline = baseline_run(args.quick)
+    pooled = summary["pooled"]
+    out = {
+        "benchmark": "guard_hang",
+        "mode": "quick" if args.quick else "full",
+        **summary,
+        "baseline_no_watchdog": baseline,
+        "total_wall_s": time.perf_counter() - t0,
+    }
+
+    print(f"{'scenario':>26s}{'hangs':>7s}{'tp':>5s}{'fp':>5s}"
+          f"{'recall':>9s}{'victims':>9s}{'lat(w)':>8s}")
+    for name, s in summary["scenarios"].items():
+        rec = f"{s['recall_hits']}/{s['recall_total']}" \
+            if s["recall_total"] else "-"
+        print(f"{name:>26s}{s['hang_events']:7d}{s['tp']:5d}{s['fp']:5d}"
+              f"{rec:>9s}{len(s['victims_evicted']):9d}"
+              f"{s['latency_windows_median']:8.1f}")
+    print(f"\npooled: precision {pooled['precision']:.3f} "
+          f"(gate {PRECISION_GATE}), recall {pooled['recall']:.3f}, "
+          f"median latency {pooled['latency_windows_median']:.1f} windows "
+          f"(gate {LATENCY_GATE_WINDOWS})")
+    wd_steps = summary["scenarios"]["deadlocked_collective"]["steps"]
+    print(f"baseline (no watchdog, deadlock scenario): "
+          f"{baseline['steps']} steps vs {wd_steps} with the watchdog, "
+          f"{baseline['blind_restarts']} blind CCL-timeout restarts")
+
+    ok = True
+    if pooled["precision"] < PRECISION_GATE:
+        print(f"FAIL: precision {pooled['precision']:.3f} < "
+              f"{PRECISION_GATE}", file=sys.stderr)
+        ok = False
+    if pooled["victims_evicted"]:
+        print(f"FAIL: hang victims evicted: "
+              f"{pooled['victims_evicted']}", file=sys.stderr)
+        ok = False
+    if pooled["latency_windows_median"] > LATENCY_GATE_WINDOWS:
+        print(f"FAIL: median detection latency "
+              f"{pooled['latency_windows_median']:.1f} windows > "
+              f"{LATENCY_GATE_WINDOWS}", file=sys.stderr)
+        ok = False
+    for name, s in summary["scenarios"].items():
+        if not s["hang_events"]:
+            print(f"FAIL: {name} produced no hang events", file=sys.stderr)
+            ok = False
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.out}  ({out['total_wall_s']:.0f}s)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

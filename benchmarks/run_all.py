@@ -143,6 +143,11 @@ def main(argv=None) -> int:
     # tracks the vectorized hot path (full curves live in BENCH_scale.json)
     from benchmarks.bench_scale import scale_summary
     scale = scale_summary(quick=True)
+    # hang-watchdog attribution summary (full report in BENCH_hang.json):
+    # culprit precision, victim evictions and detection latency are
+    # regression gates here too
+    from benchmarks.bench_hang import hang_summary
+    hang = hang_summary(quick=True)
     out = {
         "benchmark": "guard_tier_ablation",
         "config": {"duration_h": hours, "n_nodes": nodes, "seeds": seeds,
@@ -150,6 +155,7 @@ def main(argv=None) -> int:
         "tiers": per_tier,
         "ordering": ordering,
         "scale": scale,
+        "hang": hang,
         "total_wall_s": time.time() - t0,
     }
     with open(args.out, "w") as f:
@@ -169,8 +175,17 @@ def main(argv=None) -> int:
         print(f"detector @{d['n_nodes']:>6d} nodes: "
               f"{d['us_per_window_p50']:.0f}µs/window, "
               f"{d['objects_per_window_max']} objects")
+    hp = hang["pooled"]
+    print(f"hang watchdog: precision {hp['precision']:.3f}, "
+          f"victims evicted {len(hp['victims_evicted'])}, "
+          f"median latency {hp['latency_windows_median']:.1f} windows")
     print(f"wrote {args.out}  ({out['total_wall_s']:.0f}s)")
     fail = False
+    if not hang["ok"]:
+        print("FAIL: hang-watchdog gates broke (culprit precision, "
+              "victim evictions or detection latency — see the 'hang' "
+              "section of the artifact)", file=sys.stderr)
+        fail = True
     if not ordering["headline_enhanced_gt_burnin"]:
         print("FAIL: ENHANCED did not beat BURNIN on MFU", file=sys.stderr)
         fail = True

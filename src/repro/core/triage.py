@@ -123,15 +123,19 @@ class TriageWorkflow:
             verify: Callable[[int], bool]) -> TriageResult:
         cfg = self.cfg
 
-        # attribution says the node is a cascade victim: it was stalled
-        # behind a degraded peer, not degraded itself. Return it to the
-        # sweep pipeline WITHOUT a strike (a strike here would ratchet a
-        # healthy node toward 3-strikes termination) and without burning
-        # remediation stages on it.
-        if signals.root_cause == "cascade_victim":
+        # attribution says the node is a victim — stalled behind a
+        # degraded peer (cascade_victim) or blocked on the barrier of a
+        # hung collective (hang_victim) — not degraded itself. Return it
+        # to the sweep pipeline WITHOUT a strike (a strike here would
+        # ratchet a healthy node toward 3-strikes termination) and
+        # without burning remediation stages on it.
+        if signals.root_cause in ("cascade_victim", "hang_victim"):
             res = TriageResult(node_id, TriageOutcome.RETURNED_TO_SWEEP,
                                [], 0.0, 0.0,
-                               "cascade victim: no strike, no remediation")
+                               "cascade victim: no strike, no remediation"
+                               if signals.root_cause == "cascade_victim"
+                               else "hang victim: no strike, "
+                                    "no remediation")
             self.results.append(res)
             return res
 

@@ -19,6 +19,20 @@ the correct lane instead of treating every latch as an eviction:
                      transient fabric-congestion spike (comm excess that
                      is not sustained across the trace, or shared by a
                      large fleet fraction at once). Watched.
+  hang_culprit       the ccltrace watchdog accused this node of wedging
+                     a blocking collective (never entered, or entered
+                     with independent link evidence) -> evicted; triage
+                     starts in the NIC lane with link evidence, the host
+                     lane otherwise
+  hang_victim        arrived at the collective and blocked on the
+                     barrier behind a hang culprit. Watched, never
+                     evicted (same logic as cascade_victim: pulling it
+                     loses a healthy node and fixes nothing)
+
+The z-score lanes key on the ``TimingTrace`` decomposition + what-if
+blame; the hang lanes are recorded by ``Diagnoser.record_hang`` from
+``repro.ccltrace`` watchdog verdicts — hangs produce no step samples,
+so they can never arrive through ``diagnose``.
 
 Classification keys on the ``TimingTrace`` decomposition + what-if blame
 and is sharpened by the detector's sustained hardware-signal masks
@@ -51,11 +65,14 @@ class RootCause(enum.Enum):
     DATA_STALL = "data_stall"
     CASCADE_VICTIM = "cascade_victim"
     UNDIAGNOSED = "undiagnosed"
+    HANG_CULPRIT = "hang_culprit"
+    HANG_VICTIM = "hang_victim"
 
 
 # causes that must be WATCHED, not evicted: the node itself is (as far
 # as attribution can tell) healthy
-HOLD_CAUSES = (RootCause.CASCADE_VICTIM, RootCause.UNDIAGNOSED)
+HOLD_CAUSES = (RootCause.CASCADE_VICTIM, RootCause.UNDIAGNOSED,
+               RootCause.HANG_VICTIM)
 
 # detector support masks backing each lane
 _GPU_SUPPORT = ("gpu_temp", "gpu_freq", "gpu_power")
@@ -94,10 +111,16 @@ class Diagnosis:
 
     def to_error_signals(self) -> ErrorSignals:
         rc = self.root_cause
+        # hang culprits route by their evidence: link evidence -> NIC
+        # lane (nic_reset first), never-entered/wedged -> host lane
+        # (reboot unwedges a stuck process)
+        hang_nic = rc is RootCause.HANG_CULPRIT and \
+            any("link" in e or "nic" in e for e in self.evidence)
         return ErrorSignals(
             gpu_errors=rc == RootCause.COMPUTE_DEGRADED,
-            nic_errors=rc == RootCause.COMM_DEGRADED,
-            host_errors=rc == RootCause.DATA_STALL,
+            nic_errors=rc == RootCause.COMM_DEGRADED or hang_nic,
+            host_errors=rc == RootCause.DATA_STALL or
+            (rc is RootCause.HANG_CULPRIT and not hang_nic),
             root_cause=rc.value,
             detail="; ".join(self.evidence))
 
@@ -321,6 +344,39 @@ class Diagnoser:
         return Diagnosis(nid, cause, float(blame), float(blame_rel),
                          float(marginal), float(stall_share),
                          tuple(evidence), frame.t, frame.step)
+
+    # ------------------------------------------------------- hang intake
+
+    def record_hang(self, verdict, t: float, step: int) -> List[Diagnosis]:
+        """Fold one ccltrace ``HangVerdict`` into the per-node diagnosis
+        state: culprits get ``HANG_CULPRIT`` (evidence-routed to the NIC
+        or host triage lane), arrived-and-blocked ranks get
+        ``HANG_VICTIM`` — a HOLD cause, so the health manager keeps them
+        in the job. Duck-typed on the verdict so ``repro.ccltrace``
+        stays import-free of this package."""
+        out: List[Diagnosis] = []
+        victims = {int(v) for v in verdict.victims}
+        base = (f"{verdict.op} group {verdict.group} overdue "
+                f"{verdict.waited_s:.0f}s "
+                f"(deadline {verdict.deadline_s:.0f}s)")
+        for nid, role in verdict.roles.items():
+            nid = int(nid)
+            value = getattr(role, "value", str(role))
+            if nid in victims:
+                cause = RootCause.HANG_VICTIM
+                detail = "arrived, blocked on the barrier"
+            else:
+                cause = RootCause.HANG_CULPRIT
+                detail = ("never entered the collective"
+                          if value == "never_entered"
+                          else "entered and stalled (link evidence)")
+            rec = Diagnosis(nid, cause, 0.0, 0.0, 0.0,
+                            1.0 if cause is RootCause.HANG_VICTIM else 0.0,
+                            (base, detail), float(t), int(step))
+            self.last[nid] = rec
+            self._emitted.pop(nid, None)   # a later z-flag must re-emit
+            out.append(rec)
+        return out
 
     # ---------------------------------------------------------- consumers
 

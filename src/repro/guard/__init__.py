@@ -14,7 +14,8 @@ consumers should not wire ``OnlineMonitor``/``HealthManager`` by hand.
 from repro.guard.events import (EVENT_TYPES, CampaignFinished,
                                 CheckpointSaved, CrashDetected,
                                 DiagnosisEvent, EventBus, GuardEvent,
-                                JobRestart, JsonlSink, NodeProvisioned,
+                                HangDetected, JobRestart, JsonlSink,
+                                NodeProvisioned,
                                 NodeQuarantined, NodeSwapped, NodeTerminated,
                                 RecoveryEvent, StragglerCleared,
                                 StragglerFlagged, SweepFinished,
@@ -33,7 +34,8 @@ __all__ = [
     "CampaignFinished", "CheckpointOutcome", "CheckpointSaved",
     "CheckpointTier", "CrashDetected",
     "DiagnosisEvent", "EVENT_TYPES",
-    "EventBus", "GuardEvent", "GuardSession", "GuardStepHook", "JobRestart",
+    "EventBus", "GuardEvent", "GuardSession", "GuardStepHook",
+    "HangDetected", "JobRestart",
     "JsonlSink", "LocalHostControl", "LocalSweepBackend", "MTTFEstimator",
     "MTTR_PHASES",
     "NodeProvisioned",

@@ -72,6 +72,31 @@ class DiagnosisEvent(GuardEvent):
     evidence: Tuple[str, ...] = ()
 
 
+@dataclasses.dataclass(frozen=True)
+class HangDetected(GuardEvent):
+    """A blocking collective exceeded its adaptive barrier deadline:
+    some ranks of ``group`` are stuck in (or never reached) ``op``.
+    ``culprits`` are the ranks the ccltrace watchdog accuses (never
+    entered, or entered with independent link evidence), ``victims``
+    the ranks that arrived and blocked on the barrier; ``roles`` maps
+    each involved rank to its CCL-D classification (``never_entered`` /
+    ``entered_stalled`` / ``victim``). ``waited_s`` is how long the
+    collective had been pending when ``deadline_s`` tripped, and
+    ``latency_windows`` the detection latency in evaluation windows
+    from hang onset to verdict. An empty ``culprits`` is a detection
+    without attribution (all ranks arrived, no link evidence) — the
+    job restarts but nobody is evicted."""
+    kind: ClassVar[str] = "hang"
+    group: int = -1
+    op: str = ""
+    culprits: Tuple[int, ...] = ()
+    victims: Tuple[int, ...] = ()
+    roles: Tuple[Tuple[int, str], ...] = ()
+    waited_s: float = 0.0
+    deadline_s: float = 0.0
+    latency_windows: float = 0.0
+
+
 # -------------------------------------------------------------- mitigation
 
 @dataclasses.dataclass(frozen=True)
@@ -199,10 +224,10 @@ class CampaignFinished(GuardEvent):
 
 
 EVENT_TYPES: Tuple[Type[GuardEvent], ...] = (
-    StragglerFlagged, StragglerCleared, DiagnosisEvent, NodeSwapped,
-    NodeQuarantined, NodeTerminated, NodeProvisioned, CrashDetected,
-    JobRestart, CheckpointSaved, RecoveryEvent, SweepStarted, SweepFinished,
-    TriageStage, CampaignFinished,
+    StragglerFlagged, StragglerCleared, DiagnosisEvent, HangDetected,
+    NodeSwapped, NodeQuarantined, NodeTerminated, NodeProvisioned,
+    CrashDetected, JobRestart, CheckpointSaved, RecoveryEvent, SweepStarted,
+    SweepFinished, TriageStage, CampaignFinished,
 )
 
 

@@ -37,12 +37,13 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.ccltrace.watchdog import adaptive_deadline
 from repro.core.detector import DetectorConfig
 from repro.core.sweep import SweepReference
 from repro.core.telemetry import HARDWARE_METRICS, Frame
 from repro.core.triage import ErrorSignals
 from repro.diagnose import Diagnoser, TimingTrace, Topology, WindowTiming
-from repro.guard.events import NodeSwapped, RecoveryEvent
+from repro.guard.events import HangDetected, NodeSwapped, RecoveryEvent
 from repro.guard.session import GuardSession, Tier
 
 
@@ -130,7 +131,9 @@ class GuardStepHook:
                  detector_cfg: Optional[DetectorConfig] = None,
                  trace: Optional[TimingTrace] = None,
                  diagnose: bool = False,
-                 own_split: Sequence[float] = (0.75, 0.15, 0.10)):
+                 own_split: Sequence[float] = (0.75, 0.15, 0.10),
+                 step_deadline_s: Optional[float] = None,
+                 step_deadline_mult: float = 8.0):
         owns_session = session is None
         if owns_session:
             control = LocalHostControl()
@@ -174,6 +177,18 @@ class GuardStepHook:
         self._ckpt = None        # TieredCheckpointManager, bind_checkpoint
         self.frames_fed = 0
         self.restarts_requested = 0
+        # liveness: a rank wedged inside a collective never finishes a
+        # step, so it never produces a Frame and the detector never sees
+        # it. A watchdog (timer thread, sibling process) calls
+        # ``check_liveness`` on wall-clock cadence instead; the deadline
+        # adapts to the healthy step baseline via the same rule the
+        # ccltrace barrier watchdog uses.
+        self.step_deadline_floor_s = (300.0 if step_deadline_s is None
+                                      else float(step_deadline_s))
+        self.step_deadline_mult = float(step_deadline_mult)
+        self._last_step_t = self.control.now()
+        self._last_step = 0
+        self.hangs_detected = 0
         # timing-trace feed (repro.diagnose): measured wall split into
         # compute/comm/host via trainer-supplied component seconds
         # ("compute_s"/"comm_s"/"host_s" metric keys) or ``own_split``
@@ -267,6 +282,9 @@ class GuardStepHook:
             # the local control has no other clock source; a real
             # substrate (e.g. the simulator) advances its own time
             self.control.t += wall
+        # a completed step is proof of liveness
+        self._last_step_t = self.control.now()
+        self._last_step = step
         if self._n_walls < self.window_steps:
             return False
         self._windows_seen += 1
@@ -292,6 +310,8 @@ class GuardStepHook:
         into further spurious restarts."""
         self._reset_window()
         self._windows_seen = 0
+        # restore/warmup time must not count toward the step deadline
+        self._last_step_t = self.control.now()
 
     def on_checkpoint(self, step: int) -> None:
         """Trainer notification: a checkpoint was saved. Deferred and
@@ -326,6 +346,49 @@ class GuardStepHook:
             drain_s=float(info.get("drain_s", 0.0)),
             warmup_s=float(info.get("warmup_s", 0.0)),
             replay_steps=int(info.get("replay_steps", 0))))
+
+    # ------------------------------------------------------------ liveness
+
+    def step_deadline(self) -> float:
+        """Wall-clock budget for one training step before this host is
+        presumed hung. Scaled from the rolling healthy step baseline by
+        the ccltrace adaptive-deadline rule; before a baseline exists
+        (first window after start/restart) the configured floor applies
+        alone — better a loose cold deadline than a tight wrong one."""
+        if self._baseline is None:
+            return self.step_deadline_floor_s
+        return adaptive_deadline(self._baseline, self.step_deadline_mult,
+                                 floor_s=self.step_deadline_floor_s,
+                                 cap_s=3600.0)
+
+    def check_liveness(self, now: Optional[float] = None) -> bool:
+        """Called off the step path (watchdog thread / sibling process):
+        returns True when the trainer must restart because no step has
+        completed within the deadline. The hook can only see its own
+        host, so it reports itself as a hang *victim* (op="step", no
+        culprit) — fleet-side culprit/victim attribution needs the
+        ccltrace barrier watchdog, which sees every rank. Without this
+        path a rank wedged in a collective blocks the job forever: it
+        never finishes a step, so it never produces a Frame, and the
+        frame-driven detector never fires."""
+        t = self.control.now() if now is None else float(now)
+        waited = t - self._last_step_t
+        deadline = self.step_deadline()
+        if waited < deadline:
+            return False
+        self.hangs_detected += 1
+        self.restarts_requested += 1
+        self.session.publish(HangDetected(
+            t=t, step=self._last_step, op="step",
+            victims=(self.node_id,),
+            roles=((self.node_id, "victim"),),
+            waited_s=float(waited), deadline_s=float(deadline)))
+        self.session.mttf.observe_failure(t)
+        # the wedged step's partial window is garbage; the restart path
+        # (on_restart) re-enters warmup as usual
+        self._reset_window()
+        self._last_step_t = t
+        return True
 
     # ------------------------------------------------------------ internal
 

@@ -45,7 +45,8 @@ from repro.core.triage import TriageConfig
 from repro.guard.events import (CampaignFinished, CheckpointSaved,
                                 CrashDetected,
                                 DiagnosisEvent, EventBus, GuardEvent,
-                                NodeProvisioned, NodeQuarantined,
+                                HangDetected, NodeProvisioned,
+                                NodeQuarantined,
                                 NodeSwapped, NodeTerminated,
                                 StragglerCleared, StragglerFlagged,
                                 TraceSink)
@@ -300,6 +301,41 @@ class GuardSession:
                                          new=spare,
                                          reason="fail-stop crash"))
             new_ids.append(spare)
+        return new_ids
+
+    def handle_hang(self, verdict, step: Optional[int] = None,
+                    latency_windows: float = 0.0) -> List[int]:
+        """Route one ccltrace watchdog ``HangVerdict`` through the loop:
+        publish the ``HangDetected`` event, record culprit/victim
+        diagnoses (triage lanes + the manager's hold-check), and evict
+        the culprit ranks' nodes — victims are watched, never evicted.
+        A verdict with no culprits only records/publishes: the caller
+        restarts the job blind. Returns the replacement node ids."""
+        now = self.control.now()
+        self._note_step(step)
+        roles = tuple(sorted((int(n), getattr(r, "value", str(r)))
+                             for n, r in verdict.roles.items()))
+        self.bus.publish(HangDetected(
+            t=now, step=self._step, group=int(verdict.group),
+            op=verdict.op,
+            culprits=tuple(int(c) for c in verdict.culprits),
+            victims=tuple(int(v) for v in verdict.victims),
+            roles=roles, waited_s=float(verdict.waited_s),
+            deadline_s=float(verdict.deadline_s),
+            latency_windows=float(latency_windows)))
+        if self.diagnoser is not None:
+            self.diagnoser.record_hang(verdict, t=now, step=self._step)
+        self.mttf.observe_failure(now)
+        new_ids: List[int] = []
+        role_of = dict(roles)
+        for bad in verdict.culprits:
+            bad = int(bad)
+            if self.manager.state.get(bad) in (NodeState.ACTIVE,
+                                               NodeState.PENDING):
+                new_ids.append(self.replace_node(
+                    bad,
+                    reason=f"hang culprit ({role_of.get(bad, 'culprit')})",
+                    step=self._step))
         return new_ids
 
     def replace_node(self, bad: int, reason: str,

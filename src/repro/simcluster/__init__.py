@@ -4,23 +4,32 @@ scenario layer, and the multi-week run simulator. Everything above this
 layer (Guard's detection/triage/sweep logic) is substrate-independent."""
 from repro.simcluster.cluster import SWEEP_PROFILE, SimCluster, \
     SimSweepBackend, WorkloadProfile
-from repro.simcluster.faults import (FaultInjector, FaultKind, FaultRates,
-                                     GREY_KINDS)
+from repro.simcluster.faults import (BROWNOUT_HANG_SEV, FaultInjector,
+                                     FaultKind, FaultRates, GREY_KINDS,
+                                     HANG_KINDS)
 from repro.simcluster.node import (Fleet, HWConfig, THROTTLE_CURVE_C,
                                    THROTTLE_CURVE_GHZ, freq_at_temp)
 from repro.simcluster.runtime import RunConfig, RunResult, Tier, simulate_run
 from repro.simcluster.scenarios import (CongestionStorm,
+                                        DeadlockedCollective,
                                         InitialGreyPopulation,
-                                        MaintenanceWindow, RackThermal,
-                                        Scenario, SwitchFailure, arm_all,
+                                        MaintenanceWindow,
+                                        PartialNicBrownout, RackThermal,
+                                        Scenario, StragglerTimeoutCascade,
+                                        SwitchFailure, arm_all,
                                         builtin_scenarios, register_scenario,
                                         scenario)
 
 __all__ = [
-    "CongestionStorm", "FaultInjector", "FaultKind", "FaultRates", "Fleet",
-    "GREY_KINDS", "HWConfig", "InitialGreyPopulation", "MaintenanceWindow",
+    "BROWNOUT_HANG_SEV",
+    "CongestionStorm", "DeadlockedCollective", "FaultInjector", "FaultKind",
+    "FaultRates", "Fleet",
+    "GREY_KINDS", "HANG_KINDS", "HWConfig", "InitialGreyPopulation",
+    "MaintenanceWindow",
+    "PartialNicBrownout",
     "RackThermal", "RunConfig", "RunResult", "SWEEP_PROFILE", "Scenario",
-    "SimCluster", "SimSweepBackend", "SwitchFailure", "THROTTLE_CURVE_C",
+    "SimCluster", "SimSweepBackend", "StragglerTimeoutCascade",
+    "SwitchFailure", "THROTTLE_CURVE_C",
     "THROTTLE_CURVE_GHZ",
     "Tier", "WorkloadProfile", "arm_all", "builtin_scenarios",
     "freq_at_temp", "register_scenario", "scenario", "simulate_run",

@@ -23,11 +23,14 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.ccltrace.spans import (CollectiveSpanTrace, PendingCollective,
+                                  SpanWindow)
 from repro.core.sweep import SweepReference
 from repro.core.telemetry import Frame, reduce_device_metrics
 from repro.diagnose.trace import TimingTrace, WindowTiming
 from repro.diagnose.whatif import Topology
-from repro.simcluster.faults import FaultInjector, FaultRates
+from repro.simcluster.faults import (HANG_NEVER_ENTER, FaultInjector,
+                                     FaultRates)
 from repro.simcluster.node import Fleet, HWConfig, freq_at_temp
 
 
@@ -97,6 +100,11 @@ class SimSweepBackend:
     def compute_probe(self, node_id: int, device: int,
                       seconds: float) -> float:
         fl = self.fleet
+        # a wedged node's burn kernel never completes: the probe times
+        # out and reports zero sustained throughput (so qualification
+        # fails until triage actually clears the hang)
+        if fl.hang_phase[node_id]:
+            return 0.0
         t_eff = self._effective_temp(fl.temp_c[node_id, device],
                                      fl.temp_target[node_id, device],
                                      seconds)
@@ -116,7 +124,11 @@ class SimSweepBackend:
         t_eff = self._effective_temp(temp, fl.temp_target[idx], seconds)
         f = freq_at_temp(t_eff) / fl.hw.base_freq_ghz * \
             fl.power_factor[idx] * fl.mem_factor[idx]
-        return fl.hw.base_tflops * f * fl.probe_noise_compute()[idx]
+        out = fl.hw.base_tflops * f * fl.probe_noise_compute()[idx]
+        # same wedged-node timeout as the scalar probe (exact zeros keep
+        # the batched-vs-scalar bit-identity contract)
+        out[fl.hang_phase[idx] != 0] = 0.0
+        return out
 
     # --- intra-node bandwidth ----------------------------------------
 
@@ -234,6 +246,11 @@ class SimCluster:
         self.timing: Optional[TimingTrace] = None
         self._parts_sum: Optional[np.ndarray] = None   # (3, N) seconds
         self._wall_sum: Optional[np.ndarray] = None    # (N,) seconds
+        # collective span capture (repro.ccltrace substrate): enter =
+        # own pre-barrier work (compute + host), exit = group wall
+        self.spans: Optional[CollectiveSpanTrace] = None
+        self._span_op = "all_reduce"
+        self._enter_sum: Optional[np.ndarray] = None   # (N,) seconds
 
     # ------------------------------------------------------------ stepping
 
@@ -277,6 +294,16 @@ class SimCluster:
         ``repro.diagnose`` substrate). One push per ``collect()``."""
         self.timing = trace
 
+    def attach_spans(self, trace: CollectiveSpanTrace,
+                     op: str = "all_reduce") -> None:
+        """Feed per-window collective spans into ``trace`` (the
+        ``repro.ccltrace`` substrate): enter = window-mean pre-barrier
+        work (compute + host), exit = window-mean group wall, group ids
+        from the attached topology (one global group without one). One
+        push per ``collect()``."""
+        self.spans = trace
+        self._span_op = op
+
     def _accum_decomp(self, times: np.ndarray, dts: np.ndarray,
                       parts) -> None:
         """Accumulate one committed block's decomposition: ``times`` is
@@ -292,13 +319,17 @@ class SimCluster:
         if self._parts_sum is None or self._parts_sum.shape[1] != n:
             self._parts_sum = np.zeros((3, n))
             self._wall_sum = np.zeros(n)
-        if self.timing is not None:
+            self._enter_sum = np.zeros(n)
+        if self.timing is not None or self.spans is not None:
             comp, comm, host = parts
             scale = times.sum(axis=0) / np.maximum(comp + comm + host,
                                                    1e-12)
-            self._parts_sum[0] += comp * scale
-            self._parts_sum[1] += comm * scale
-            self._parts_sum[2] += host * scale
+            if self.timing is not None:
+                self._parts_sum[0] += comp * scale
+                self._parts_sum[1] += comm * scale
+                self._parts_sum[2] += host * scale
+            if self.spans is not None:
+                self._enter_sum += (comp + host) * scale
         if self.topology is not None:
             self._wall_sum += self.topology.group_max(times).sum(axis=0)
         else:
@@ -309,12 +340,14 @@ class SimCluster:
         if self._parts_sum is not None:
             self._parts_sum[:] = 0.0
             self._wall_sum[:] = 0.0
+            self._enter_sum[:] = 0.0
 
     def run_step(self) -> dict:
         """Advance the job by one training step; returns the step record."""
         idx = self._active_idx()
         alive = self.fleet.alive[idx]
-        track = self.timing is not None or self.topology is not None
+        track = (self.timing is not None or self.topology is not None
+                 or self.spans is not None)
         if track:
             # pre-tick split (the tick below may fire events that change
             # it); compose the barrier times from it directly instead of
@@ -364,16 +397,24 @@ class SimCluster:
         equilibrium as per-step integration with transiently coarser
         sampling of the throttle curve.
 
-        Stops early on a fail-stop crash. Returns the window record:
+        Stops early on a fail-stop crash, or on a hung collective (any
+        active node with nonzero ``hang_phase``): the barrier never
+        completes, so no further step can commit — the record comes back
+        with ``hung`` set and the caller drives the ccltrace watchdog
+        (or the blind CCL-timeout fallback). Returns the window record:
         ``step_times`` holds the committed steps' job step times."""
         target = self.window_steps if steps is None else int(steps)
         step_times: List[float] = []
         crashed = False
+        hung = False
         while len(step_times) < target and not crashed:
             idx = self._active_idx()
             if not self.fleet.alive[idx].all():
                 self.run_step()              # crash bookkeeping path
                 crashed = True
+                break
+            if self.fleet.hang_phase[idx].any():
+                hung = True
                 break
             k = target - len(step_times)
             if k == 1:
@@ -386,7 +427,8 @@ class SimCluster:
             # ---- frozen-state fast path: one (k, N) composition
             self.injector.prime(self.t, idx)
             w = self.workload
-            track = self.timing is not None or self.topology is not None
+            track = (self.timing is not None or self.topology is not None
+                     or self.spans is not None)
             parts = self._barrier_parts(idx) if track else None
             base = parts[0] + parts[1] + parts[2] if track \
                 else self._barrier_base(idx)               # (N,)
@@ -436,10 +478,44 @@ class SimCluster:
             step_times.extend(dts.tolist())
         return {"t": self.t, "step": self.step,
                 "step_times": np.asarray(step_times),
-                "steps_run": len(step_times), "crashed": crashed}
+                "steps_run": len(step_times), "crashed": crashed,
+                "hung": hung}
 
     def crashed_nodes(self) -> List[int]:
         return [n for n in self.active if not self.fleet.alive[n]]
+
+    def hang_pending(self) -> Optional[PendingCollective]:
+        """Observable snapshot of the stuck in-flight collective, for the
+        ccltrace watchdog. Built ONLY from what a CCL tracing layer sees:
+        which ranks posted the collective (never-entering ranks are wedged
+        before it), which groups completed theirs, and per-rank link
+        evidence (down/degraded port or error-counter creep since the
+        last window). Returns None while nothing is hung."""
+        idx = self._active_idx()
+        ph = self.fleet.hang_phase[idx]
+        if not ph.any():
+            return None
+        comp, comm, host = self._barrier_parts(idx)
+        entered = ph != HANG_NEVER_ENTER
+        enter_off = comp + host
+        enter_t = np.where(entered, self.t + enter_off, np.inf)
+        group_of = (self.topology.stage_of.astype(np.int64)
+                    if self.topology is not None
+                    else np.zeros(len(idx), np.int64))
+        # a group with no wedged member finished its own collective; its
+        # ranks block at the next global sync point, outside this op
+        hung_groups = np.unique(group_of[ph > 0])
+        completed = ~np.isin(group_of, hung_groups)
+        fl = self.fleet
+        err_delta = (fl.nic_err_count[idx] - self._prev_err[idx]).sum(axis=1)
+        nic_suspect = ((~fl.nic_up[idx]).any(axis=1)
+                       | (fl.nic_quality[idx] < 0.95).any(axis=1)
+                       | (err_delta > 0))
+        return PendingCollective(
+            t_start=self.t, step=self.step, op=self._span_op,
+            node_ids=idx.astype(np.int64), group_of=group_of,
+            entered=entered, enter_t=enter_t, completed=completed,
+            nic_suspect=nic_suspect)
 
     def advance_idle(self, seconds: float) -> None:
         """Advance wall time without training (restart/recovery windows)."""
@@ -487,6 +563,17 @@ class SimCluster:
                 comm=self._parts_sum[1] / w,
                 host=self._parts_sum[2] / w,
                 stall=np.maximum(wall_mean - own_mean, 0.0)))
+        if self.spans is not None and self._enter_sum is not None and \
+                self._enter_sum.shape[0] == len(idx):
+            if wall_mean is None:
+                wall_mean = self._wall_sum / w
+            group_of = (self.topology.stage_of.astype(np.int64)
+                        if self.topology is not None
+                        else np.zeros(len(idx), np.int64))
+            self.spans.push(SpanWindow(
+                t=self.t, step=self.step, op=self._span_op,
+                node_ids=node_ids, group_of=group_of,
+                enter=self._enter_sum / w, exit=wall_mean))
         self._reset_decomp()
         # error counters are cumulative — report the window delta. Clean
         # windows (no NIC events since the last collect, no swaps moving

@@ -13,6 +13,14 @@ Each fault kind reproduces a §3 degradation pattern:
   CONGESTION    transient fabric congestion: short comm spikes, NOT a node
                 fault (the detector must not quarantine for these)
   FAIL_STOP     hard crash — the fail-fast class traditional checks catch
+  COLLECTIVE_HANG  a rank wedges around a blocking collective (CCL-D's
+                hang class): device -1 = stuck BEFORE the collective
+                (never enters), device >= 0 = deadlocked INSIDE it with
+                error-counter creep on the stuck channel. The job's
+                barrier never completes — steps stop, no crash
+  NIC_BROWNOUT  intermittent link brownout: heavy downtraining + error
+                bursts; severe episodes (severity >= BROWNOUT_HANG_SEV)
+                wedge the in-flight collective outright
 
 Grey (fail-slow) faults carry an ESCALATION clock: unmitigated, a degrading
 component eventually hard-fails. This is what gives proactive removal its
@@ -50,19 +58,31 @@ class FaultKind(enum.Enum):
     HOST_CPU = "host_cpu"
     CONGESTION = "congestion"
     FAIL_STOP = "fail_stop"
+    COLLECTIVE_HANG = "collective_hang"
+    NIC_BROWNOUT = "nic_brownout"
 
 
 GREY_KINDS = (FaultKind.THERMAL, FaultKind.POWER, FaultKind.MEM_ECC,
               FaultKind.NIC_DOWN, FaultKind.NIC_DEGRADED, FaultKind.HOST_CPU)
 
+# hang-capable kinds and the Fleet.hang_phase values they induce
+# (repro.ccltrace taxonomy: a never-entering rank outranks a stalled one)
+HANG_KINDS = (FaultKind.COLLECTIVE_HANG, FaultKind.NIC_BROWNOUT)
+HANG_NONE, HANG_STALLED, HANG_NEVER_ENTER = 0, 1, 2
+# brownout severity at or above which the in-flight collective wedges
+# (below it the link is merely slow — the z-score path's territory)
+BROWNOUT_HANG_SEV = 0.55
+
 # which remediation stages can clear which fault kinds (triage FSM model)
 REMEDIATION_FIX: Dict[str, tuple] = {
     "gpu_reset": (FaultKind.THERMAL,),            # driver reset re-seats clocks
-    "nic_reset": (FaultKind.NIC_DEGRADED,),
+    "nic_reset": (FaultKind.NIC_DEGRADED, FaultKind.NIC_BROWNOUT),
     "reboot": (FaultKind.THERMAL, FaultKind.NIC_DEGRADED, FaultKind.HOST_CPU,
-               FaultKind.MEM_ECC),
+               FaultKind.MEM_ECC, FaultKind.COLLECTIVE_HANG,
+               FaultKind.NIC_BROWNOUT),
     "reimage": (FaultKind.THERMAL, FaultKind.NIC_DEGRADED, FaultKind.HOST_CPU,
-                FaultKind.MEM_ECC, FaultKind.NIC_DOWN),
+                FaultKind.MEM_ECC, FaultKind.NIC_DOWN,
+                FaultKind.COLLECTIVE_HANG, FaultKind.NIC_BROWNOUT),
 }
 # probability each stage actually clears an eligible fault
 REMEDIATION_P = {"gpu_reset": 0.5, "nic_reset": 0.5, "reboot": 0.6,
@@ -103,6 +123,11 @@ class FaultRates:
     host_cpu: float = 0.3e-3
     congestion: float = 3.0e-2       # transient, short-lived
     fail_stop: float = 4.7e-4        # background hard-failure rate
+    # hang-class arrivals default OFF: they freeze the job's collective,
+    # so runs opt in via scenarios or explicit rates (and rate-0 kinds
+    # draw no rng, keeping pre-existing runs bit-identical)
+    collective_hang: float = 0.0
+    nic_brownout: float = 0.0
     # mean time for an unmitigated grey fault to escalate to fail-stop
     escalation_mean_s: float = 90 * 3600.0
     # fraction of freshly provisioned nodes that are grey on arrival
@@ -119,6 +144,8 @@ class FaultRates:
             FaultKind.HOST_CPU: self.host_cpu,
             FaultKind.CONGESTION: self.congestion,
             FaultKind.FAIL_STOP: self.fail_stop,
+            FaultKind.COLLECTIVE_HANG: self.collective_hang,
+            FaultKind.NIC_BROWNOUT: self.nic_brownout,
         }[kind]
 
 
@@ -220,6 +247,8 @@ class FaultInjector:
         if f.kind == FaultKind.CONGESTION:
             self._cong_count[f.node] += 1
             self.congestion_factor[f.node] *= self._cong_mult(f.severity)
+        elif f.kind in HANG_KINDS:
+            self._refresh_hang(f.node)
 
     def _unregister(self, f: Fault) -> None:
         lst = self._by_node.get(f.node)
@@ -235,6 +264,22 @@ class FaultInjector:
                 self.congestion_factor[f.node] = 1.0   # exact recovery
             else:
                 self.congestion_factor[f.node] /= self._cong_mult(f.severity)
+        elif f.kind in HANG_KINDS:
+            self._refresh_hang(f.node)
+
+    def _refresh_hang(self, node: int) -> None:
+        """Recompute one node's hang phase from its remaining active
+        hang-class faults (never-enter outranks stalled)."""
+        phase = HANG_NONE
+        for f in self.active_faults(node):
+            if f.kind == FaultKind.COLLECTIVE_HANG:
+                phase = max(phase, HANG_NEVER_ENTER if f.device < 0
+                            else HANG_STALLED)
+            elif (f.kind == FaultKind.NIC_BROWNOUT
+                  and f.severity >= BROWNOUT_HANG_SEV):
+                phase = max(phase, HANG_STALLED)
+        self.fleet.hang_phase[node] = phase
+        self.fleet.state_version += 1
 
     def _apply(self, f: Fault) -> None:
         fl = self.fleet
@@ -262,6 +307,18 @@ class FaultInjector:
             pass                     # factor maintained by _register
         elif k == FaultKind.FAIL_STOP:
             fl.alive[n] = False
+        elif k == FaultKind.COLLECTIVE_HANG:
+            # hang_phase maintained by _register/_refresh_hang; a rank
+            # deadlocked INSIDE the collective (device >= 0) leaves
+            # observable error-counter creep on the stuck channel — the
+            # evidence the watchdog's entered-and-stalled verdict needs
+            if d >= 0:
+                fl.nic_err_count[n, d] += 400
+                fl.invalidate_link_state()
+        elif k == FaultKind.NIC_BROWNOUT:
+            fl.nic_quality[n, d] = 1.0 - (0.45 + 0.45 * s)
+            fl.nic_err_count[n, d] += 200 + 600 * s
+            fl.invalidate_link_state()
 
     def _revert(self, f: Fault, at: Optional[float] = None) -> None:
         if not f.active:
@@ -288,6 +345,11 @@ class FaultInjector:
             fl.host_factor[n] = 1.0
         elif k == FaultKind.CONGESTION:
             pass                     # factor maintained by _unregister
+        elif k == FaultKind.COLLECTIVE_HANG:
+            pass                     # hang_phase maintained by _unregister
+        elif k == FaultKind.NIC_BROWNOUT:
+            fl.nic_quality[n, d] = 1.0
+            fl.invalidate_link_state()
         f.active = False
         self._unregister(f)
 
@@ -398,8 +460,10 @@ class FaultInjector:
         kc = self._kind_count
         gpu = bool(kc[FaultKind.THERMAL][node] + kc[FaultKind.MEM_ECC][node])
         nic = bool(kc[FaultKind.NIC_DOWN][node] +
-                   kc[FaultKind.NIC_DEGRADED][node])
-        host = bool(kc[FaultKind.HOST_CPU][node])
+                   kc[FaultKind.NIC_DEGRADED][node] +
+                   kc[FaultKind.NIC_BROWNOUT][node])
+        host = bool(kc[FaultKind.HOST_CPU][node] +
+                    kc[FaultKind.COLLECTIVE_HANG][node])
         return ErrorSignals(gpu_errors=gpu, nic_errors=nic,
                             host_errors=host)
 

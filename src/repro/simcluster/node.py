@@ -71,6 +71,12 @@ class Fleet:
         self.nic_quality = np.ones((n, d))      # <1: degraded link
         self.host_factor = np.ones((n,))        # <1: bad CPU settings
         self.alive = np.ones((n,), bool)
+        # collective-hang phase (repro.ccltrace taxonomy): 0 = none,
+        # 1 = entered the collective and stalled inside it, 2 = wedged
+        # before the collective (never enters). Any nonzero phase on an
+        # active node deadlocks the job's blocking collective — steps
+        # stop completing until the node is pulled or the fault clears
+        self.hang_phase = np.zeros((n,), np.int8)
         # cumulative per-link transmit counters (Fig. 4 accounting);
         # materialized lazily from pending share-units (see nic_tx_bytes)
         self._nic_tx = np.zeros((n, d))

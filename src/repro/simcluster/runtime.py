@@ -34,6 +34,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.ccltrace import (CollectiveSpanTrace, HangWatchdog,
+                            WatchdogConfig)
 from repro.core.sweep import SweepConfig, multi_node_sweep, single_node_sweep
 from repro.diagnose import Diagnoser, RootCauseConfig, TimingTrace, Topology
 from repro.guard import (CheckpointTier, GuardSession, JobRestart,
@@ -85,6 +87,14 @@ class RunConfig:
     diagnose: bool = False
     trace_depth: int = 8
     rootcause_cfg: Optional[RootCauseConfig] = None
+    # collective-granular hang watchdog (repro.ccltrace): feed per-window
+    # spans into a CollectiveSpanTrace and poll the barrier-timeout
+    # watchdog when a window wedges — culprits are evicted, victims
+    # watched, and the job restarts instead of blocking until the blind
+    # framework-level CCL abort (``ccl_timeout_s``) fires
+    hang_watchdog: bool = False
+    hang_cfg: Optional[WatchdogConfig] = None
+    ccl_timeout_s: float = 600.0
     # manual grey-hunting model (tiers 1-2 have no online detection)
     manual_trigger_ratio: float = 1.12   # hour-mean step/healthy to notice
     manual_delay_h: Dict[int, float] = dataclasses.field(
@@ -137,6 +147,10 @@ class RunResult:
     # recovery accounting: MTTR decomposition over the run's
     # RecoveryEvents + fast-snapshot cadence + unique progress
     recovery: Dict = dataclasses.field(default_factory=dict)
+    # end-of-run node-pool census (NodeState value -> count) — the
+    # conservation check the property tests assert on: every node the
+    # run ever touched is in exactly one pool when it ends
+    pools: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 def _admission_check(cluster: SimCluster, nid: int, tier: Tier,
@@ -172,6 +186,12 @@ def simulate_run(cfg: RunConfig) -> RunResult:
         diagnoser = Diagnoser(trace,
                               topology or Topology.single(cfg.n_nodes),
                               cfg=cfg.rootcause_cfg)
+
+    watchdog = None
+    if cfg.hang_watchdog:
+        spans = CollectiveSpanTrace(depth=cfg.trace_depth)
+        cluster.attach_spans(spans)
+        watchdog = HangWatchdog(spans, cfg=cfg.hang_cfg)
 
     session = GuardSession.from_tier(
         tier, control=cluster, sweep_backend=cluster, sweep_cfg=sweep_cfg,
@@ -296,6 +316,64 @@ def simulate_run(cfg: RunConfig) -> RunResult:
             recover("fail-stop crash", rewind=True, node_alive=False,
                     replica_lost=replica_lost,
                     detect_s=cfg.crash_detect_s, drain_s=drain)
+            win_accum = 0
+            hour_steps, hour_sum = 0, 0.0
+            continue
+
+        # ---------------- hang path (wedged collective, no step samples)
+        if win["hung"]:
+            if win["steps_run"]:
+                step_chunks.append(win["step_times"])
+                total_steps += win["steps_run"]
+            incidents += 1
+            t_onset = cluster.t
+            pend = cluster.hang_pending()
+            window_s = cfg.window_steps * healthy_step
+            verdicts: List = []
+            if watchdog is not None:
+                # poll at window cadence: silence accrues against the
+                # per-group adaptive deadlines, bounded by the blind
+                # framework-level CCL abort
+                while not verdicts and \
+                        cluster.t - t_onset < cfg.ccl_timeout_s:
+                    cluster.advance_idle(window_s)
+                    downtime_s += window_s
+                    verdicts = watchdog.check(pend, cluster.t)
+            else:
+                # no ccltrace layer: nothing fires until the framework
+                # CCL abort kills the job blind
+                cluster.advance_idle(cfg.ccl_timeout_s)
+                downtime_s += cfg.ccl_timeout_s
+            detect_s = cluster.t - t_onset
+            if verdicts:
+                n_culprits = sum(len(v.culprits) for v in verdicts)
+                missing = max(0, n_culprits - session.spares_free)
+                if missing:
+                    # pool ran dry mid-incident: wait for delivery
+                    cluster.advance_idle(missing * cfg.provision_delay_s)
+                    downtime_s += missing * cfg.provision_delay_s
+                attributed = False
+                for v in verdicts:
+                    attributed |= v.attributed
+                    session.handle_hang(
+                        v, step=cluster.step,
+                        latency_windows=detect_s / window_s)
+                human_hours += cfg.auto_human_h[int(tier)]
+                # culprits left with their hardware faults attached; the
+                # quarantine -> sweep -> triage path owns them now (the
+                # hang-gated probes keep a still-wedged node from
+                # requalifying). Victims were merely blocked: they stay.
+                recover("collective hang (culprit evicted)" if attributed
+                        else "collective hang (no culprit attributed)",
+                        rewind=True, node_alive=True, detect_s=detect_s)
+            else:
+                # the watchdog never attributed within the CCL abort:
+                # blind framework restart, crash-grade human cost
+                crashes += 1
+                human_hours += cfg.crash_human_h[int(tier)]
+                session.mttf.observe_failure(cluster.t)
+                recover("collective hang (CCL timeout)", rewind=True,
+                        node_alive=True, detect_s=detect_s)
             win_accum = 0
             hour_steps, hour_sum = 0, 0.0
             continue
@@ -430,6 +508,9 @@ def simulate_run(cfg: RunConfig) -> RunResult:
     recovery_summary["wasted_steps"] = max(steps - good_steps, 0)
     recovery_summary["snap_interval_s"] = float(snap_interval) \
         if fast_tiers else 0.0
+    pools: Dict[str, int] = {}
+    for state in session.manager.state.values():
+        pools[state.value] = pools.get(state.value, 0) + 1
     return RunResult(
         tier=tier, elapsed_h=elapsed_h, active_h=active_h, steps=steps,
         crashes=crashes, mttf_h=mttf_h, mfu=float(mfu),
@@ -447,4 +528,4 @@ def simulate_run(cfg: RunConfig) -> RunResult:
                    for f in cluster.injector.faults],
         goodput_tflop_h=goodput_tflop_h(
             good_steps, cfg.workload.step_tflops, elapsed_h),
-        recovery=recovery_summary)
+        recovery=recovery_summary, pools=pools)

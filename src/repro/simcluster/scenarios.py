@@ -27,7 +27,8 @@ from typing import Dict, List, Optional, Sequence, Type
 
 import numpy as np
 
-from repro.simcluster.faults import Fault, FaultKind, GREY_KINDS
+from repro.simcluster.faults import (BROWNOUT_HANG_SEV, Fault, FaultKind,
+                                     GREY_KINDS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,4 +242,103 @@ class InitialGreyPopulation(Scenario):
             if rng.rand() < self.p:
                 kind = GREY_KINDS[rng.randint(len(GREY_KINDS))]
                 out.append(cluster.injector.inject(kind, nid, now=0.0))
+        return out
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class DeadlockedCollective(Scenario):
+    """A rank wedges around a blocking collective and the job's barrier
+    never completes (CCL-D's hang class): ``count`` sequential incidents
+    on distinct nodes, each either stuck BEFORE the collective (never
+    enters; device -1) or deadlocked INSIDE it (device >= 0, with
+    error-counter creep on the stuck channel). Ground truth for the
+    watchdog's culprit attribution."""
+
+    name = "deadlocked_collective"
+    at_h: float = 1.0            # first incident onset
+    count: int = 2               # sequential incidents
+    interval_h: float = 0.75     # spacing between incidents
+    never_enter_fraction: float = 0.5
+
+    def arm(self, cluster, rng) -> List[Fault]:
+        out = []
+        active = list(cluster.active)
+        n = min(self.count, len(active))
+        targets = rng.choice(active, size=n, replace=False)
+        for i, nid in enumerate(targets):
+            at = (self.at_h + i * self.interval_h) * 3600.0
+            never = rng.rand() < self.never_enter_fraction
+            dev = -1 if never else int(rng.randint(cluster.fleet.d))
+            f = self._emit(cluster, FaultKind.COLLECTIVE_HANG, int(nid), at,
+                           1.0, device=dev)
+            if f is not None:
+                out.append(f)
+        return out
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class PartialNicBrownout(Scenario):
+    """Link brownout across a switch neighbourhood: every node in the
+    block downtrains hard with error bursts, and the severe subset
+    (always at least the first node) brown out far enough to wedge the
+    in-flight collective — the all-entered hang whose attribution needs
+    link evidence rather than a missing rank."""
+
+    name = "partial_nic_brownout"
+    at_h: float = 1.0
+    group_size: int = 8
+    group_start: Optional[int] = None
+    severe_fraction: float = 0.35  # wedging (vs merely slow) fraction
+    stagger_s: float = 60.0        # per-node onset jitter
+
+    def arm(self, cluster, rng) -> List[Fault]:
+        out = []
+        for i, nid in enumerate(self._group(cluster, rng, self.group_size,
+                                            self.group_start)):
+            severe = i == 0 or rng.rand() < self.severe_fraction
+            sev = float(rng.uniform(BROWNOUT_HANG_SEV, 0.95)) if severe \
+                else float(rng.uniform(0.1, BROWNOUT_HANG_SEV - 0.1))
+            at = self.at_h * 3600.0 + float(rng.uniform(0, self.stagger_s))
+            f = self._emit(cluster, FaultKind.NIC_BROWNOUT, nid, at, sev,
+                           device=int(rng.randint(cluster.fleet.d)))
+            if f is not None:
+                out.append(f)
+        return out
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class StragglerTimeoutCascade(Scenario):
+    """A compute straggler degrades and then times out: a THERMAL fault
+    lands first, and ``lag_h`` later the same node wedges before the
+    collective entirely (data/compute watchdog timeout). ``count``
+    incidents on distinct nodes — the hang-after-slow pattern that makes
+    the slow-vs-hang split matter (the z-path alone sees only the slow
+    prologue, never the deadlock)."""
+
+    name = "straggler_timeout_cascade"
+    at_h: float = 1.0
+    count: int = 2
+    interval_h: float = 0.75
+    lag_h: float = 0.05          # slow prologue before the wedge
+    severity: float = 0.85       # thermal prologue severity
+
+    def arm(self, cluster, rng) -> List[Fault]:
+        out = []
+        active = list(cluster.active)
+        n = min(self.count, len(active))
+        targets = rng.choice(active, size=n, replace=False)
+        for i, nid in enumerate(targets):
+            at = (self.at_h + i * self.interval_h) * 3600.0
+            f = self._emit(cluster, FaultKind.THERMAL, int(nid), at,
+                           self.severity,
+                           device=int(rng.randint(cluster.fleet.d)))
+            if f is not None:
+                out.append(f)
+            f = self._emit(cluster, FaultKind.COLLECTIVE_HANG, int(nid),
+                           at + self.lag_h * 3600.0, 1.0, device=-1)
+            if f is not None:
+                out.append(f)
         return out

@@ -1,0 +1,368 @@
+"""repro.ccltrace tests: span ring buffers, the adaptive-deadline rule,
+the CCL-D culprit/victim decision table, the SimCluster hang surface,
+end-to-end watchdog runs, and the GuardStepHook liveness path."""
+import numpy as np
+import pytest
+
+from repro.ccltrace import (CollectiveSpanTrace, HangRole, HangWatchdog,
+                            PendingCollective, SpanWindow, WatchdogConfig,
+                            adaptive_deadline)
+from repro.guard import GuardStepHook
+from repro.simcluster import (DeadlockedCollective, FaultKind, FaultRates,
+                              PartialNicBrownout, RunConfig, SimCluster,
+                              StragglerTimeoutCascade, Tier, simulate_run)
+from repro.simcluster.faults import HANG_NEVER_ENTER, HANG_STALLED
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+
+
+def span(step, n=4, enter=1.0, exit_=2.0, ids=None, groups=None):
+    ids = np.arange(n, dtype=np.int64) if ids is None else ids
+    groups = np.zeros(n, np.int64) if groups is None else groups
+    return SpanWindow(t=60.0 * step, step=step, op="all_reduce",
+                      node_ids=ids, group_of=groups,
+                      enter=np.full(n, float(enter)),
+                      exit=np.full(n, float(exit_)))
+
+
+def pending(n=4, entered=None, suspect=None, groups=None, completed=None,
+            t_start=0.0):
+    entered = np.ones(n, bool) if entered is None else entered
+    suspect = np.zeros(n, bool) if suspect is None else suspect
+    groups = np.zeros(n, np.int64) if groups is None else groups
+    completed = np.zeros(n, bool) if completed is None else completed
+    return PendingCollective(
+        t_start=t_start, step=10, op="all_reduce",
+        node_ids=np.arange(n, dtype=np.int64), group_of=groups,
+        entered=entered,
+        enter_t=np.where(entered, t_start + 1.0, np.inf),
+        completed=completed, nic_suspect=suspect)
+
+
+# --------------------------------------------------------------- spans
+
+
+class TestSpanTrace:
+    def test_circular_rotation_keeps_depth_rows(self):
+        tr = CollectiveSpanTrace(depth=3)
+        for s in range(5):
+            tr.push(span(s, enter=1.0, exit_=2.0 + s))
+        assert len(tr) == 3 and tr.full
+        # order-invariant view holds exactly the last `depth` windows
+        assert sorted(tr.rows("exit")[:, 0]) == [4.0, 5.0, 6.0]
+        assert tr.last().step == 4
+
+    def test_duration_and_trailing(self):
+        tr = CollectiveSpanTrace(depth=4)
+        tr.push(span(0, enter=1.0, exit_=3.0))
+        tr.push(span(1, enter=1.0, exit_=6.0))
+        np.testing.assert_array_equal(tr.duration_rows()[:, 0], [2.0, 5.0])
+        np.testing.assert_array_equal(tr.trailing_duration(),
+                                      np.full(4, 5.0))
+
+    def test_resize_reallocates_and_bumps_generation(self):
+        tr = CollectiveSpanTrace(depth=3)
+        tr.push(span(0, n=4))
+        g = tr.generation
+        tr.push(span(1, n=6))
+        assert tr.generation == g + 1
+        assert len(tr) == 1 and tr.node_count == 6
+
+    def test_same_size_swap_backfills_changed_column_only(self):
+        tr = CollectiveSpanTrace(depth=3)
+        tr.push(span(0, enter=1.0, exit_=2.0))
+        tr.push(span(1, enter=1.0, exit_=4.0))
+        ids = np.arange(4, dtype=np.int64)
+        ids[2] = 99                          # node 2 swapped for spare 99
+        tr.push(span(2, enter=1.0, exit_=8.0, ids=ids))
+        assert tr.node_ids[2] == 99
+        # the swapped-in column's history is the new node's value — it
+        # never inherits its predecessor's spans; others keep theirs
+        assert set(tr.rows("exit")[:, 2]) == {8.0}
+        assert sorted(tr.rows("exit")[:, 0]) == [2.0, 4.0, 8.0]
+
+    def test_group_of_tracks_latest_push(self):
+        tr = CollectiveSpanTrace(depth=2)
+        tr.push(span(0, groups=np.array([0, 0, 1, 1])))
+        np.testing.assert_array_equal(tr.group_of, [0, 0, 1, 1])
+
+
+# ------------------------------------------------------------- deadline
+
+
+class TestAdaptiveDeadline:
+    def test_clamp_rule(self):
+        assert adaptive_deadline(10.0, 8.0, 30.0, 600.0) == 80.0
+        assert adaptive_deadline(1.0, 8.0, 30.0, 600.0) == 30.0   # floor
+        assert adaptive_deadline(500.0, 8.0, 30.0, 600.0) == 600.0  # cap
+
+    def test_cold_trace_falls_back_to_default(self):
+        wd = HangWatchdog(cfg=WatchdogConfig(default_deadline_s=120.0))
+        assert wd.group_deadline_s(None) == 120.0
+        assert wd.group_deadline_s(10.0) == 80.0
+
+    def test_min_history_gates_adaptive_rule(self):
+        tr = CollectiveSpanTrace(depth=4)
+        wd = HangWatchdog(tr, WatchdogConfig(min_history=2,
+                                             default_deadline_s=120.0))
+        tr.push(span(0))
+        assert wd._trailing(pending()) is None          # 1 < min_history
+        tr.push(span(1))
+        assert wd._trailing(pending()) is not None
+
+
+# -------------------------------------------------- decision table
+
+
+class TestClassification:
+    def cfg(self):
+        return WatchdogConfig(default_deadline_s=60.0)
+
+    def test_never_entered_is_culprit_arrivers_are_victims(self):
+        wd = HangWatchdog(cfg=self.cfg())
+        p = pending(entered=np.array([True, False, True, True]))
+        (v,) = wd.check(p, now=100.0)
+        assert v.culprits == (1,) and sorted(v.victims) == [0, 2, 3]
+        assert v.roles[1] is HangRole.CULPRIT_NEVER_ENTERED
+        assert v.roles[0] is HangRole.VICTIM
+        assert v.attributed
+
+    def test_all_entered_with_link_evidence_is_stalled_culprit(self):
+        wd = HangWatchdog(cfg=self.cfg())
+        p = pending(suspect=np.array([False, False, True, False]))
+        (v,) = wd.check(p, now=100.0)
+        assert v.culprits == (2,)
+        assert v.roles[2] is HangRole.CULPRIT_STALLED
+
+    def test_all_entered_no_evidence_detects_without_attributing(self):
+        """Everyone arrived, no link evidence: nobody is accused —
+        detection without attribution beats a false eviction."""
+        wd = HangWatchdog(cfg=self.cfg())
+        (v,) = wd.check(pending(), now=100.0)
+        assert v.culprits == ()
+        assert sorted(v.victims) == [0, 1, 2, 3]
+        assert not v.attributed
+
+    def test_completed_group_excluded_from_verdict(self):
+        wd = HangWatchdog(cfg=self.cfg())
+        groups = np.array([0, 0, 1, 1], np.int64)
+        p = pending(groups=groups,
+                    entered=np.array([True, False, True, True]),
+                    completed=np.array([False, False, True, True]))
+        verdicts = wd.check(p, now=100.0)
+        assert len(verdicts) == 1 and verdicts[0].group == 0
+        assert 2 not in verdicts[0].roles and 3 not in verdicts[0].roles
+
+    def test_not_overdue_and_dedup(self):
+        wd = HangWatchdog(cfg=self.cfg())
+        p = pending()
+        assert wd.check(p, now=30.0) == []              # under deadline
+        assert len(wd.check(p, now=100.0)) == 1
+        assert wd.check(p, now=200.0) == []             # already fired
+        # a NEW hang (different onset) fires again
+        assert len(wd.check(pending(t_start=500.0), now=600.0)) == 1
+
+
+# ------------------------------------------------------ sim surface
+
+
+class TestSimHangSurface:
+    def cluster(self, **kw):
+        kw.setdefault("rates", QUIET)
+        return SimCluster(n_active=8, n_spare=2, **kw)
+
+    def test_collective_hang_sets_phase_and_wedges_window(self):
+        c = self.cluster()
+        c.injector.inject(FaultKind.COLLECTIVE_HANG, 3, device=-1,
+                          severity=1.0)
+        assert c.fleet.hang_phase[3] == HANG_NEVER_ENTER
+        win = c.run_window(6)
+        assert win["hung"] and win["steps_run"] == 0
+
+    def test_brownout_severity_controls_hang(self):
+        c = self.cluster()
+        c.injector.inject(FaultKind.NIC_BROWNOUT, 2, device=0,
+                          severity=0.9)
+        c.injector.inject(FaultKind.NIC_BROWNOUT, 5, device=0,
+                          severity=0.2)
+        assert c.fleet.hang_phase[2] == HANG_STALLED
+        assert c.fleet.hang_phase[5] == 0   # mild brownout: slow, not hung
+
+    def test_phase_clears_when_fault_reverts(self):
+        c = self.cluster()
+        f = c.injector.inject(FaultKind.COLLECTIVE_HANG, 3, device=-1)
+        c.injector._revert(f)
+        assert c.fleet.hang_phase[3] == 0
+        assert not c.run_window(6)["hung"]
+
+    def test_hang_pending_snapshot(self):
+        c = self.cluster()
+        c.injector.inject(FaultKind.COLLECTIVE_HANG, 1, device=-1)
+        pend = c.hang_pending()
+        assert pend is not None
+        row = int(np.flatnonzero(pend.node_ids == 1)[0])
+        assert not pend.entered[row] and np.isinf(pend.enter_t[row])
+        assert pend.entered[[i for i in range(8) if i != row]].all()
+
+    def test_entered_stalled_hang_carries_link_evidence(self):
+        """A device>=0 wedge must leave observable NIC evidence, or the
+        all-entered verdict could never attribute."""
+        c = self.cluster()
+        c.injector.inject(FaultKind.COLLECTIVE_HANG, 4, device=1)
+        pend = c.hang_pending()
+        row = int(np.flatnonzero(pend.node_ids == 4)[0])
+        assert pend.entered[row] and pend.nic_suspect[row]
+
+    def test_probes_fail_while_wedged_scalar_and_batch_identical(self):
+        c = self.cluster()
+        c.injector.inject(FaultKind.COLLECTIVE_HANG, 3, device=-1)
+        assert c.compute_probe(3, 0, 1.0) == 0.0
+        batch = c.batch_compute_probe([2, 3, 4], 1.0)
+        # exact zeros for the wedged node keep the batched-vs-scalar
+        # bit-identity contract; healthy rows stay live
+        assert (batch[1] == 0.0).all()
+        assert (batch[0] > 0.0).all() and (batch[2] > 0.0).all()
+
+    def test_span_feed_from_run_window(self):
+        c = self.cluster()
+        tr = CollectiveSpanTrace(depth=4)
+        c.attach_spans(tr)
+        for _ in range(3):
+            c.run_window(6)
+            c.collect()
+        assert len(tr) == 3 and tr.node_count == 8
+        # enter precedes exit everywhere: durations strictly positive
+        assert (tr.duration_rows() > 0).all()
+
+
+# ---------------------------------------------------- end-to-end
+
+
+class TestEndToEnd:
+    def run(self, scen, hours=3.0, watchdog=True):
+        return simulate_run(RunConfig(
+            tier=Tier.ENHANCED, n_nodes=32, n_spare=6, duration_h=hours,
+            dp_group_size=8, diagnose=True, hang_watchdog=watchdog,
+            initial_grey_p=0.0, rates=QUIET, scenarios=(scen,), seed=11))
+
+    def test_deadlock_attributed_and_evicted(self):
+        r = self.run(DeadlockedCollective(at_h=0.5, count=1))
+        hangs = [e for e in r.events if e["kind"] == "hang"]
+        assert hangs
+        truth = {f["node"] for f in r.fault_log
+                 if f["kind"] == "collective_hang"}
+        culprits = {c for e in hangs for c in e["culprits"]}
+        assert culprits == truth
+        evicted = {e["old"] for e in r.events
+                   if e["kind"] == "swap" and "hang" in e["reason"]}
+        assert truth <= evicted
+        # the job kept training after the eviction
+        assert r.steps > 200
+
+    def test_victims_watched_never_evicted(self):
+        r = self.run(PartialNicBrownout(at_h=0.5, group_size=4))
+        hangs = [e for e in r.events if e["kind"] == "hang"]
+        assert hangs
+        # within one verdict culprits and victims are disjoint
+        for e in hangs:
+            assert not (set(e["culprits"]) & set(e["victims"]))
+        # every hang-reason eviction hit a genuinely faulted node: ranks
+        # that never carried a hang-class fault (pure barrier victims)
+        # are never pulled
+        faulted = {f["node"] for f in r.fault_log
+                   if f["kind"] in ("collective_hang", "nic_brownout")}
+        hang_swaps = {e["old"] for e in r.events
+                      if e["kind"] == "swap" and "hang" in e["reason"]}
+        assert hang_swaps <= faulted
+        victims = {v for e in hangs for v in e["victims"]}
+        assert not ((victims - faulted) & hang_swaps)
+        # hang-victim diagnoses were held, not evicted
+        held = [e for e in r.events if e["kind"] == "diagnosis"
+                and e["root_cause"] == "hang_victim"]
+        assert all(e["held"] for e in held)
+
+    def test_cascade_slow_then_hang(self):
+        # short lag: the wedge must land before online detection evicts
+        # the thermal straggler (a long prologue lets the z-path win)
+        r = self.run(StragglerTimeoutCascade(at_h=0.5, count=1,
+                                             lag_h=0.02))
+        hangs = [e for e in r.events if e["kind"] == "hang"]
+        assert hangs
+        assert all(e["latency_windows"] <= 3.0 for e in hangs)
+
+    def test_no_watchdog_rides_out_blind_ccl_timeout(self):
+        r = self.run(DeadlockedCollective(at_h=0.5, count=1),
+                     watchdog=False)
+        blind = [e for e in r.events if e["kind"] == "restart"
+                 and "CCL timeout" in e["reason"]]
+        assert blind                       # legacy behavior preserved
+        assert not [e for e in r.events if e["kind"] == "hang"]
+
+    def test_deterministic(self):
+        cfg = RunConfig(tier=Tier.ENHANCED, n_nodes=24, n_spare=4,
+                        duration_h=2.0, dp_group_size=8, diagnose=True,
+                        hang_watchdog=True, initial_grey_p=0.0,
+                        rates=QUIET, seed=5,
+                        scenarios=(DeadlockedCollective(at_h=0.5,
+                                                        count=1),))
+        a, b = simulate_run(cfg), simulate_run(cfg)
+        assert a.events == b.events and a.steps == b.steps
+
+
+# ------------------------------------------------------ hook liveness
+
+
+class TestHookLiveness:
+    def hook(self, **kw):
+        kw.setdefault("window_steps", 3)
+        kw.setdefault("warmup_windows", 0)
+        return GuardStepHook(node_id=0, n_peers=7, **kw)
+
+    def test_deadline_floor_before_baseline(self):
+        h = self.hook(step_deadline_s=200.0)
+        assert h.step_deadline() == 200.0
+
+    def test_deadline_adapts_to_baseline(self):
+        h = self.hook()
+        for s in range(6):
+            h(s, 10.0, {})
+        # baseline ~10 s -> deadline = clamp(8 * 10, 300, 3600) = floor
+        assert h.step_deadline() == 300.0
+        h2 = self.hook(step_deadline_s=30.0)
+        for s in range(6):
+            h2(s, 10.0, {})
+        assert h2.step_deadline() == pytest.approx(80.0, rel=0.2)
+
+    def test_fresh_steps_keep_liveness_quiet(self):
+        h = self.hook()
+        for s in range(6):
+            h(s, 10.0, {})
+        assert not h.check_liveness()
+        assert h.hangs_detected == 0
+
+    def test_silence_past_deadline_fires_hang_and_restart(self):
+        h = self.hook(step_deadline_s=100.0)
+        for s in range(6):
+            h(s, 10.0, {})
+        h.control.t += 101.0               # a step never completes
+        assert h.check_liveness()
+        assert h.hangs_detected == 1 and h.restarts_requested == 1
+        hangs = h.session.trace.of_kind("hang")
+        assert len(hangs) == 1
+        ev = hangs[0]
+        assert ev.op == "step" and ev.victims == (0,)
+        assert ev.culprits == ()           # single-host view: no blame
+        assert ev.waited_s >= ev.deadline_s
+        # firing resets the clock: no immediate double-fire
+        assert not h.check_liveness()
+
+    def test_restart_resets_liveness_clock(self):
+        h = self.hook(step_deadline_s=100.0)
+        for s in range(6):
+            h(s, 10.0, {})
+        h.control.t += 99.0
+        h.on_restart(6)
+        h.control.t += 50.0                # 50 s since restart, not 149
+        assert not h.check_liveness()

@@ -7,7 +7,10 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.detector import DetectorConfig, StragglerDetector, robust_z
 from repro.core.telemetry import Frame
-from repro.simcluster import FaultKind, FaultRates, SimCluster, freq_at_temp
+from repro.simcluster import (DeadlockedCollective, FaultKind, FaultRates,
+                              PartialNicBrownout, RunConfig, SimCluster,
+                              StragglerTimeoutCascade, Tier, freq_at_temp,
+                              simulate_run)
 from repro.train.data import DataConfig, SyntheticLM
 
 QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
@@ -119,6 +122,54 @@ def test_step_time_lower_bounded_by_healthy(seed):
     c.fleet.advance_thermals(3600)
     t = c.node_barrier_times()
     assert t.max() >= healthy * 0.95
+
+
+# ------------------------------------------------------------- ccltrace
+
+
+@given(st.integers(0, 2), st.integers(0, 1000),
+       st.sampled_from(["none", "rack_thermal", "congestion_storm",
+                        "maintenance_window"]))
+@settings(max_examples=8, deadline=None)
+def test_hang_watchdog_invariants_under_composition(which, seed, extra):
+    """Random hang scenario composed with a random pre-existing fault
+    scenario: the watchdog must (1) leak no nodes between pools, (2)
+    never evict a rank that never carried a hang-class fault, and (3)
+    resolve every injected deadlock — attributed-and-evicted, or the
+    node left the job some other way (crash/eviction) first."""
+    hang = [DeadlockedCollective(at_h=0.4, count=1 + seed % 2,
+                                 interval_h=0.4),
+            PartialNicBrownout(at_h=0.4, group_size=4),
+            StragglerTimeoutCascade(at_h=0.4, count=1, lag_h=0.02)][which]
+    scenarios = (hang,) if extra == "none" else (hang, extra)
+    r = simulate_run(RunConfig(
+        tier=Tier.ENHANCED, n_nodes=16, n_spare=4, duration_h=2.5,
+        dp_group_size=8, diagnose=True, hang_watchdog=True,
+        initial_grey_p=0.0, rates=QUIET, scenarios=scenarios, seed=seed))
+
+    # (1) pool conservation: the job is always full at run end, and the
+    # census never invents or loses nodes
+    assert r.pools.get("active", 0) == 16
+    assert all(v >= 0 for v in r.pools.values())
+
+    # (2) no hang-victim eviction: every hang-reason swap pulled a node
+    # that genuinely carried a hang-class fault at some point
+    faulted = {f["node"] for f in r.fault_log
+               if f["kind"] in ("collective_hang", "nic_brownout")}
+    hang_swaps = {e["old"] for e in r.events
+                  if e["kind"] == "swap" and "hang" in e["reason"]}
+    assert hang_swaps <= faulted
+
+    # (3) every injected deadlock resolves: culprit-attributed, or the
+    # node was already out of the job (evicted/crashed) when it fired
+    culprits = {c for e in r.events if e["kind"] == "hang"
+                for c in e["culprits"]}
+    gone = {e["old"] for e in r.events if e["kind"] == "swap"} | \
+        {n for e in r.events if e["kind"] == "crash"
+         for n in e["nodes"]}
+    for f in r.fault_log:
+        if f["kind"] == "collective_hang":
+            assert f["node"] in culprits | gone
 
 
 # ------------------------------------------------------------- data

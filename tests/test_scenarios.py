@@ -5,9 +5,11 @@ import pytest
 
 from repro.core import FleetAssessment, StragglerDetector
 from repro.simcluster.node import Fleet
-from repro.simcluster import (CongestionStorm, FaultKind, FaultRates,
+from repro.simcluster import (CongestionStorm, DeadlockedCollective,
+                              FaultKind, FaultRates,
                               InitialGreyPopulation, MaintenanceWindow,
-                              RackThermal, RunConfig, SimCluster,
+                              PartialNicBrownout, RackThermal, RunConfig,
+                              SimCluster, StragglerTimeoutCascade,
                               SwitchFailure, Tier, arm_all,
                               builtin_scenarios, scenario, simulate_run)
 
@@ -27,7 +29,18 @@ class TestRegistry:
     def test_builtins_registered(self):
         names = set(builtin_scenarios())
         assert {"rack_thermal", "switch_failure", "congestion_storm",
-                "maintenance_window", "initial_grey"} <= names
+                "maintenance_window", "initial_grey",
+                "deadlocked_collective", "partial_nic_brownout",
+                "straggler_timeout_cascade"} <= names
+
+    def test_hang_scenarios_by_name_with_overrides(self):
+        sc = scenario("deadlocked_collective", at_h=0.25, count=3)
+        assert isinstance(sc, DeadlockedCollective)
+        assert sc.at_h == 0.25 and sc.count == 3
+        assert isinstance(scenario("partial_nic_brownout"),
+                          PartialNicBrownout)
+        assert isinstance(scenario("straggler_timeout_cascade"),
+                          StragglerTimeoutCascade)
 
     def test_lookup_by_name_with_overrides(self):
         sc = scenario("rack_thermal", at_h=1.0, rack_size=4)
@@ -129,6 +142,59 @@ class TestBuiltinScenarios:
         assert 5 <= len(faults) <= 27          # ~Binomial(32, .5)
         assert all(f.node in c.active for f in faults)
         assert all(f.kind != FaultKind.FAIL_STOP for f in faults)
+
+    def test_deadlocked_collective_hits_distinct_nodes(self):
+        c = cluster()
+        rng = np.random.RandomState(6)
+        DeadlockedCollective(at_h=0.1, count=3,
+                             interval_h=0.25).arm(c, rng)
+        c.advance_idle(0.7 * 3600.0)       # past the last scheduled onset
+        faults = [f for f in c.injector.faults
+                  if f.kind == FaultKind.COLLECTIVE_HANG]
+        assert len(faults) == 3
+        assert len({f.node for f in faults}) == 3
+        # incidents are sequential, not simultaneous
+        onsets = sorted(f.t_start for f in faults)
+        assert onsets[1] - onsets[0] == pytest.approx(900.0)
+        assert (c.fleet.hang_phase[[f.node for f in faults]] > 0).all()
+
+    def test_partial_nic_brownout_first_node_always_wedges(self):
+        from repro.simcluster import BROWNOUT_HANG_SEV
+        from repro.simcluster.faults import HANG_STALLED
+        c = cluster()
+        rng = np.random.RandomState(7)
+        PartialNicBrownout(at_h=0.0, group_size=8,
+                           group_start=4).arm(c, rng)
+        c.advance_idle(120.0)              # past the onset stagger
+        faults = [f for f in c.injector.faults
+                  if f.kind == FaultKind.NIC_BROWNOUT]
+        assert len(faults) == 8
+        assert {f.node for f in faults} == set(range(4, 12))
+        by_node = {f.node: f for f in faults}
+        assert by_node[4].severity >= BROWNOUT_HANG_SEV
+        assert c.fleet.hang_phase[4] == HANG_STALLED
+        # the whole block's links degraded (brownout, not just the wedge)
+        assert (c.fleet.node_comm_factor()[4:12] < 1.0).all()
+
+    def test_straggler_timeout_cascade_pairs_thermal_with_wedge(self):
+        c = cluster()
+        rng = np.random.RandomState(8)
+        StragglerTimeoutCascade(at_h=0.0, count=2, interval_h=0.1,
+                                lag_h=0.05).arm(c, rng)
+        c.advance_idle(900.0)              # past both incidents + wedge lag
+        faults = [f for f in c.injector.faults
+                  if f.kind in (FaultKind.THERMAL,
+                                FaultKind.COLLECTIVE_HANG)]
+        kinds = sorted(f.kind.value for f in faults)
+        assert kinds == ["collective_hang", "collective_hang",
+                         "thermal", "thermal"]
+        for node in {f.node for f in faults}:
+            mine = sorted((f for f in faults if f.node == node),
+                          key=lambda f: f.t_start)
+            assert mine[0].kind == FaultKind.THERMAL
+            assert mine[1].kind == FaultKind.COLLECTIVE_HANG
+            assert mine[1].t_start - mine[0].t_start == \
+                pytest.approx(180.0)
 
     def test_simulate_run_consumes_scenarios(self):
         r = simulate_run(RunConfig(
