@@ -20,7 +20,10 @@ Scoring against the injector's fault log (``RunResult.fault_log``):
   victims     evictions of nodes with NO active fault — must be ZERO
               (the false-eviction reduction the subsystem exists for)
   overhead    what-if + classification cost per diagnosed window at
-              1024 nodes — must stay under 1 ms (array-native budget)
+              1024 nodes (mean under 1 ms) and at 16384 nodes (p50
+              under the same 1 ms — steady-state windows reuse verdict
+              records; the first diagnosing window pays the O(flagged)
+              materialization by design)
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_diagnose [--quick]
           [--out PATH]
@@ -254,6 +257,10 @@ def main(argv=None) -> int:
     lane_accuracy = lane_ok / max(tp, 1)
 
     overhead = overhead_bench()
+    # scaled overhead: same gate at 16k nodes, scored on the p50 —
+    # steady-state windows reuse verdict records, so only the first
+    # diagnosing window pays the O(flagged) materialization cost
+    overhead_16k = overhead_bench(n=16384, windows=30, group=512)
     out = {
         "benchmark": "guard_diagnose",
         "mode": "quick" if args.quick else "full",
@@ -267,10 +274,12 @@ def main(argv=None) -> int:
             "victims_evicted": victims,
         },
         "overhead": overhead,
+        "overhead_16k": overhead_16k,
         "gates": {
             "precision_min": PRECISION_GATE,
             "recall_min": RECALL_GATE,
             "overhead_ms_max": OVERHEAD_GATE_MS,
+            "overhead_16k_p50_ms_max": OVERHEAD_GATE_MS,
             "victims_evicted_max": 0,
         },
         "total_wall_s": time.perf_counter() - t0,
@@ -290,6 +299,10 @@ def main(argv=None) -> int:
     print(f"overhead @{overhead['n_nodes']} nodes: "
           f"{overhead['ms_per_window_mean']:.3f} ms/window "
           f"(gate {OVERHEAD_GATE_MS} ms)")
+    print(f"overhead @{overhead_16k['n_nodes']} nodes: "
+          f"p50 {overhead_16k['ms_per_window_p50']:.3f} / "
+          f"mean {overhead_16k['ms_per_window_mean']:.3f} ms/window "
+          f"(p50 gate {OVERHEAD_GATE_MS} ms)")
 
     ok = True
     if precision < PRECISION_GATE:
@@ -307,6 +320,11 @@ def main(argv=None) -> int:
     if overhead["ms_per_window_mean"] > OVERHEAD_GATE_MS:
         print(f"FAIL: attribution overhead "
               f"{overhead['ms_per_window_mean']:.3f} ms/window > "
+              f"{OVERHEAD_GATE_MS}", file=sys.stderr)
+        ok = False
+    if overhead_16k["ms_per_window_p50"] > OVERHEAD_GATE_MS:
+        print(f"FAIL: 16k attribution overhead p50 "
+              f"{overhead_16k['ms_per_window_p50']:.3f} ms/window > "
               f"{OVERHEAD_GATE_MS}", file=sys.stderr)
         ok = False
 

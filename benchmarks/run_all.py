@@ -173,7 +173,7 @@ def main(argv=None) -> int:
     print(f"\nordering: {ordering}")
     for d in scale["detector"]:
         print(f"detector @{d['n_nodes']:>6d} nodes: "
-              f"{d['us_per_window_p50']:.0f}µs/window, "
+              f"{d['ms_per_window_p50']:.2f}ms/window, "
               f"{d['objects_per_window_max']} objects")
     hp = hang["pooled"]
     print(f"hang watchdog: precision {hp['precision']:.3f}, "

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.core.telemetry import (HARDWARE_METRICS, METRIC_DIRECTION, Frame,
                                   RingHistory)
+from repro.kernels.fleet_score import score_rows
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +46,7 @@ class DetectorConfig:
     stall_factor: float = 5.0    # step_time > stall_factor x median = stall
     clear_windows: int = 3       # hysteresis: clean windows to unflag
     mad_floor_frac: float = 0.01 # MAD floor as a fraction of the median
+    scorer: str = "numpy"        # fleet_score backend: numpy | jax | pallas
 
 
 @dataclasses.dataclass
@@ -166,60 +168,36 @@ class StragglerDetector:
         # row's peer-relative deviation verdicts never change once scored
         # (peer medians are within-row), so one window costs one new row of
         # medians instead of depth x metrics of them. Replacement backfill
-        # and reallocation rescore everything (rare).
+        # and reallocation rescore everything (rare). All caches are
+        # float32 end-to-end — the fleet_score kernel contract.
         self._gen = -1                      # history generation scored
         self._dev3: Optional[np.ndarray] = None  # (M, depth, N) bool
         self._rel: Optional[np.ndarray] = None  # (depth, N) step_time rel
         self._contrib: Optional[np.ndarray] = None  # (depth, N) masked rel
         self._metric_list: List[str] = []
-        self._dirs: Optional[np.ndarray] = None
+        self._dirs: tuple = ()
         self._st_j: Optional[int] = None
-        self._row_mat: Optional[np.ndarray] = None   # (M, N) scratch
-        self._med_scratch: Optional[np.ndarray] = None
+        self._rows_mat: Optional[np.ndarray] = None  # (depth, M, N) scratch
 
     # ------------------------------------------------------------ core
 
-    @staticmethod
-    def _row_median(mat: np.ndarray, scratch: np.ndarray) -> np.ndarray:
-        """(M, 1) median along axis 1 via one partition into ``scratch``.
-
-        Identical result to ``np.median(mat, axis=1, keepdims=True)``:
-        even length averages the two middle order statistics the same way
-        ((a + b) / 2), without np.median's per-call copies and dispatch."""
-        n = mat.shape[1]
-        h = n // 2
-        scratch[:] = mat
-        if n % 2:
-            scratch.partition(h, axis=1)
-            return scratch[:, h:h + 1].copy()
-        scratch.partition((h - 1, h), axis=1)
-        return (scratch[:, h - 1:h] + scratch[:, h:h + 1]) / 2.0
-
-    def _score_row(self, row: int) -> None:
-        """Score one ring-buffer row for every metric (peer-relative
-        robust-z deviation + step-time relative excess) in one stacked
-        (M, N) pass — bit-identical to the per-metric matrix formulation
-        because every op reduces along the peer axis independently."""
+    def _score_rows(self, rows: np.ndarray) -> None:
+        """Score ring-buffer rows (peer-relative robust-z deviation +
+        step-time relative excess) in one fused (R, M, N) pass through
+        ``repro.kernels.fleet_score`` — every op reduces along the peer
+        axis independently, so batching rows changes no verdict."""
         cfg = self.cfg
-        mats = self._row_mat                       # (M, N) scratch
+        mats = self._rows_mat[:len(rows)]          # (R, M, N) f32 scratch
         for j, m in enumerate(self._metric_list):
-            mats[j] = self.history.rows_raw(m)[row]
-        med = self._row_median(mats, self._med_scratch)
-        diff = mats - med
-        mad = self._row_median(np.abs(diff), self._med_scratch)
-        floor = np.maximum(np.abs(med) * cfg.mad_floor_frac, 1e-9)
-        scale = np.maximum(mad / 0.6745, floor)
-        z = (diff / scale) * self._dirs
-        devrow = z > cfg.z_threshold
-        st = self._st_j
-        if st is not None:
-            rel = mats[st] / max(float(med[st, 0]), 1e-9) - 1.0
-            self._rel[row] = rel
-            devrow[st] &= rel > cfg.slowdown_floor
-            # per-row slowdown contribution, pre-masked (summed
-            # chronologically in update())
-            self._contrib[row] = np.where(devrow[st], rel, 0.0)
-        self._dev3[:, row] = devrow
+            mats[:, j] = self.history.rows_raw(m)[rows]
+        dev, rel, contrib = score_rows(
+            mats, self._dirs, self._st_j,
+            z_threshold=cfg.z_threshold, slowdown_floor=cfg.slowdown_floor,
+            mad_floor_frac=cfg.mad_floor_frac, backend=cfg.scorer)
+        self._dev3[:, rows] = np.swapaxes(dev, 0, 1)
+        if self._st_j is not None:
+            self._rel[rows] = rel
+            self._contrib[rows] = contrib
 
     def _sync_scores(self) -> None:
         """Bring the per-row caches up to date after a push."""
@@ -227,26 +205,23 @@ class StragglerDetector:
         if hist.generation != self._gen:
             self._gen = hist.generation
             n = len(hist.last().node_ids)
+            m = len(hist.metric_names())
             self._metric_list = list(hist.metric_names())
-            self._dirs = np.asarray(
-                [METRIC_DIRECTION[m] for m in self._metric_list],
-                float)[:, None]
-            self._metric_idx = {m: j
-                                for j, m in enumerate(self._metric_list)}
+            self._dirs = tuple(float(METRIC_DIRECTION[k])
+                               for k in self._metric_list)
+            self._metric_idx = {k: j
+                                for j, k in enumerate(self._metric_list)}
             self._st_j = self._metric_idx.get("step_time")
-            self._row_mat = np.empty((len(self._metric_list), n))
-            self._med_scratch = np.empty_like(self._row_mat)
-            self._dev3 = np.empty((len(self._metric_list), hist.depth, n),
-                                  bool)
-            self._rel = np.empty((hist.depth, n))
-            self._contrib = np.empty((hist.depth, n))
-            rows = range(len(hist))
+            self._rows_mat = np.empty((hist.depth, m, n), np.float32)
+            self._dev3 = np.empty((m, hist.depth, n), bool)
+            self._rel = np.empty((hist.depth, n), np.float32)
+            self._contrib = np.empty((hist.depth, n), np.float32)
+            rows = np.arange(len(hist))
         elif hist.last_backfill is not None:
-            rows = range(len(hist))          # backfill rescored everything
+            rows = np.arange(len(hist))      # backfill rescored everything
         else:
-            rows = (hist.last_row,)
-        for row in rows:
-            self._score_row(row)
+            rows = np.asarray([hist.last_row])
+        self._score_rows(rows)
 
     def _realign_state(self, node_ids: np.ndarray) -> None:
         """Carry latch state over a fleet membership change by id."""
@@ -298,8 +273,10 @@ class StragglerDetector:
         # bit-stable against the ring buffer's write position.
         order = self.history._order()
         slow_sum = self._contrib[order].sum(0)
-        slowdown = np.where(step_deviant,
-                            slow_sum / np.maximum(dev_count, 1), 0.0)
+        slowdown = np.where(
+            step_deviant,
+            slow_sum / np.maximum(dev_count, 1).astype(np.float32),
+            np.float32(0.0))
 
         # --- stalls: no heartbeat or grossly inflated latest step
         last = self.history.last()
@@ -336,12 +313,16 @@ class StragglerDetector:
 
     def latched_many(self, ids: np.ndarray) -> np.ndarray:
         """Vectorized ``is_latched`` over an id array: O(latched + len)
-        instead of one fleet scan per query."""
-        lat = set()
-        if self._state_ids is not None:
-            lat.update(int(n) for n in self._state_ids[self._latched])
-        lat.update(n for n, st in self._off.items() if st[0])
-        return np.fromiter((int(i) in lat for i in ids), bool, len(ids))
+        numpy set membership instead of one fleet scan (or one Python
+        set probe) per query."""
+        ids = np.asarray(ids)
+        out = np.zeros(len(ids), bool)
+        if self._state_ids is not None and self._latched.any():
+            out |= np.isin(ids, self._state_ids[self._latched])
+        off_lat = [n for n, st in self._off.items() if st[0]]
+        if off_lat:
+            out |= np.isin(ids, np.asarray(off_lat, dtype=ids.dtype))
+        return out
 
     def is_latched(self, node_id: int) -> bool:
         """Public latch query: is this node currently flagged (with
@@ -362,6 +343,16 @@ class StragglerDetector:
             ids.update(int(n) for n in self._state_ids[self._latched])
         ids.update(n for n, st in self._off.items() if st[0])
         return sorted(ids)
+
+    def memory_nbytes(self) -> int:
+        """Resident detector footprint: ring buffers, score caches,
+        scratch and latch arrays (the scale benchmark's memory report)."""
+        total = self.history.nbytes
+        for a in (self._rows_mat, self._dev3, self._rel, self._contrib,
+                  self._latched, self._clean, self._state_ids):
+            if a is not None:
+                total += a.nbytes
+        return total
 
     def reset_node(self, node_id: int) -> None:
         """Forget latch state (node replaced/repaired)."""

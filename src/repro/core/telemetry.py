@@ -98,7 +98,10 @@ class RingHistory:
 
     def _alloc(self, frame: Frame) -> None:
         n = len(frame.node_ids)
-        self._bufs = {m: np.empty((self.depth, n)) for m in frame.metrics}
+        # float32: halves the resident window at 100k nodes and matches
+        # the fleet_score kernel's end-to-end f32 contract
+        self._bufs = {m: np.empty((self.depth, n), np.float32)
+                      for m in frame.metrics}
         self._valid = np.empty((self.depth, n), bool)
         self._ids = frame.node_ids.copy()
         self._used = 0
@@ -139,6 +142,14 @@ class RingHistory:
     def last_row(self) -> int:
         """Buffer row index the most recent push wrote."""
         return (self._head - 1) % self.depth
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the circular buffers (memory report)."""
+        total = sum(b.nbytes for b in self._bufs.values())
+        if self._valid is not None:
+            total += self._valid.nbytes
+        return total
 
     def __len__(self) -> int:
         return self._used

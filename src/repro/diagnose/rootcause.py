@@ -184,6 +184,19 @@ class Diagnoser:
         self.last_fleet: Optional[FleetDiagnosis] = None
         self.windows_diagnosed = 0
         self.last_cost_s = 0.0
+        # per-row comm-deviation cache aligned with the trace's circular
+        # buffer: a row's peer-median comparison never changes once
+        # written, so steady state re-medians one new row per window
+        # instead of the whole (depth, N) buffer
+        self._comm_gen = -1
+        self._comm_seen = 0                     # trace.pushes consumed
+        self._comm_dev: Optional[np.ndarray] = None   # (depth, N) bool
+        # steady-state verdict reuse: when the flagged set and its cause
+        # codes repeat, last window's record dict is returned as-is
+        self._prev_fi: Optional[np.ndarray] = None
+        self._prev_causes: Optional[np.ndarray] = None
+        self._prev_ids: Optional[np.ndarray] = None
+        self._prev_records: Dict[int, Diagnosis] = {}
 
     # ------------------------------------------------------------- core
 
@@ -194,6 +207,7 @@ class Diagnoser:
             self.last_fleet = None
             # nodes that cleared may re-flag later: re-emit then
             self._emitted.clear()
+            self._prev_fi = None
             return None
         trace = self.trace
         if len(trace) < self.cfg.min_windows or \
@@ -211,32 +225,35 @@ class Diagnoser:
         topo = self.topology or Topology.single(len(own))
         rep = whatif(own, topo, ref_own=fast_median(own))
         wall = own + stall
-        stall_share = stall / np.maximum(wall, 1e-9)
+        np.maximum(wall, 1e-9, out=wall)
+        stall_share = np.divide(stall, wall, out=wall)
 
-        # component excesses over the fleet's healthy medians (one
-        # stacked partition instead of three np.median dispatches)
-        comps = np.stack([comp, comm, host])                 # (3, N)
-        dominant = (comps - row_median(comps)).argmax(axis=0)
+        # dominant component: excess of each channel mean over the
+        # fleet's healthy median. The medians are fleet-wide scalars but
+        # the comparison only matters for flagged rows, so the
+        # elementwise part runs on the O(flagged) gather; the nested
+        # where matches argmax's first-max tie-breaking
+        fi = flagged_idx
+        e0 = comp[fi] - fast_median(comp)
+        e1 = comm[fi] - fast_median(comm)
+        e2 = host[fi] - fast_median(host)
+        dm = np.where(e2 > np.maximum(e0, e1), np.int8(2),
+                      np.where(e1 > e0, np.int8(1), np.int8(0)))
 
         # comm transience: sustained excess must cover >= sustain_frac
         # of the kept windows AND still be present in the LATEST window
         # (a congestion burst that already expired keeps polluting the
         # trace means for depth windows — it must not read as a bad
-        # NIC); a fabric-wide simultaneous excess is congestion too
-        comm_rows = trace.rows("comm")
-        comm_dev = comm_rows > row_median(comm_rows) * \
-            (1.0 + cfg.component_floor)
-        comm_sustain = comm_dev.mean(axis=0)
-        last_comm = trace.last().comm
-        last_dev = last_comm > fast_median(last_comm) * \
-            (1.0 + cfg.component_floor)
-        fabric_wide = float(last_dev.mean()) >= cfg.fabric_share
+        # NIC); a fabric-wide simultaneous excess is congestion too.
+        # The newest cached row IS the latest window's deviation mask.
+        comm_sustain = self._comm_sustain()
+        last_dev = self._comm_dev[trace.last_row]
+        fabric_wide = (np.count_nonzero(last_dev) >=
+                       cfg.fabric_share * last_dev.size)
 
         # ---- vectorized verdicts over the flagged rows
-        fi = flagged_idx
         br = rep.blame_rel[fi]
         ss = stall_share[fi]
-        dm = dominant[fi]
         culprit = br >= cfg.blame_floor
         masks = fleet.support_masks
         gpu_any = np.zeros(len(fi), bool)
@@ -263,33 +280,47 @@ class Diagnoser:
         causes[presym & gpu_any & ~nic_any] = code[C.COMPUTE_DEGRADED]
         causes[presym & nic_any & ~gpu_any] = code[C.COMM_DEGRADED]
 
-        records: Dict[int, Diagnosis] = {}
-        new_records: List[Diagnosis] = []
-        for k, i in enumerate(fi):
-            i = int(i)
-            nid = int(frame.node_ids[i])
-            cause = by_code[int(causes[k])]
-            prev = self.last.get(nid)
-            if self._emitted.get(nid) == cause and prev is not None \
-                    and prev.root_cause is cause:
-                # steady state: verdict unchanged — reuse the record
-                # (evidence strings are only materialized on change)
-                records[nid] = prev
-                continue
-            rec = self._materialize(
-                nid, cause, rep.blame[i], br[k], rep.marginal[i], ss[k],
-                bool(culprit[k]), int(dm[k]), comm_sustain[i],
-                fabric_wide, bool(last_dev[i]), gpu_any[k], nic_any[k],
-                masks, i, frame)
-            records[nid] = rec
-            self.last[nid] = rec
-            self._emitted[nid] = cause
-            new_records.append(rec)
-        # forget emission state for nodes no longer flagged (re-emits on
-        # a later re-flag); keep ``last`` so triage can still read it
-        for nid in list(self._emitted):
-            if nid not in records:
-                del self._emitted[nid]
+        if (self._prev_fi is not None
+                and np.array_equal(fi, self._prev_fi)
+                and np.array_equal(causes, self._prev_causes)
+                and np.array_equal(frame.node_ids, self._prev_ids)):
+            # steady state: same flagged rows, same verdict codes — last
+            # window's record dict is the answer, no per-node loop
+            records = self._prev_records
+            new_records: List[Diagnosis] = []
+        else:
+            records = {}
+            new_records = []
+            for k, i in enumerate(fi):
+                i = int(i)
+                nid = int(frame.node_ids[i])
+                cause = by_code[int(causes[k])]
+                prev = self.last.get(nid)
+                if self._emitted.get(nid) == cause and prev is not None \
+                        and prev.root_cause is cause:
+                    # verdict unchanged for this node — reuse the record
+                    # (evidence strings only materialize on change)
+                    records[nid] = prev
+                    continue
+                rec = self._materialize(
+                    nid, cause, rep.blame[i], br[k], rep.marginal[i],
+                    ss[k], bool(culprit[k]), int(dm[k]), comm_sustain[i],
+                    fabric_wide, bool(last_dev[i]), gpu_any[k],
+                    nic_any[k], masks, i, frame)
+                records[nid] = rec
+                self.last[nid] = rec
+                self._emitted[nid] = cause
+                new_records.append(rec)
+            # forget emission state for nodes no longer flagged
+            # (re-emits on a later re-flag); keep ``last`` so triage can
+            # still read it
+            for nid in list(self._emitted):
+                if nid not in records:
+                    del self._emitted[nid]
+            self._prev_fi = fi.copy()
+            self._prev_causes = causes.copy()
+            self._prev_ids = frame.node_ids.copy()
+            self._prev_records = records
 
         out = FleetDiagnosis(frame.node_ids, rep.blame, rep.blame_rel,
                              rep.marginal, stall_share, records,
@@ -298,6 +329,52 @@ class Diagnoser:
         self.windows_diagnosed += 1
         self.last_cost_s = time.perf_counter() - t0
         return out
+
+    def _comm_sustain(self) -> np.ndarray:
+        """(N,) fraction of kept trace windows with per-row comm excess.
+
+        Each circular-buffer row's peer-median comparison is frozen once
+        the row is written, so the (depth, N) deviation mask is cached
+        and only rows pushed since the last diagnose are re-medianed —
+        one row per window in steady state instead of the whole buffer."""
+        trace, cfg = self.trace, self.cfg
+        raw = trace.rows_raw("comm")                  # (depth, N)
+        depth, used = trace.depth, len(trace)
+        delta = trace.pushes - self._comm_seen
+        rebuild = (self._comm_gen != trace.generation
+                   or self._comm_dev is None
+                   or self._comm_dev.shape != raw.shape
+                   or trace.last_backfill is not None
+                   or delta >= used or not trace.full)
+        if rebuild:
+            self._comm_gen = trace.generation
+            sub = raw[:used]
+            dev = sub > row_median(sub) * (1.0 + cfg.component_floor)
+            if self._comm_dev is None or \
+                    self._comm_dev.shape != raw.shape:
+                self._comm_dev = np.empty(raw.shape, bool)
+            self._comm_dev[:used] = dev
+            self._comm_count = dev.sum(0, dtype=np.int16)  # rolling
+        elif delta == 1:
+            # steady state: one new row replaced one old row (row_median
+            # keeps the comparison bit-identical to the rebuild path)
+            row = trace.last_row
+            new = raw[row] > row_median(raw[row:row + 1])[0] * \
+                (1.0 + cfg.component_floor)
+            self._comm_count += new
+            self._comm_count -= self._comm_dev[row]
+            self._comm_dev[row] = new
+        else:
+            rows = (trace.last_row - np.arange(delta)) % depth
+            sub = raw[rows]
+            dev = sub > row_median(sub) * (1.0 + cfg.component_floor)
+            self._comm_count += dev.sum(0, dtype=np.int16)
+            self._comm_count -= self._comm_dev[rows].sum(0,
+                                                         dtype=np.int16)
+            self._comm_dev[rows] = dev
+        self._comm_seen = trace.pushes
+        return self._comm_count.astype(np.float32) * \
+            np.float32(1.0 / used)
 
     def _materialize(self, nid: int, cause: RootCause, blame: float,
                      blame_rel: float, marginal: float, stall_share: float,

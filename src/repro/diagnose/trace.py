@@ -87,19 +87,35 @@ class TimingTrace:
         self._used = 0
         self._head = 0
         self._last: Optional[WindowTiming] = None
+        self._sums: Dict[str, np.ndarray] = {}     # channel -> (N,) f64
+        self._sums_stale = False
         self.generation = 0          # bumped on every (re)allocation
+        self.pushes = 0              # total rows ever written
+        self.last_backfill: Optional[np.ndarray] = None  # cols changed by
+        # the most recent push's replacement backfill (None if none)
 
     # ------------------------------------------------------------- intake
 
     def _alloc(self, wt: WindowTiming) -> None:
         n = len(wt.node_ids)
-        self._bufs = {ch: np.empty((self.depth, n)) for ch in CHANNELS}
+        # float32 like the detector's RingHistory: window durations are
+        # O(seconds) so f32 keeps ~1e-7 s relative resolution, and the
+        # downstream what-if reductions stay f32 end-to-end
+        self._bufs = {ch: np.empty((self.depth, n), np.float32)
+                      for ch in CHANNELS}
         self._ids = wt.node_ids.copy()
         self._used = 0
         self._head = 0
         self.generation += 1
+        # rolling per-channel window sums (f64 accumulators: adding and
+        # later subtracting the same stored f32 row keeps the drift at
+        # rounding noise), so ``mean`` is O(N) instead of O(depth * N)
+        self._sums = {ch: np.zeros(n, np.float64) for ch in CHANNELS}
+        self._means = {ch: np.empty(n, np.float32) for ch in CHANNELS}
+        self._sums_stale = False
 
     def push(self, wt: WindowTiming) -> None:
+        self.last_backfill = None
         ids = self._ids
         if ids is None or len(wt.node_ids) != len(ids):
             self._alloc(wt)
@@ -109,12 +125,20 @@ class TimingTrace:
                 buf[:, changed] = getattr(wt, ch)[changed]
             self._ids = ids.copy()
             self._ids[changed] = wt.node_ids[changed]
+            self.last_backfill = changed
+            self._sums_stale = True
         row = self._head
+        full = self._used == self.depth
         for ch, buf in self._bufs.items():
+            if full and not self._sums_stale:
+                self._sums[ch] -= buf[row]       # evicted row leaves
             buf[row] = getattr(wt, ch)
+            if not self._sums_stale:
+                self._sums[ch] += buf[row]       # stored f32 row enters
         self._head = (row + 1) % self.depth
         self._used = min(self._used + 1, self.depth)
         self._last = wt
+        self.pushes += 1
 
     # ------------------------------------------------------------ queries
 
@@ -134,14 +158,36 @@ class TimingTrace:
             raise IndexError("empty timing trace")
         return self._last
 
+    @property
+    def last_row(self) -> int:
+        """Buffer row index the most recent push wrote."""
+        return (self._head - 1) % self.depth
+
     def rows(self, channel: str) -> np.ndarray:
         """(used, N) raw buffer rows in ARBITRARY window order — zero-copy
         view for order-invariant reductions. Callers must not mutate."""
         return self._bufs[channel][:self._used]
 
+    def rows_raw(self, channel: str) -> np.ndarray:
+        """(depth, N) full backing buffer (rows beyond ``len(self)`` are
+        uninitialized). For row-indexed caches; do not mutate."""
+        return self._bufs[channel]
+
     def mean(self, channel: str) -> np.ndarray:
-        """(N,) per-node mean of one channel over the kept windows."""
-        return self.rows(channel).mean(axis=0)
+        """(N,) per-node mean of one channel over the kept windows,
+        float32, served from the rolling sums.
+
+        Returns a per-channel scratch buffer reused across calls — valid
+        until the next ``mean`` of the same channel; copy to retain."""
+        if self._sums_stale:
+            for ch, buf in self._bufs.items():
+                np.sum(buf[:self._used], axis=0, dtype=np.float64,
+                       out=self._sums[ch])
+            self._sums_stale = False
+        out = self._means[channel]
+        np.multiply(self._sums[channel], 1.0 / self._used, out=out,
+                    casting="unsafe")
+        return out
 
     def own_rows(self) -> np.ndarray:
         """(used, N) own-work seconds per kept window."""
@@ -154,10 +200,16 @@ class TimingTrace:
     def wall_mean(self) -> np.ndarray:
         return self.own_mean() + self.mean("stall")
 
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the circular buffers (memory report)."""
+        return sum(b.nbytes for b in self._bufs.values())
+
     def clear(self) -> None:
         self._used = 0
         self._head = 0
         self._last = None
+        self._sums_stale = True
 
 
 __all__ = ["CHANNELS", "OWN_CHANNELS", "TimingTrace", "WindowTiming"]

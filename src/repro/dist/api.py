@@ -66,6 +66,9 @@ DEFAULT_RULES: Rules = {
     "act_kv_seq": ("model",),       # decode KV-cache sequence (flash-decode)
     "act_ff": ("model",),           # MLP hidden activations
     "act_expert": ("model",),       # MoE expert-parallel axis
+    # -- fleet-monitoring axes -------------------------------------------
+    "fleet_node": ("data",),        # detector node axis: peer-median rank
+                                    # counts psum across node shards
 }
 
 

@@ -1,0 +1,12 @@
+"""Fused fleet-score kernel: peer-median / MAD / robust-z / threshold
+verdicts over circular (depth, N) detector buffers in one float32 pass,
+with numpy / jax (shardable) / pallas backends."""
+from repro.kernels.fleet_score.fleet_score import (fleet_score,
+                                                   median_lastdim,
+                                                   score_rows_jnp)
+from repro.kernels.fleet_score.ops import BACKENDS, score_rows
+from repro.kernels.fleet_score.ref import median_lastdim_ref, score_rows_ref
+
+__all__ = ["BACKENDS", "fleet_score", "median_lastdim",
+           "median_lastdim_ref", "score_rows", "score_rows_jnp",
+           "score_rows_ref"]

@@ -297,10 +297,10 @@ class FaultInjector:
         elif k == FaultKind.NIC_DOWN:
             fl.nic_up[n, d] = False
             fl.nic_err_count[n, d] += 1000
-            fl.invalidate_link_state()
+            fl.invalidate_link_state(node=n)
         elif k == FaultKind.NIC_DEGRADED:
             fl.nic_quality[n, d] = 1.0 - (0.2 + 0.5 * s)
-            fl.invalidate_link_state()
+            fl.invalidate_link_state(node=n)
         elif k == FaultKind.HOST_CPU:
             fl.host_factor[n] = 1.0 - (0.2 + 0.4 * s)
         elif k == FaultKind.CONGESTION:
@@ -314,11 +314,11 @@ class FaultInjector:
             # evidence the watchdog's entered-and-stalled verdict needs
             if d >= 0:
                 fl.nic_err_count[n, d] += 400
-                fl.invalidate_link_state()
+                fl.invalidate_link_state(node=n)
         elif k == FaultKind.NIC_BROWNOUT:
             fl.nic_quality[n, d] = 1.0 - (0.45 + 0.45 * s)
             fl.nic_err_count[n, d] += 200 + 600 * s
-            fl.invalidate_link_state()
+            fl.invalidate_link_state(node=n)
 
     def _revert(self, f: Fault, at: Optional[float] = None) -> None:
         if not f.active:
@@ -337,10 +337,10 @@ class FaultInjector:
             fl.refresh_node_perf(n)
         elif k == FaultKind.NIC_DOWN:
             fl.nic_up[n, d] = True
-            fl.invalidate_link_state()
+            fl.invalidate_link_state(node=n)
         elif k == FaultKind.NIC_DEGRADED:
             fl.nic_quality[n, d] = 1.0
-            fl.invalidate_link_state()
+            fl.invalidate_link_state(node=n)
         elif k == FaultKind.HOST_CPU:
             fl.host_factor[n] = 1.0
         elif k == FaultKind.CONGESTION:
@@ -349,7 +349,7 @@ class FaultInjector:
             pass                     # hang_phase maintained by _unregister
         elif k == FaultKind.NIC_BROWNOUT:
             fl.nic_quality[n, d] = 1.0
-            fl.invalidate_link_state()
+            fl.invalidate_link_state(node=n)
         f.active = False
         self._unregister(f)
 

@@ -81,6 +81,10 @@ class Fleet:
         # materialized lazily from pending share-units (see nic_tx_bytes)
         self._nic_tx = np.zeros((n, d))
         self._pending_tx_units = 0.0
+        # share-units already settled per node row: a row-targeted link
+        # event flushes ONLY its own row on the old shares, so the next
+        # full flush must not re-apply those units to it
+        self._row_flushed = np.zeros((n,))
         self.nic_err_count = np.zeros((n, d))
         # thermal-equilibrium tracking: True while every device sits exactly
         # on its target, letting the window-granular sim engine treat the
@@ -198,14 +202,47 @@ class Fleet:
         self.hw_version += 1
         self._refresh_node_perf(np.asarray([node]))
 
-    def invalidate_link_state(self) -> None:
-        """NIC up/quality state changed (fault event)."""
-        self._flush_traffic()            # settle counters on OLD shares
-        self._comm = None
-        self._shares = None
+    def invalidate_link_state(self, node: Optional[int] = None) -> None:
+        """NIC up/quality state changed (fault event).
+
+        Callers mutate link state FIRST, then invalidate: the cached
+        shares still describe the pre-event topology, so traffic is
+        settled on them before the caches move.
+
+        ``node`` names the single node whose links changed: its counters
+        are settled and its share/comm cache rows recomputed in O(D) —
+        reroute fallback never crosses nodes, so the rest of the fleet's
+        caches stay valid. ``None`` (or cold caches) drops everything."""
         self.state_version += 1
         self.hw_version += 1
         self.err_version += 1
+        if node is None or self._shares is None or self._comm is None:
+            self._flush_traffic()        # settle counters on OLD shares
+            self._comm = None
+            self._shares = None
+            return
+        self._flush_row(node)
+        self._refresh_link_row(node)
+
+    def _flush_row(self, node: int) -> None:
+        """Settle one row's traffic counters on its current cached shares."""
+        owed = self._pending_tx_units - self._row_flushed[node]
+        if owed:
+            self._nic_tx[node] += self._shares[node] * owed
+            self._row_flushed[node] = self._pending_tx_units
+
+    def _refresh_link_row(self, node: int) -> None:
+        """Recompute one node's share and comm-factor cache rows in O(D)
+        (same arithmetic as the vectorized builds, bit-identical)."""
+        up = self.nic_up[node]
+        shares = np.where(up, 1.0, 0.0)
+        has_up = up.any()
+        if has_up:
+            shares[np.argmax(up)] += (~up).sum()
+        self._shares[node] = shares
+        flow_time = shares / np.maximum(self.nic_quality[node], 1e-9)
+        worst = flow_time.max() if has_up else 1e3
+        self._comm[node] = 1.0 / max(worst, 1e-9)
 
     def node_comm_factor(self) -> np.ndarray:
         """(N,) effective inter-node communication speed fraction.
@@ -248,8 +285,10 @@ class Fleet:
 
     def _flush_traffic(self) -> None:
         if self._pending_tx_units:
-            self._nic_tx += self._link_shares() * self._pending_tx_units
+            owed = self._pending_tx_units - self._row_flushed
+            self._nic_tx += self._link_shares() * owed[:, None]
             self._pending_tx_units = 0.0
+            self._row_flushed[:] = 0.0
 
     @property
     def nic_tx_bytes(self) -> np.ndarray:
@@ -262,6 +301,19 @@ class Fleet:
         # through the getter; full reassignment lands here)
         self._nic_tx = np.asarray(value, dtype=float)
         self._pending_tx_units = 0.0
+        self._row_flushed[:] = 0.0
+
+    def memory_nbytes(self) -> int:
+        """Resident bytes of the fleet's hardware-state and cache arrays
+        (scale-benchmark memory report)."""
+        arrs = [self.temp_c, self.temp_target, self.power_factor,
+                self.mem_factor, self.nic_up, self.nic_quality,
+                self.host_factor, self.alive, self.hang_phase,
+                self._nic_tx, self.nic_err_count, self._row_flushed]
+        arrs += [a for a in (self._ncf, self._comm, self._shares,
+                             self._probe_noise_compute,
+                             self._probe_noise_bw) if a is not None]
+        return int(sum(a.nbytes for a in arrs))
 
     # --------------------------------------------------------- telemetry
 

@@ -6,6 +6,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.detector import DetectorConfig, StragglerDetector, robust_z
+from repro.core.sweep import SweepCampaign, fleet_qualification
 from repro.core.telemetry import Frame
 from repro.simcluster import (DeadlockedCollective, FaultKind, FaultRates,
                               PartialNicBrownout, RunConfig, SimCluster,
@@ -170,6 +171,64 @@ def test_hang_watchdog_invariants_under_composition(which, seed, extra):
     for f in r.fault_log:
         if f["kind"] == "collective_hang":
             assert f["node"] in culprits | gone
+
+
+# ------------------------------------------------------- fleet scale
+
+
+@pytest.mark.scale
+@given(st.integers(0, 1000), st.integers(0, 2))
+@settings(max_examples=3, deadline=None)
+def test_scale_fault_hang_composition_invariants(seed, which):
+    """8k-node run composing background Poisson fault churn with a
+    random hang scenario, then a batched qualification campaign over
+    the survivors. Invariants at fleet scale:
+
+      1. pool census conservation (no spare leak): every node the run
+         started with or provisioned is in exactly one pool at the end;
+      2. no never-faulted eviction: every swapped-out node carried at
+         least one logged fault (hang victims / congestion transients
+         are held, never pulled);
+      3. campaign convergence: fleet qualification over a fleet-scale
+         candidate set terminates with exactly one verdict per node
+         within the two-stage + one-retry sweep budget."""
+    hang = [DeadlockedCollective(at_h=0.5, count=1 + seed % 2,
+                                 interval_h=0.5),
+            PartialNicBrownout(at_h=0.5, group_size=8),
+            StragglerTimeoutCascade(at_h=0.5, count=1, lag_h=0.02)][which]
+    n, spares = 8192, 64
+    r = simulate_run(RunConfig(
+        tier=Tier.ENHANCED, n_nodes=n, n_spare=spares, duration_h=1.5,
+        dp_group_size=256, diagnose=True, hang_watchdog=True,
+        rates=FaultRates(), scenarios=(hang,), seed=seed))
+
+    # (1) census conservation
+    provisioned = sum(1 for e in r.events if e["kind"] == "provision")
+    assert sum(r.pools.values()) == n + spares + provisioned
+    assert all(v >= 0 for v in r.pools.values())
+
+    # (2) only genuinely faulted hardware is ever pulled
+    faulted = {f["node"] for f in r.fault_log}
+    swapped = {e["old"] for e in r.events if e["kind"] == "swap"}
+    assert swapped <= faulted, swapped - faulted
+
+    # (3) batched campaign over a fleet-scale candidate set converges
+    c = SimCluster(n, 0, reserve=0, rates=QUIET, seed=seed + 1)
+    for node in sorted(faulted)[:64]:
+        if node < n:
+            kind = [FaultKind.THERMAL, FaultKind.POWER,
+                    FaultKind.NIC_DEGRADED][node % 3]
+            c.injector.inject(kind, node, severity=0.9)
+    c.fleet.advance_thermals(3600.0)
+    campaign = SweepCampaign(node_ids=tuple(range(n)))
+    res = fleet_qualification(c.sweep_backend, campaign)
+    assert len(res.reports) == n
+    assert [rep.node_id for rep in res.reports] == list(range(n))
+    # sweep budget: stage 1 once per node, stage 2 once per candidate,
+    # plus at most one disjoint-buddy retry per failing group
+    assert res.sweeps <= 3 * n
+    # the healthy majority qualifies; severe planted faults do not pass
+    assert len(res.passed) >= n - 3 * 64
 
 
 # ------------------------------------------------------------- data
