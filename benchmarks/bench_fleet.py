@@ -1,0 +1,171 @@
+"""Fleet control-plane benchmark: N concurrent jobs over one shared
+node inventory, written to ``BENCH_fleet.json``.
+
+Drives ``simulate_fleet``: 16 concurrent simulated jobs (mixed
+ENHANCED/ONLINE tiers, mixed priorities) over a 4096-node fleet, all
+leasing replacement capacity from one ``FleetController`` — global
+home-tagged spare pool, shared sweep bench, periodic healthscan
+campaigns, and the cursor-replayable fleet event stream.
+
+Gates (CI runs this in the scale job and fails the build on violation):
+
+  starvation     ZERO starvation events — no lease request ever waits
+                 past the starvation bound; the fair-share floor keeps
+                 low-priority tenants served under contention
+  census         bit-consistent pool census — the sum of every job's
+                 node census + the free pool + the transfer-ghost
+                 ledger equals the initial inventory + every node ever
+                 provisioned, checked after the full run
+  overhead       control-plane self-time (pool arbitration, lease
+                 bookkeeping, healthscan orchestration, event-log
+                 appends) below 5% of total sim wall time
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_fleet [--quick]
+          [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.guard import Tier
+from repro.simcluster import FleetJobSpec, FleetRunConfig, simulate_fleet
+
+OVERHEAD_GATE = 0.05          # control plane < 5% of sim wall time
+N_JOBS = 16
+FLEET_NODES = 4096            # summed across the concurrent jobs
+
+
+def fleet_config(quick: bool) -> FleetRunConfig:
+    per_job = FLEET_NODES // N_JOBS
+    tiers = [Tier.ENHANCED, Tier.ONLINE]
+    jobs = tuple(
+        FleetJobSpec(
+            name=f"job{i:02d}",
+            tier=tiers[i % 2],
+            n_nodes=per_job,
+            n_spare=2,
+            # spread priorities so the fair-share floor is actually
+            # exercised: some low-priority tenants under high-priority
+            # neighbors
+            priority=1 + (i % 4),
+            seed=i)
+        for i in range(N_JOBS))
+    return FleetRunConfig(
+        jobs=jobs,
+        duration_h=2.0 if quick else 8.0,
+        # enough bench capacity that background healthscan campaigns
+        # find idle slots between foreground qualifications
+        bench_slots=8,
+        healthscan_period_s=1800.0,
+        healthscan_batch=8,
+        starvation_age_s=3600.0,
+        floor_frac=0.5,
+        spare_target=24,
+        home_min=1,
+        seed=11)
+
+
+def run_fleet(quick: bool) -> dict:
+    cfg = fleet_config(quick)
+    res = simulate_fleet(cfg)
+    per_tier: dict = {}
+    for j in res.jobs:
+        t = per_tier.setdefault(j["tier"], {"jobs": 0, "steps": 0,
+                                            "leases": 0, "crashes": 0})
+        t["jobs"] += 1
+        t["steps"] += j["steps"]
+        t["leases"] += j["leases"]
+        t["crashes"] += j["crashes"]
+    return {
+        "n_jobs": len(cfg.jobs),
+        "fleet_nodes": sum(j.n_nodes for j in cfg.jobs),
+        "duration_h": cfg.duration_h,
+        "jobs": res.jobs,
+        "per_tier": per_tier,
+        "starvation_events": res.starvation_events,
+        "max_wait_s": res.max_wait_s,
+        "census": {k: v for k, v in res.census.items() if k != "jobs"},
+        "census_ok": res.census_ok,
+        "pool": res.pool,
+        "healthscan": res.healthscan,
+        "events_logged": res.events_logged,
+        "overhead_s": res.overhead_s,
+        "wall_s": res.wall_s,
+        "overhead_frac": res.overhead_frac,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing (shorter fleet horizon)")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_fleet.json"))
+    args = ap.parse_args(argv)
+
+    t0 = time.perf_counter()
+    fleet = run_fleet(args.quick)
+    out = {
+        "benchmark": "guard_fleet",
+        "mode": "quick" if args.quick else "full",
+        **fleet,
+        "gates": {"starvation_events": 0,
+                  "census_ok": True,
+                  "overhead_frac_max": OVERHEAD_GATE},
+        "total_wall_s": time.perf_counter() - t0,
+    }
+    out["ok"] = (fleet["starvation_events"] == 0 and fleet["census_ok"]
+                 and fleet["overhead_frac"] < OVERHEAD_GATE)
+
+    print(f"{'job':>8s}{'tier':>6s}{'prio':>6s}{'steps':>9s}"
+          f"{'crashes':>9s}{'leases':>8s}{'xfers':>7s}")
+    for j in fleet["jobs"]:
+        print(f"{j['name']:>8s}{j['tier']:6d}{j['priority']:6d}"
+              f"{j['steps']:9d}{j['crashes']:9d}{j['leases']:8d}"
+              f"{j['transfers']:7d}")
+    cen = fleet["census"]
+    print(f"\nfleet: {fleet['n_jobs']} jobs / {fleet['fleet_nodes']} nodes"
+          f" / {fleet['duration_h']:.0f}h horizon")
+    print(f"pool: {fleet['pool']['grants']} grants "
+          f"({fleet['pool']['transfers']} transfers, "
+          f"{fleet['pool']['provisions']} provisioned), "
+          f"max wait {fleet['max_wait_s']:.0f}s")
+    print(f"healthscan: {fleet['healthscan'].get('campaigns', 0)} campaigns,"
+          f" {fleet['healthscan'].get('scanned', 0)} scanned,"
+          f" {fleet['healthscan'].get('failed', 0)} pulled")
+    print(f"census: accounted {cen['accounted']} == expected "
+          f"{cen['expected']} (inventory {cen['inventory']} + provisions "
+          f"{cen['provisions']}), conserved={fleet['census_ok']}")
+    print(f"events: {fleet['events_logged']} streamed; control plane "
+          f"{fleet['overhead_s'] * 1e3:.1f} ms / {fleet['wall_s']:.1f} s "
+          f"sim wall = {fleet['overhead_frac'] * 100:.2f}% "
+          f"(gate {OVERHEAD_GATE * 100:.0f}%)")
+
+    ok = True
+    if fleet["starvation_events"]:
+        print(f"FAIL: {fleet['starvation_events']} starvation events "
+              f"(max wait {fleet['max_wait_s']:.0f}s)", file=sys.stderr)
+        ok = False
+    if not fleet["census_ok"]:
+        print(f"FAIL: census not conserved: accounted {cen['accounted']} "
+              f"!= expected {cen['expected']}", file=sys.stderr)
+        ok = False
+    if fleet["overhead_frac"] >= OVERHEAD_GATE:
+        print(f"FAIL: control-plane overhead "
+              f"{fleet['overhead_frac'] * 100:.2f}% >= "
+              f"{OVERHEAD_GATE * 100:.0f}%", file=sys.stderr)
+        ok = False
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    print(f"wrote {args.out}  ({out['total_wall_s']:.0f}s)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

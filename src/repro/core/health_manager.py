@@ -103,6 +103,37 @@ class QualificationTicket:
 Notify = Callable[[str, Dict[str, object]], None]
 
 
+class SparePool(Protocol):
+    """Fleet-level replacement-capacity provider (lease/grant protocol).
+
+    When attached (``HealthManager.attach_pool``) the manager stops
+    keeping a private ``spares`` list: replacement capacity is leased
+    from a shared pool that multiplexes many concurrent jobs (see
+    ``repro.fleet.FleetController``), and requalified nodes are granted
+    back to it. ``kind`` is the urgency class of the lease — plain
+    strings here so ``repro.core`` stays dependency-free: ``"swap"``
+    (straggler eviction), ``"crash"`` (fail-stop replacement),
+    ``"hang"`` (hang-culprit eviction, the most urgent)."""
+
+    def take(self, kind: str = "swap") -> int:
+        """Lease one healthy node (may provision; always returns)."""
+        ...
+
+    def give(self, node_id: int) -> None:
+        """Return a healthy node to the shared pool (lease closed)."""
+        ...
+
+    def count(self) -> int:
+        """Healthy nodes available for lease right now."""
+        ...
+
+    def buddies(self, n: int, skip: int = 0) -> List[int]:
+        """Known-good sweep-buddy candidates co-located with this job
+        (free pool nodes this job's sweep bench can physically pair
+        with), skipping the first ``skip``."""
+        ...
+
+
 class HealthManager:
     def __init__(self, control: ClusterControl, sweep_backend: SweepBackend,
                  monitor: OnlineMonitor,
@@ -122,7 +153,17 @@ class HealthManager:
         self.max_rounds = max_qualification_rounds
         self.pending_patience_s = pending_patience_s
         self.on_provision = on_provision
-        self.notify = notify
+        # multi-subscriber notification list: the session hook AND a
+        # fleet controller can both observe pool transitions without
+        # clobbering each other (``add_listener``); the constructor arg
+        # registers the first subscriber
+        self._listeners: List[Notify] = []
+        if notify is not None:
+            self._listeners.append(notify)
+        # optional fleet-level spare provider (lease/grant): when set,
+        # the private ``spares`` list stays empty and every take/return
+        # goes through the shared pool
+        self.pool: Optional[SparePool] = None
         self.state: Dict[int, NodeState] = {}
         self.spares: List[int] = []
         self.deferred: List[int] = []     # swap at next checkpoint
@@ -139,10 +180,32 @@ class HealthManager:
             Optional[Callable[[int], Optional[ErrorSignals]]] = None
 
     def _notify(self, topic: str, **payload) -> None:
-        if self.notify is not None:
-            self.notify(topic, payload)
+        for fn in self._listeners:
+            fn(topic, dict(payload))     # each listener gets its own copy
+
+    def add_listener(self, fn: Notify) -> None:
+        """Subscribe one more (topic, payload) observer of pool
+        transitions; listeners are invoked in attach order."""
+        self._listeners.append(fn)
 
     # --------------------------------------------------------- pools
+
+    def attach_pool(self, pool: SparePool) -> None:
+        """Switch replacement capacity to a fleet-level shared pool
+        (lease/grant). Caller (the fleet controller) is responsible for
+        adopting any privately-held spares first — see
+        ``release_private_spares``."""
+        self.pool = pool
+
+    def release_private_spares(self) -> List[int]:
+        """Hand every privately-held healthy spare to the caller (the
+        fleet controller adopts them into the global pool); they leave
+        this manager's census entirely."""
+        out = list(self.spares)
+        self.spares.clear()
+        for nid in out:
+            self.state.pop(nid, None)
+        return out
 
     def register(self, node_id: int, state: NodeState) -> None:
         self.state[node_id] = state
@@ -152,35 +215,63 @@ class HealthManager:
     @property
     def spare_count(self) -> int:
         """Healthy spares available right now (public pool query)."""
+        if self.pool is not None:
+            return self.pool.count()
         return len(self.spares)
 
     def provision_spare(self) -> int:
         """Bring one brand-new node through admission into the spare pool."""
+        nid = self.deliver_node()
+        if self.pool is not None:
+            self.pool.give(nid)          # lands in the shared pool
+        else:
+            self.register(nid, NodeState.HEALTHY_SPARE)
+        return nid
+
+    def deliver_node(self) -> int:
+        """Provision one node through the control plane + admission and
+        hand it straight to the caller (no pool membership) — the fleet
+        controller's materialization path for lease grants."""
         nid = self.control.provision_node()
         self.stats.nodes_provisioned += 1
         if self.on_provision is not None:
             self.on_provision(nid)       # tier-dependent admission check
-        self.register(nid, NodeState.HEALTHY_SPARE)
         self._notify("provision", node_id=nid)
         return nid
 
-    def take_spare(self) -> int:
+    def take_spare(self, kind: str = "swap") -> int:
         """Remove one healthy spare from the pool and mark it ACTIVE.
 
         Provisions fresh capacity through the control plane if the pool is
         dry. The returned node is in exactly one place afterwards: the job.
-        """
-        while not self.spares:
-            self.provision_spare()
-        nid = self.spares.pop(0)
+        ``kind`` is the lease urgency class when a fleet-level pool is
+        attached (``"swap"`` / ``"crash"`` / ``"hang"``)."""
+        if self.pool is not None:
+            nid = self.pool.take(kind)
+        else:
+            while not self.spares:
+                self.provision_spare()
+            nid = self.spares.pop(0)
         self.state[nid] = NodeState.ACTIVE
         return nid
 
     def return_spare(self, node_id: int) -> None:
         """Hand a healthy node back to the spare pool."""
+        if self.pool is not None:
+            # the node leaves this job's census: the shared pool owns it
+            self.state.pop(node_id, None)
+            self.pool.give(node_id)
+            return
         self.state[node_id] = NodeState.HEALTHY_SPARE
         if node_id not in self.spares:
             self.spares.append(node_id)
+
+    def spare_pool_ids(self) -> List[int]:
+        """Healthy-spare ids visible to this job (buddy candidates):
+        the private list, or the co-located slice of the shared pool."""
+        if self.pool is not None:
+            return self.pool.buddies(len(self.state) + 8)
+        return list(self.spares)
 
     def quarantined(self) -> List[int]:
         """Node ids currently awaiting offline qualification."""
@@ -335,7 +426,8 @@ class HealthManager:
                                         enhanced=self.enhanced_sweep))
             passed = rep.passed
             if passed and self.enhanced_sweep:
-                buddies = self.spares[:nb]
+                avail = self.spare_pool_ids()
+                buddies = avail[:nb]
                 if not buddies:
                     # no known-good buddy: the multi-node stage cannot
                     # run — park the node instead of passing it blind
@@ -343,7 +435,7 @@ class HealthManager:
                 multi = run(multi_node_sweep(self.backend, node_id,
                                              buddies, self.sweep_cfg))
                 if not multi.passed:
-                    retry = [s for s in self.spares[nb:]
+                    retry = [s for s in avail[nb:]
                              if s not in buddies][:nb]
                     if not retry:
                         # the only buddy may itself be contaminated —

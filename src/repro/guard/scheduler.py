@@ -43,16 +43,66 @@ class InFlight:
     finish_t: float
 
 
+class BenchSlots:
+    """Sweep-bench capacity as explicit slot free times.
+
+    Extracted from the scheduler so the SAME bench can back several
+    schedulers at once: a fleet controller hands one ``BenchSlots`` to
+    every concurrent job's ``SweepScheduler`` and their qualification
+    campaigns queue on the shared slots (the paper's cluster-service
+    deployment — one offline bench, many tenants). Slot accounting is a
+    min-heap of free times; ``occupy`` is the direct-occupancy path for
+    batched background campaigns (healthscan) that bypass the per-node
+    queue."""
+
+    def __init__(self, slots: int):
+        assert slots >= 1
+        self._free_at: List[float] = [0.0] * slots
+        heapq.heapify(self._free_at)
+
+    @property
+    def slots(self) -> int:
+        return len(self._free_at)
+
+    def earliest(self) -> Optional[float]:
+        """Free time of the earliest-available slot, or None while every
+        slot token is claimed by in-flight work."""
+        return self._free_at[0] if self._free_at else None
+
+    def pop(self) -> float:
+        """Claim the earliest slot (caller pushes back its new free time)."""
+        return heapq.heappop(self._free_at)
+
+    def push(self, free_t: float) -> None:
+        heapq.heappush(self._free_at, free_t)
+
+    def occupy(self, now: float, duration_s: float) -> Tuple[float, float]:
+        """Occupy one slot for ``duration_s`` starting no earlier than
+        ``now``; returns the (start, finish) times actually booked."""
+        free_t = self.pop()
+        start = max(free_t, float(now))
+        finish = start + float(duration_s)
+        self.push(finish)
+        return start, finish
+
+    def idle_at(self, now: float) -> bool:
+        """True when at least one slot is free at time ``now``."""
+        return bool(self._free_at) and self._free_at[0] <= float(now)
+
+
 class SweepScheduler:
     """Queues quarantined nodes and overlaps qualification with the job."""
 
     def __init__(self, manager: HealthManager,
                  bus: Optional[EventBus] = None,
-                 concurrency: int = 2):
-        assert concurrency >= 1
+                 concurrency: int = 2,
+                 bench: Optional[BenchSlots] = None):
         self.manager = manager
         self.bus = bus
-        self.concurrency = concurrency
+        # the bench may be private (default: ``concurrency`` slots) or a
+        # shared fleet-level BenchSlots arbitrated across many sessions
+        self.bench = bench or BenchSlots(concurrency)
+        self.concurrency = self.bench.slots
         self.queue: List[Tuple[int, float]] = []    # (node_id, enqueued_t)
         self.in_flight: List[InFlight] = []
         self._tracked: Set[int] = set()
@@ -66,10 +116,15 @@ class SweepScheduler:
         self.completed: List[QualificationTicket] = []
         self._step = 0               # last known global step, for events
         self._now = 0.0              # last clock input (submit default)
-        # free times of the bench slots; work dequeues against the
-        # EARLIEST one so capacity is modeled exactly
-        self._free_at: List[float] = [0.0] * concurrency
-        heapq.heapify(self._free_at)
+
+    def rebind_bench(self, bench: BenchSlots) -> None:
+        """Point this scheduler at a (shared) bench. Only legal while no
+        qualification is in flight — in-flight work booked slots on the
+        old bench and landing it against a different heap would corrupt
+        both."""
+        assert not self.in_flight, "cannot rebind with work in flight"
+        self.bench = bench
+        self.concurrency = bench.slots
 
     # ------------------------------------------------------------- intake
 
@@ -110,6 +165,18 @@ class SweepScheduler:
             return None
         return min(f.finish_t for f in self.in_flight)
 
+    def next_event_t(self) -> Optional[float]:
+        """Earliest pending event (a landing or a possible start) —
+        lets a fleet controller interleave several schedulers sharing
+        one bench in global event order."""
+        nf = self.next_finish_t()
+        ns = self._next_start_t()
+        if nf is None:
+            return ns
+        if ns is None:
+            return nf
+        return min(nf, ns)
+
     def advance(self, now: float, step: int = -1
                 ) -> List[QualificationTicket]:
         """Chain starts and landings in event order up to ``now``;
@@ -136,9 +203,12 @@ class SweepScheduler:
 
     def _next_start_t(self) -> Optional[float]:
         """Earliest moment the queue head could occupy a bench slot."""
-        if not self.queue or not self._free_at:
+        if not self.queue:
             return None
-        return max(self._free_at[0], self.queue[0][1])
+        free_t = self.bench.earliest()
+        if free_t is None:          # every slot claimed by in-flight work
+            return None
+        return max(free_t, self.queue[0][1])
 
     def _run_until(self, horizon: float) -> List[QualificationTicket]:
         done: List[QualificationTicket] = []
@@ -154,11 +224,11 @@ class SweepScheduler:
                         key=lambda j: self.in_flight[j].finish_t)
                 f = self.in_flight.pop(i)
                 self._finish(f, f.finish_t)
-                heapq.heappush(self._free_at, f.finish_t)
+                self.bench.push(f.finish_t)
                 done.append(f.ticket)
                 continue
             if ns is not None and ns <= horizon:
-                free_t = heapq.heappop(self._free_at)
+                free_t = self.bench.pop()
                 nid, enq_t = self.queue.pop(0)
                 start = max(free_t, enq_t)
                 ticket = self.manager.begin_qualification(nid)

@@ -168,8 +168,10 @@ class GuardSession:
         return self.manager.spare_count
 
     def spare_ids(self) -> List[int]:
-        """Current healthy-spare ids (copy; e.g. sweep-buddy candidates)."""
-        return list(self.manager.spares)
+        """Current healthy-spare ids (copy; e.g. sweep-buddy candidates).
+        Under a fleet pool this is the shared pool's view, not a private
+        list."""
+        return self.manager.spare_pool_ids()
 
     def node_state(self, node_id: int) -> Optional[NodeState]:
         return self.manager.state.get(node_id)
@@ -293,7 +295,7 @@ class GuardSession:
         new_ids: List[int] = []
         for bad in dead:
             bad = int(bad)
-            spare = self.manager.take_spare()
+            spare = self.manager.take_spare(kind="crash")
             self.control.swap_node(bad, spare)
             self.manager.retire(bad, reason="fail-stop crash", crashed=True)
             self.monitor.node_replaced(bad)
@@ -335,19 +337,21 @@ class GuardSession:
                 new_ids.append(self.replace_node(
                     bad,
                     reason=f"hang culprit ({role_of.get(bad, 'culprit')})",
-                    step=self._step))
+                    step=self._step, kind="hang"))
         return new_ids
 
     def replace_node(self, bad: int, reason: str,
                      quarantine: bool = True,
-                     step: Optional[int] = None) -> int:
+                     step: Optional[int] = None,
+                     kind: str = "swap") -> int:
         """Pull ``bad`` out of the job for a healthy spare (manual-hunt /
         operator path). ``quarantine=True`` routes it to the offline
         qualification queue; ``False`` retires it outright (no tooling to
-        verify with — the burn-in-only tier)."""
+        verify with — the burn-in-only tier). ``kind`` is the lease
+        urgency a fleet pool arbitrates on ("swap" | "crash" | "hang")."""
         now = self.control.now()
         self._note_step(step)
-        spare = self.manager.take_spare()
+        spare = self.manager.take_spare(kind=kind)
         self.control.swap_node(bad, spare)
         self.monitor.node_replaced(bad)
         self.bus.publish(NodeSwapped(t=now, step=self._step, old=bad,
@@ -392,7 +396,7 @@ class GuardSession:
             node_ids = sorted(n for n, st in self.manager.state.items()
                               if st == NodeState.ACTIVE)
         if reference_pool is None:
-            reference_pool = tuple(self.manager.spares)
+            reference_pool = tuple(self.manager.spare_pool_ids())
         campaign = SweepCampaign(
             node_ids=tuple(int(n) for n in node_ids),
             reference_pool=tuple(int(n) for n in reference_pool),
@@ -425,8 +429,8 @@ class GuardSession:
             wall_s=res.wall_s))
         return res
 
-    def take_spare(self) -> int:
-        return self.manager.take_spare()
+    def take_spare(self, kind: str = "swap") -> int:
+        return self.manager.take_spare(kind=kind)
 
     def return_spare(self, node_id: int) -> None:
         self.manager.return_spare(node_id)

@@ -9,7 +9,9 @@ from repro.simcluster.faults import (BROWNOUT_HANG_SEV, FaultInjector,
                                      HANG_KINDS)
 from repro.simcluster.node import (Fleet, HWConfig, THROTTLE_CURVE_C,
                                    THROTTLE_CURVE_GHZ, freq_at_temp)
-from repro.simcluster.runtime import RunConfig, RunResult, Tier, simulate_run
+from repro.simcluster.runtime import (FleetJobSpec, FleetRunConfig,
+                                      FleetRunResult, RunConfig, RunResult,
+                                      Tier, simulate_fleet, simulate_run)
 from repro.simcluster.scenarios import (CongestionStorm,
                                         DeadlockedCollective,
                                         InitialGreyPopulation,
@@ -23,7 +25,8 @@ from repro.simcluster.scenarios import (CongestionStorm,
 __all__ = [
     "BROWNOUT_HANG_SEV",
     "CongestionStorm", "DeadlockedCollective", "FaultInjector", "FaultKind",
-    "FaultRates", "Fleet",
+    "FaultRates", "Fleet", "FleetJobSpec", "FleetRunConfig",
+    "FleetRunResult",
     "GREY_KINDS", "HANG_KINDS", "HWConfig", "InitialGreyPopulation",
     "MaintenanceWindow",
     "PartialNicBrownout",
@@ -32,5 +35,6 @@ __all__ = [
     "SwitchFailure", "THROTTLE_CURVE_C",
     "THROTTLE_CURVE_GHZ",
     "Tier", "WorkloadProfile", "arm_all", "builtin_scenarios",
-    "freq_at_temp", "register_scenario", "scenario", "simulate_run",
+    "freq_at_temp", "register_scenario", "scenario", "simulate_fleet",
+    "simulate_run",
 ]

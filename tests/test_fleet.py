@@ -1,0 +1,336 @@
+"""Fleet control plane: global pool arbitration, lease/grant protocol,
+shared sweep bench, healthscan campaigns, cursor-replay event stream,
+and the multi-job sim driver."""
+import io
+
+import pytest
+
+from repro.core.health_manager import NodeState
+from repro.fleet import (FleetController, FleetEventLog, GlobalSparePool,
+                         LeaseKind, SSEStreamSink)
+from repro.guard.events import NodeSwapped
+from repro.guard.session import GuardSession, Tier
+from repro.simcluster import (FaultKind, FaultRates, FleetJobSpec,
+                              FleetRunConfig, SimCluster, simulate_fleet)
+
+QUIET = FaultRates(thermal=0, power=0, mem_ecc=0, nic_down=0,
+                   nic_degraded=0, host_cpu=0, congestion=0, fail_stop=0,
+                   admission_grey_p=0)
+
+
+def make_job(controller, name, tier=Tier.ENHANCED, n=32, n_spare=4,
+             seed=0, priority=None, rates=QUIET):
+    c = SimCluster(n, n_spare=n_spare, rates=rates, seed=seed)
+    s = GuardSession.from_tier(tier, c, c)
+    s.register_active(c.active)
+    s.register_spares(c.spares)
+    controller.register_job(name, s, priority=priority)
+    return c, s
+
+
+# ------------------------------------------------------------------- pool
+
+
+class TestGlobalSparePool:
+    def test_home_grant_preferred_over_transfer(self):
+        pool = GlobalSparePool()
+        pool.add(1, home="a", now=0.0)
+        pool.add(2, home="b", now=1.0)
+        lease = pool.grant("b", LeaseKind.SLOW_SWAP, now=2.0)
+        assert lease.node_id == 2 and not lease.transfer
+
+    def test_foreign_grant_is_transfer(self):
+        pool = GlobalSparePool()
+        pool.add(1, home="a", now=0.0)
+        lease = pool.grant("b", LeaseKind.CRASH, now=2.0)
+        assert lease.transfer and lease.home == "a"
+
+    def test_dry_pool_returns_none(self):
+        pool = GlobalSparePool()
+        assert pool.grant("a", LeaseKind.SLOW_SWAP, now=0.0) is None
+
+    def test_node_ids_namespaced_per_home(self):
+        pool = GlobalSparePool()
+        pool.add(7, home="a", now=0.0)
+        pool.add(7, home="b", now=0.0)       # same id, different fleet
+        assert pool.free_count() == 2
+        with pytest.raises(AssertionError):
+            pool.add(7, home="a", now=1.0)   # true double give
+
+    def test_urgency_ladder_orders_queue(self):
+        pool = GlobalSparePool()
+        r_swap = pool.request("a", LeaseKind.SLOW_SWAP, priority=4, now=0.0)
+        r_hang = pool.request("b", LeaseKind.HANG_EVICT, priority=3,
+                              now=0.0)
+        r_crash = pool.request("c", LeaseKind.CRASH, priority=3, now=0.0)
+        for nid, home in [(1, "a"), (2, "b"), (3, "c")]:
+            pool.add(nid, home=home, now=0.0)
+        served = pool.serve(now=1.0)
+        # hang > crash > swap regardless of priority
+        assert [r.job for r in served] == ["b", "c", "a"]
+        assert r_hang.served and r_crash.served and r_swap.served
+
+    def test_priority_breaks_ties_within_kind(self):
+        pool = GlobalSparePool()
+        pool.request("low", LeaseKind.SLOW_SWAP, priority=3, now=0.0)
+        pool.request("high", LeaseKind.SLOW_SWAP, priority=4, now=0.0)
+        pool.add(1, home="low", now=0.0)
+        pool.add(2, home="high", now=0.0)
+        served = pool.serve(now=1.0)
+        assert [r.job for r in served] == ["high", "low"]
+
+    def test_fair_share_floor_outranks_priority(self):
+        pool = GlobalSparePool(floor_frac=0.5)
+        pool.register_job("big")
+        pool.register_job("small")
+        # "big" has hoarded grants; "small" is far below the floor
+        for i in range(10):
+            pool.add(100 + i, home="big", now=0.0)
+            pool.grant("big", LeaseKind.SLOW_SWAP, now=0.0)
+        pool.request("big", LeaseKind.HANG_EVICT, priority=4, now=0.0)
+        pool.request("small", LeaseKind.SLOW_SWAP, priority=1, now=0.0)
+        pool.add(1, home="small", now=0.0)
+        served = pool.serve(now=1.0)
+        # only one node free: the below-floor job gets it despite lower
+        # priority AND lower urgency
+        assert served[0].job == "small"
+
+    def test_starvation_bound_outranks_everything(self):
+        pool = GlobalSparePool(starvation_age_s=100.0)
+        pool.request("old", LeaseKind.SLOW_SWAP, priority=1, now=0.0)
+        pool.request("new", LeaseKind.HANG_EVICT, priority=4, now=190.0)
+        pool.add(1, home="old", now=0.0)
+        served = pool.serve(now=200.0)
+        assert served[0].job == "old"
+        # crossing the bound is also counted against the no-starvation
+        # guarantee
+        assert pool.stats.starvation_events == 1
+        assert pool.stats.max_wait_s >= 200.0
+
+    def test_materialize_keeps_serving_dry_pool(self):
+        pool = GlobalSparePool()
+        pool.request("a", LeaseKind.CRASH, priority=3, now=0.0)
+        fresh = iter([50, 51])
+        served = pool.serve(now=1.0, materialize=lambda job: next(fresh))
+        assert served[0].lease.provisioned
+        assert served[0].lease.node_id == 50
+
+
+# ------------------------------------------------------------- controller
+
+
+class TestFleetController:
+    def test_registration_adopts_private_spares(self):
+        ctl = FleetController(bench_slots=2)
+        c, s = make_job(ctl, "a", n=16, n_spare=3)
+        assert s.manager.spares == []          # drained
+        assert ctl.pool.free_count(home="a") == 3
+        assert s.manager.pool is not None
+        assert s.scheduler.bench is ctl.bench
+        assert ctl.census()["conserved"]
+
+    def test_take_spare_leases_from_pool(self):
+        ctl = FleetController(bench_slots=2)
+        c, s = make_job(ctl, "a", n=16, n_spare=2)
+        nid = s.take_spare(kind="crash")
+        assert s.manager.state[nid] == NodeState.ACTIVE
+        assert ctl.pool.free_count() == 1
+        leased = ctl.log.subscribe(after=0)[0]
+        kinds = [r.event.kind for r in leased]
+        assert "spare_leased" in kinds
+        assert ctl.census()["conserved"]
+
+    def test_cross_job_grant_transfers_and_conserves(self):
+        ctl = FleetController(bench_slots=2)
+        make_job(ctl, "a", n=16, n_spare=0, seed=1)
+        make_job(ctl, "b", n=16, n_spare=2, seed=2)
+        cen0 = ctl.census()
+        nid = ctl.jobs["a"].session.take_spare()
+        assert ctl.jobs["a"].transfer_grants == 1
+        assert len(ctl.ghosts) == 1
+        cen = ctl.census()
+        assert cen["conserved"]
+        assert cen["expected"] == cen0["expected"] + 1  # one provision
+        assert ctl.jobs["a"].session.manager.state[nid] == NodeState.ACTIVE
+
+    def test_dry_pool_provisions(self):
+        ctl = FleetController(bench_slots=2)
+        make_job(ctl, "a", n=8, n_spare=0)
+        nid = ctl.jobs["a"].session.take_spare()
+        assert ctl.jobs["a"].provision_grants == 1
+        assert nid in ctl.jobs["a"].session.manager.state
+        assert ctl.census()["conserved"]
+
+    def test_return_spare_lands_in_pool(self):
+        ctl = FleetController(bench_slots=2)
+        c, s = make_job(ctl, "a", n=16, n_spare=1)
+        nid = s.take_spare()
+        s.return_spare(nid)
+        assert nid not in s.manager.state      # the pool owns it again
+        assert ctl.pool.free_count(home="a") == 1
+        assert ctl.census()["conserved"]
+
+    def test_top_up_respects_home_floor(self):
+        ctl = FleetController(bench_slots=2)
+        make_job(ctl, "a", n=8, n_spare=0, seed=1)
+        make_job(ctl, "b", n=8, n_spare=0, seed=2)
+        added = ctl.top_up(global_target=6, home_min=2)
+        assert added == 6
+        assert ctl.pool.free_count(home="a") >= 2
+        assert ctl.pool.free_count(home="b") >= 2
+        assert ctl.pool.free_count() >= 6
+        assert ctl.census()["conserved"]
+
+    def test_quarantine_requalify_returns_to_pool(self):
+        ctl = FleetController(bench_slots=2)
+        c, s = make_job(ctl, "a", n=16, n_spare=4)
+        bad = c.active[0]
+        s.replace_node(bad, reason="test eviction", step=0)
+        assert s.manager.state[bad] == NodeState.QUARANTINED
+        free0 = ctl.pool.free_count()
+        s.scheduler.drain(c.t, step=0)
+        # healthy node requalifies back into the GLOBAL pool
+        assert bad not in s.manager.state
+        assert ctl.pool.free_count() == free0 + 1
+        assert ctl.census()["conserved"]
+
+    def test_shared_bench_serializes_two_jobs(self):
+        ctl = FleetController(bench_slots=1)
+        c1, s1 = make_job(ctl, "a", n=16, n_spare=4, seed=1)
+        c2, s2 = make_job(ctl, "b", n=16, n_spare=4, seed=2)
+        s1.replace_node(c1.active[0], reason="evict", step=0)
+        s2.replace_node(c2.active[0], reason="evict", step=0)
+        s1.scheduler.advance(0.0)
+        s2.scheduler.advance(0.0)
+        # one slot: at most one qualification in flight across BOTH jobs
+        assert s1.scheduler.busy + s2.scheduler.busy == 1
+        s1.scheduler.drain(1e9)
+        s2.scheduler.drain(1e9)
+        fin1 = [e for e in s1.events() if e.kind == "sweep_finish"]
+        fin2 = [e for e in s2.events() if e.kind == "sweep_finish"]
+        assert fin1 and fin2
+        # the second job's sweep queued behind the first on the shared
+        # slot: no time overlap is possible with one slot
+        assert ctl.census()["conserved"]
+
+
+# -------------------------------------------------------------- healthscan
+
+
+class TestHealthscan:
+    def test_periodic_campaign_scans_pool(self):
+        ctl = FleetController(bench_slots=2, healthscan_period_s=100.0)
+        c, s = make_job(ctl, "a", n=16, n_spare=4)
+        c.advance_idle(150.0)
+        ctl.tick()
+        assert ctl.healthscan.campaigns == 1
+        assert ctl.healthscan.scanned == 4
+        ev = [r.event for r in ctl.log.subscribe(after=0)[0]
+              if r.event.kind == "campaign_scheduled"]
+        assert len(ev) == 1 and len(ev[0].nodes) == 4
+
+    def test_grey_spare_pulled_and_quarantined(self):
+        ctl = FleetController(bench_slots=2, healthscan_period_s=100.0)
+        c, s = make_job(ctl, "a", n=16, n_spare=4)
+        bad = ctl.pool.free_ids(home="a")[0]
+        c.injector.inject(FaultKind.THERMAL, bad, now=c.t, severity=0.9)
+        c.advance_idle(150.0)
+        ctl.tick()
+        assert bad in ctl.healthscan.failed
+        assert s.manager.state[bad] == NodeState.QUARANTINED
+        assert bad not in ctl.pool.free_ids(home="a")
+        assert ctl.census()["conserved"]
+
+    def test_busy_bench_defers_scan(self):
+        ctl = FleetController(bench_slots=1, healthscan_period_s=100.0)
+        c, s = make_job(ctl, "a", n=16, n_spare=4)
+        # occupy the single slot far into the future
+        ctl.bench.occupy(0.0, 1e6)
+        c.advance_idle(150.0)
+        ctl.tick()
+        assert ctl.healthscan.campaigns == 0
+
+
+# ------------------------------------------------------------ event stream
+
+
+class TestFleetEventLog:
+    def ev(self, i):
+        return NodeSwapped(t=float(i), step=i, old=i, new=i + 1)
+
+    def test_monotonic_seq_and_replay(self):
+        log = FleetEventLog(capacity=100)
+        for i in range(10):
+            log.append("job0", self.ev(i))
+        recs, lost = log.subscribe(after=0)
+        assert [r.seq for r in recs] == list(range(1, 11))
+        assert lost == 0
+        # cursor resume mid-stream
+        recs, lost = log.subscribe(after=7)
+        assert [r.seq for r in recs] == [8, 9, 10]
+
+    def test_ring_truncation_reports_lost(self):
+        log = FleetEventLog(capacity=5)
+        for i in range(12):
+            log.append("job0", self.ev(i))
+        recs, lost = log.subscribe(after=2)
+        assert [r.seq for r in recs] == [8, 9, 10, 11, 12]
+        assert lost == 5          # seqs 3-7 evicted
+        assert log.tail == 8 and log.head == 12
+
+    def test_limit_pagination(self):
+        log = FleetEventLog(capacity=100)
+        for i in range(10):
+            log.append("job0", self.ev(i))
+        page, _ = log.subscribe(after=0, limit=4)
+        assert [r.seq for r in page] == [1, 2, 3, 4]
+        page, _ = log.subscribe(after=page[-1].seq, limit=4)
+        assert [r.seq for r in page] == [5, 6, 7, 8]
+
+    def test_job_tags_and_sse_framing(self):
+        log = FleetEventLog(capacity=100)
+        buf = io.StringIO()
+        log.attach(SSEStreamSink(buf))
+        log.append("alpha", self.ev(0))
+        log.append("beta", self.ev(1))
+        recs, _ = log.subscribe(after=0)
+        assert [r.job for r in recs] == ["alpha", "beta"]
+        out = buf.getvalue()
+        assert "id: 1\n" in out and "id: 2\n" in out
+        assert "event: swap\n" in out
+        assert '"job": "alpha"' in out
+
+    def test_session_tap_aggregates_bus(self):
+        ctl = FleetController(bench_slots=2)
+        c, s = make_job(ctl, "a", n=16, n_spare=2)
+        s.publish(self.ev(0))
+        recs, _ = ctl.log.subscribe(after=0)
+        assert any(r.event.kind == "swap" and r.job == "a" for r in recs)
+
+
+# ------------------------------------------------------------- sim driver
+
+
+class TestSimulateFleet:
+    def test_two_jobs_conserved_no_starvation(self):
+        cfg = FleetRunConfig(
+            jobs=(FleetJobSpec("a", tier=Tier.ENHANCED, n_nodes=32,
+                               n_spare=2, seed=1),
+                  FleetJobSpec("b", tier=Tier.ONLINE, n_nodes=32,
+                               n_spare=2, seed=2)),
+            duration_h=3.0, spare_target=6, home_min=1,
+            healthscan_period_s=3600.0, seed=5)
+        res = simulate_fleet(cfg)
+        assert res.census_ok
+        assert res.starvation_events == 0
+        assert res.events_logged > 0
+        assert all(j["steps"] > 0 for j in res.jobs)
+        assert 0.0 <= res.overhead_frac < 1.0
+
+    def test_bench_slots_match_scheduler_view(self):
+        cfg = FleetRunConfig(
+            jobs=(FleetJobSpec("a", n_nodes=16, n_spare=2),),
+            duration_h=1.0, bench_slots=3, spare_target=2, home_min=1,
+            rates=QUIET, initial_grey_p=0.0, seed=1)
+        res = simulate_fleet(cfg)
+        assert res.census_ok and res.starvation_events == 0

@@ -250,3 +250,72 @@ def test_data_determinism_and_sharding(step, shards):
     assert full["tokens"].max() < cfg.vocab_size
     np.testing.assert_array_equal(full["labels"][:, :-1],
                                   full["tokens"][:, 1:])
+
+
+# ------------------------------------------------------------- fleet
+
+
+@given(st.integers(2, 4),                       # concurrent jobs
+       st.lists(st.tuples(st.integers(0, 3),   # job index (mod n_jobs)
+                          st.integers(0, 4)),  # op selector
+                min_size=4, max_size=30),
+       st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_fleet_pool_contention_invariants(n_jobs, ops, seed):
+    """N random-priority jobs over ONE shared pool: (1) the fleet-wide
+    node census is conserved after every operation, (2) no home node is
+    ever granted more times than it was handed to the pool (no lease
+    double-grant), (3) every job with a pending request is served once
+    the controller ticks (no starvation)."""
+    from repro.fleet import FleetController
+    from repro.guard.session import GuardSession, Tier
+
+    rng = np.random.RandomState(seed)
+    ctl = FleetController(bench_slots=2, starvation_age_s=1e9)
+    jobs = []
+    for i in range(n_jobs):
+        c = SimCluster(8, n_spare=int(rng.randint(0, 4)), rates=QUIET,
+                       seed=seed + i)
+        s = GuardSession.from_tier(Tier.ONLINE, c, c)
+        s.register_active(c.active)
+        s.register_spares(c.spares)
+        ctl.register_job(f"j{i}", s, priority=int(rng.randint(1, 5)))
+        jobs.append(s)
+    kinds = ["swap", "crash", "hang"]
+    held = [[] for _ in range(n_jobs)]
+    requests = []
+    t = 0.0
+    for j_raw, op in ops:
+        j = j_raw % n_jobs
+        t += 1.0
+        if op <= 2:                           # synchronous lease
+            held[j].append(jobs[j].take_spare(kind=kinds[op]))
+        elif op == 3 and held[j]:             # hand a node back
+            jobs[j].return_spare(held[j].pop())
+        else:                                 # queued ask
+            requests.append(ctl.request_spare(f"j{j}", kinds[op % 3]))
+        cen = ctl.census()
+        assert cen["conserved"], cen
+
+    # (2) replay the event stream: per home fleet, a node is never
+    # granted from the free pool more often than it entered it
+    gives = {}
+    grants = {}
+    for rec in ctl.log.subscribe(after=0)[0]:
+        key = (rec.job, rec.event.to_dict().get("node_id"))
+        if rec.event.kind == "spare_reclaimed":
+            gives[key] = gives.get(key, 0) + 1
+        elif rec.event.kind == "spare_leased":
+            d = rec.event.to_dict()
+            if not d["provisioned"] and not d["transfer"]:
+                grants[key] = grants.get(key, 0) + 1
+                assert grants[key] <= gives.get(key, 0), \
+                    f"double grant of {key}"
+
+    # (3) a tick serves every queued request (provisioning keeps the
+    # pool from deadlocking); nobody is left pending
+    ctl.tick(t + 1.0)
+    assert all(r.served for r in requests)
+    assert not ctl.pool.pending()
+    assert ctl.census()["conserved"]
+    assert ctl.starvation_events() == 0
