@@ -1,0 +1,10 @@
+"""Static-analysis tooling for the repo's own discipline rules.
+
+``repro.analysis.guardlint`` is the machine-checked form of the
+invariants this codebase learned the hard way: determinism conventions
+that rng-rewind replay depends on, the float32 end-to-end dtype
+contract of the detection hot path, census conservation in the fleet
+control plane, and the no-swallowed-exceptions rule for writers and
+daemon threads. Everything here is stdlib-only (``ast`` + ``tokenize``)
+so the CI lint job can run it without installing the numeric stack.
+"""

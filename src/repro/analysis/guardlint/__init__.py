@@ -1,0 +1,13 @@
+"""guardlint: AST-based linter for this repo's hard-won invariants.
+
+Run as ``python -m repro.analysis.guardlint src/`` (stdlib-only; no
+numeric stack needed). See ``rules.py`` for the GL001–GL008 rule set and
+``pragmas.py`` for the ``# guardlint:`` scoping/suppression grammar.
+"""
+from repro.analysis.guardlint.engine import (META_RULE, RULES, LintResult,
+                                             Project, Violation, lint_paths,
+                                             rule, run)
+from repro.analysis.guardlint import rules as _rules  # noqa: F401  register
+
+__all__ = ["META_RULE", "RULES", "LintResult", "Project", "Violation",
+           "lint_paths", "rule", "run"]

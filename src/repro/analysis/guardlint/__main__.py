@@ -1,0 +1,83 @@
+"""CLI: ``python -m repro.analysis.guardlint [paths...]``.
+
+Exit code 0 when the tree is clean, 1 on any violation (including GL000
+meta-violations for reason-less or malformed suppressions), 2 on usage
+errors — so CI can gate on it directly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.guardlint import RULES, lint_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.guardlint",
+        description="AST-based invariant linter for this repo "
+                    "(GL001-GL008; see README 'Enforced invariants').")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the full JSON report to PATH "
+                         "('-' for stdout)")
+    ap.add_argument("--only", metavar="RULES", default=None,
+                    help="comma-separated rule ids to run (e.g. "
+                         "GL002,GL006)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            info = RULES[rid]
+            print(f"{rid}  {info.title}")
+            first = info.doc.split("\n\n")[0].replace("\n", " ")
+            if first:
+                print(f"       {first}")
+        return 0
+
+    only = None
+    if args.only:
+        only = [r.strip() for r in args.only.split(",") if r.strip()]
+        unknown = [r for r in only if r not in RULES]
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            return 2
+
+    result = lint_paths(args.paths or ["src"], only=only)
+
+    # With --json -, stdout IS the report: keep it valid JSON and route
+    # the human-readable lines to stderr so `guardlint --json - | jq`
+    # works.
+    human = sys.stderr if args.json == "-" else sys.stdout
+    if args.json:
+        payload = json.dumps(result.to_dict(), indent=2, sort_keys=True)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w", encoding="utf-8") as fh:
+                fh.write(payload + "\n")
+
+    for v in result.violations:
+        print(v.render(), file=human)
+    n_sup = len(result.suppressed)
+    if result.ok:
+        print(f"guardlint: clean — {result.files_scanned} files, "
+              f"{len(RULES)} rules, {n_sup} documented suppression(s)",
+              file=human)
+        return 0
+    counts = {}
+    for v in result.violations:
+        counts[v.rule] = counts.get(v.rule, 0) + 1
+    summary = ", ".join(f"{k}:{v}" for k, v in sorted(counts.items()))
+    print(f"guardlint: {len(result.violations)} violation(s) "
+          f"[{summary}] in {result.files_scanned} files", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,275 @@
+"""Guardlint engine: file loading, rule registry, suppression, reports.
+
+The engine is deliberately small: a ``LintFile`` per parsed source file
+(AST + pragmas + repo-relative path), a ``Project`` holding the lint
+targets plus the cross-file context some rules need (README text, the
+``benchmarks/`` tree and its gate manifest, the ``tests/`` sources, the
+``src/repro/kernels/`` layout), and a flat registry of rule functions
+``fn(project) -> Iterable[Violation]``. Suppression happens centrally
+after collection so every rule stays pure, and the pragma layer —
+including the mandatory-reason policy — is enforced in exactly one
+place.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.analysis.guardlint.pragmas import FilePragmas, parse_pragmas
+
+META_RULE = "GL000"         # pragma/parse problems; never suppressible
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str               # repo-relative, posix separators
+    line: int
+    message: str
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleInfo:
+    rule_id: str
+    title: str
+    doc: str
+    fn: Callable[["Project"], Iterable[Violation]]
+
+
+RULES: Dict[str, RuleInfo] = {}
+
+
+def rule(rule_id: str, title: str):
+    """Register a rule function under ``rule_id``."""
+    def deco(fn):
+        assert rule_id not in RULES, f"duplicate rule {rule_id}"
+        RULES[rule_id] = RuleInfo(rule_id, title, (fn.__doc__ or "").strip(),
+                                  fn)
+        return fn
+    return deco
+
+
+class LintFile:
+    """One parsed lint target."""
+
+    def __init__(self, path: str, rel: str, source: str,
+                 tree: Optional[ast.AST], pragmas: FilePragmas,
+                 parse_error: Optional[str] = None):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.tree = tree
+        self.pragmas = pragmas
+        self.parse_error = parse_error
+
+    @property
+    def hot(self) -> bool:
+        return self.pragmas.hot
+
+    def in_package(self, *names: str) -> bool:
+        """True when the file lives under any ``.../<name>/`` directory."""
+        parts = self.rel.split("/")
+        return any(n in parts[:-1] for n in names)
+
+
+def _rel(path: str, root: str) -> str:
+    try:
+        r = os.path.relpath(os.path.abspath(path), root)
+    except ValueError:              # different drive (windows)
+        r = os.path.abspath(path)
+    return r.replace(os.sep, "/")
+
+
+def load_file(path: str, root: str) -> LintFile:
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    pragmas = parse_pragmas(source, set(RULES))
+    try:
+        tree = ast.parse(source, filename=path)
+        err = None
+    except SyntaxError as e:
+        tree, err = None, f"syntax error: {e.msg} (line {e.lineno})"
+    return LintFile(path, _rel(path, root), source, tree, pragmas, err)
+
+
+def find_root(start: str) -> str:
+    """Walk up from ``start`` to the nearest directory holding a
+    ``pyproject.toml`` or ``.git`` (the repo root); fall back to
+    ``start`` itself."""
+    cur = os.path.abspath(start)
+    if os.path.isfile(cur):
+        cur = os.path.dirname(cur)
+    probe = cur
+    while True:
+        if os.path.exists(os.path.join(probe, "pyproject.toml")) or \
+                os.path.exists(os.path.join(probe, ".git")):
+            return probe
+        parent = os.path.dirname(probe)
+        if parent == probe:
+            return cur
+        probe = parent
+
+
+def _iter_py(path: str) -> List[str]:
+    if os.path.isfile(path):
+        return [path]
+    out = []
+    for dirpath, dirnames, filenames in os.walk(path):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                out.append(os.path.join(dirpath, fn))
+    return out
+
+
+class Project:
+    """Lint targets + the cross-file context project rules need."""
+
+    def __init__(self, paths: List[str], root: Optional[str] = None):
+        # rules must be registered before sources are loaded, so pragma
+        # parsing can validate rule ids (lazy: rules.py imports us back)
+        from repro.analysis.guardlint import rules as _rules  # noqa: F401
+        self.root = os.path.abspath(root) if root else find_root(paths[0])
+        self.files: List[LintFile] = []
+        seen = set()
+        for p in paths:
+            for fp in _iter_py(p):
+                ap = os.path.abspath(fp)
+                if ap not in seen:
+                    seen.add(ap)
+                    self.files.append(load_file(ap, self.root))
+        self._readme: Optional[str] = None
+        self._tests: Optional[Dict[str, str]] = None
+        self._bench: Optional[Dict[str, LintFile]] = None
+        self._manifest: Optional[Dict[str, Dict[str, float]]] = None
+        self._manifest_error: Optional[str] = None
+
+    # ----------------------------------------------- cross-file context
+
+    @property
+    def readme(self) -> Optional[str]:
+        if self._readme is None:
+            p = os.path.join(self.root, "README.md")
+            self._readme = open(p, encoding="utf-8").read() \
+                if os.path.isfile(p) else ""
+        return self._readme
+
+    @property
+    def tests(self) -> Dict[str, str]:
+        """tests/*.py sources keyed by repo-relative path."""
+        if self._tests is None:
+            self._tests = {}
+            tdir = os.path.join(self.root, "tests")
+            if os.path.isdir(tdir):
+                for fp in _iter_py(tdir):
+                    self._tests[_rel(fp, self.root)] = \
+                        open(fp, encoding="utf-8").read()
+        return self._tests
+
+    @property
+    def bench_files(self) -> Dict[str, LintFile]:
+        """benchmarks/bench_*.py parsed, keyed by basename."""
+        if self._bench is None:
+            self._bench = {}
+            bdir = os.path.join(self.root, "benchmarks")
+            if os.path.isdir(bdir):
+                for fn in sorted(os.listdir(bdir)):
+                    if fn.startswith("bench_") and fn.endswith(".py"):
+                        self._bench[fn] = load_file(
+                            os.path.join(bdir, fn), self.root)
+        return self._bench
+
+    @property
+    def gate_manifest(self) -> Optional[Dict[str, Dict[str, float]]]:
+        """Parsed ``benchmarks/gates.json`` (None when absent)."""
+        if self._manifest is None and self._manifest_error is None:
+            p = os.path.join(self.root, "benchmarks", "gates.json")
+            if not os.path.isfile(p):
+                self._manifest_error = "missing"
+                return None
+            try:
+                self._manifest = json.load(open(p, encoding="utf-8"))
+            except ValueError as e:
+                self._manifest_error = f"unreadable gates.json: {e}"
+        return self._manifest
+
+    @property
+    def manifest_error(self) -> Optional[str]:
+        self.gate_manifest            # noqa: B018 — populate lazily
+        return self._manifest_error
+
+    def kernels_dir(self) -> Optional[str]:
+        p = os.path.join(self.root, "src", "repro", "kernels")
+        return p if os.path.isdir(p) else None
+
+
+@dataclasses.dataclass
+class LintResult:
+    violations: List[Violation]
+    suppressed: List[Tuple[Violation, str]]     # (violation, reason)
+    files_scanned: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_dict(self) -> Dict[str, object]:
+        counts: Dict[str, int] = {}
+        for v in self.violations:
+            counts[v.rule] = counts.get(v.rule, 0) + 1
+        return {
+            "ok": self.ok,
+            "files_scanned": self.files_scanned,
+            "counts": counts,
+            "violations": [v.to_dict() for v in self.violations],
+            "suppressed": [{**v.to_dict(), "reason": r}
+                           for v, r in self.suppressed],
+        }
+
+
+def run(project: Project,
+        only: Optional[List[str]] = None) -> LintResult:
+    """Run every registered rule (or the ``only`` subset) and apply
+    pragma suppression. GL000 (meta) violations are never suppressed."""
+    # rules must be importable exactly once, wherever run() is called from
+    from repro.analysis.guardlint import rules as _rules  # noqa: F401
+    raw: List[Violation] = []
+    for f in project.files:
+        if f.parse_error:
+            raw.append(Violation(META_RULE, f.rel, 1, f.parse_error))
+        for err in f.pragmas.errors:
+            raw.append(Violation(META_RULE, f.rel, err.line, err.message))
+    for info in RULES.values():
+        if info.rule_id == META_RULE:
+            continue
+        if only and info.rule_id not in only:
+            continue
+        raw.extend(info.fn(project))
+
+    by_rel = {f.rel: f for f in project.files}
+    kept: List[Violation] = []
+    suppressed: List[Tuple[Violation, str]] = []
+    for v in sorted(raw, key=lambda v: (v.path, v.line, v.rule)):
+        f = by_rel.get(v.path)
+        reason = None
+        if f is not None and v.rule != META_RULE:
+            reason = f.pragmas.suppresses(v.rule, v.line)
+        if reason is None:
+            kept.append(v)
+        else:
+            suppressed.append((v, reason))
+    return LintResult(kept, suppressed, len(project.files))
+
+
+def lint_paths(paths: List[str], root: Optional[str] = None,
+               only: Optional[List[str]] = None) -> LintResult:
+    return run(Project(paths, root=root), only=only)

@@ -1,0 +1,139 @@
+"""Guardlint pragma comments: scoping and suppression with mandatory reasons.
+
+Three pragma forms, all inside ordinary ``#`` comments:
+
+  ``# guardlint: hot``
+      Tags the MODULE as a detection/sim hot path. Hot modules opt in to
+      the dtype-discipline (GL002) and allocation-discipline (GL003)
+      rules; cold modules are exempt because a float64 scratch array or
+      a per-node Python loop only costs something where the fleet-sized
+      arrays live.
+
+  ``# guardlint: disable=GL002[,GL003] reason=<why this is safe>``
+      Suppresses the listed rules. Trailing on a code line it applies to
+      that line's violations; on a comment-only line it applies to the
+      next code line (for statements whose pragma would not fit). The
+      ``reason=`` clause is MANDATORY — a suppression without a written
+      justification is itself a violation (GL000), so every exemption in
+      the tree documents why the invariant does not apply.
+
+  ``# guardlint: disable-file=GL003 reason=<why>``
+      Same, scoped to the whole file.
+
+Comments are found with ``tokenize`` (never by string search), so pragma
+look-alikes inside string literals are ignored.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, List, Optional, Set, Tuple
+
+PRAGMA_RE = re.compile(r"#\s*guardlint:\s*(?P<body>.*)$")
+DISABLE_RE = re.compile(
+    r"^disable(?P<scope>-file)?\s*=\s*(?P<rules>[A-Za-z0-9,\s]+?)"
+    r"(?:\s+reason\s*=\s*(?P<reason>.*))?$")
+RULE_ID_RE = re.compile(r"^GL\d{3}$")
+
+
+@dataclasses.dataclass(frozen=True)
+class PragmaError:
+    """A malformed pragma — surfaced as a GL000 violation (never
+    suppressible: the suppression policy cannot opt out of itself)."""
+    line: int
+    message: str
+
+
+@dataclasses.dataclass
+class FilePragmas:
+    """Parsed pragma state for one source file."""
+    hot: bool = False
+    # rule id -> file-wide suppression reason
+    file_disables: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # line -> {rule id -> reason}
+    line_disables: Dict[int, Dict[str, str]] = \
+        dataclasses.field(default_factory=dict)
+    errors: List[PragmaError] = dataclasses.field(default_factory=list)
+
+    def suppresses(self, rule: str, line: int) -> Optional[str]:
+        """Reason string if ``rule`` is suppressed at ``line``, else None."""
+        if rule in self.file_disables:
+            return self.file_disables[rule]
+        by_line = self.line_disables.get(line)
+        if by_line and rule in by_line:
+            return by_line[rule]
+        return None
+
+
+def _comment_tokens(source: str) -> Tuple[List[tokenize.TokenInfo], Set[int]]:
+    """All COMMENT tokens plus the set of lines that carry real code."""
+    comments: List[tokenize.TokenInfo] = []
+    code_lines: Set[int] = set()
+    skip = {tokenize.COMMENT, tokenize.NL, tokenize.NEWLINE,
+            tokenize.INDENT, tokenize.DEDENT, tokenize.ENCODING,
+            tokenize.ENDMARKER}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                comments.append(tok)
+            elif tok.type not in skip:
+                for ln in range(tok.start[0], tok.end[0] + 1):
+                    code_lines.add(ln)
+    # guardlint: disable=GL006 reason=partial comment list on a broken
+    # file is the intended result; ast.parse reports the syntax error as
+    # GL000 with line info, so nothing is hidden from the user
+    except (tokenize.TokenError, IndentationError):
+        pass
+    return comments, code_lines
+
+
+def parse_pragmas(source: str, known_rules: Set[str]) -> FilePragmas:
+    out = FilePragmas()
+    comments, code_lines = _comment_tokens(source)
+    n_lines = source.count("\n") + 1
+    for tok in comments:
+        m = PRAGMA_RE.search(tok.string)
+        if m is None:
+            continue
+        line = tok.start[0]
+        body = m.group("body").strip()
+        if body == "hot" or body.startswith("hot "):
+            # trailing prose after "hot" is annotation, e.g.
+            # "# guardlint: hot  (detector window lives here)"
+            out.hot = True
+            continue
+        dm = DISABLE_RE.match(body)
+        if dm is None:
+            out.errors.append(PragmaError(
+                line, f"malformed guardlint pragma: {body!r} "
+                      f"(expected 'hot' or 'disable[-file]=GLxxx "
+                      f"reason=...')"))
+            continue
+        rules = [r.strip() for r in dm.group("rules").split(",") if r.strip()]
+        reason = (dm.group("reason") or "").strip()
+        bad = [r for r in rules if not RULE_ID_RE.match(r)
+               or (known_rules and r not in known_rules)]
+        if bad:
+            out.errors.append(PragmaError(
+                line, f"unknown rule id(s) in pragma: {', '.join(bad)}"))
+            continue
+        if not reason:
+            out.errors.append(PragmaError(
+                line, f"suppression of {','.join(rules)} carries no "
+                      f"reason= — every exemption must say why it is safe"))
+            continue
+        if dm.group("scope"):                       # disable-file
+            for r in rules:
+                out.file_disables[r] = reason
+        else:
+            target = line
+            if line not in code_lines:
+                # comment-only pragma line: applies to the next code line
+                target = next((ln for ln in range(line + 1, n_lines + 1)
+                               if ln in code_lines), line)
+            slot = out.line_disables.setdefault(target, {})
+            for r in rules:
+                slot[r] = reason
+    return out

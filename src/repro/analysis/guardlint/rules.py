@@ -1,0 +1,647 @@
+"""The guardlint rule set: this repo's hard-won invariants, as AST checks.
+
+Each rule encodes a discipline that was once enforced only by review
+(and, in several cases, violated and hand-fixed in a prior PR — see the
+README "Enforced invariants" table for the incident behind each):
+
+  GL001  determinism in replay paths (rng-rewind, bit-identical goldens)
+  GL002  float32 dtype discipline in hot modules (the PR 8 leak class)
+  GL003  no per-node Python loops over fleet-sized iterables in hot code
+  GL004  event-taxonomy completeness (kind + registry + README + JSONL)
+  GL005  census assertion in every pool-mutating control-plane method
+  GL006  no swallowed exceptions (the PR 6 stale-restore class)
+  GL007  benchmark CI gates tracked in a checked manifest
+  GL008  every kernel backend ships a ref.py and a golden test using it
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.guardlint.engine import (LintFile, Project, Violation,
+                                             rule)
+
+# --------------------------------------------------------------- helpers
+
+
+def build_aliases(tree: ast.AST) -> Dict[str, str]:
+    """local name -> canonical dotted module/object it refers to."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    aliases[a.name.split(".")[0]] = a.name.split(".")[0]
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def canonical(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Dotted name of an attribute chain with its root resolved through
+    the file's imports: ``np.random.rand`` -> ``numpy.random.rand``."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(aliases.get(node.id, node.id))
+    return ".".join(reversed(parts))
+
+
+def _has_kw(call: ast.Call, name: str) -> bool:
+    return any(kw.arg == name for kw in call.keywords)
+
+
+def _terminal(node: ast.AST) -> Optional[str]:
+    """Last component of a Name/Attribute chain (``self.nodes`` -> nodes)."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+# ------------------------------------------------------- GL001 determinism
+
+# generator constructors that are fine WHEN GIVEN an explicit seed/bitgen
+_SEEDABLE = {"RandomState", "default_rng", "SFC64", "PCG64", "MT19937",
+             "Philox", "Generator", "Random"}
+_REPLAY_PACKAGES = ("simcluster", "core", "diagnose", "ccltrace")
+
+
+@rule("GL001", "determinism in replay paths")
+def gl001(project: Project) -> Iterable[Violation]:
+    """The sim composes windows with rng-rewind replay and the detector
+    goldens pin bit-identical scalar-vs-batched verdicts (PRs 3, 5, 8).
+    Both break the moment any replay-path module reads wall-clock time
+    or draws from a global RNG stream: ``time.time()``, module-level
+    ``np.random.*`` / ``random.*`` calls, and UNSEEDED generator
+    constructions are banned in ``simcluster``/``core``/``diagnose``/
+    ``ccltrace``. Explicitly seeded generators (``np.random.RandomState
+    (seed)``, ``default_rng(seed)``, keyed ``SFC64`` streams) pass, as
+    does ``time.perf_counter`` self-timing (it measures cost, it never
+    enters sim state)."""
+    for f in project.files:
+        if f.tree is None or not f.in_package(*_REPLAY_PACKAGES):
+            continue
+        aliases = build_aliases(f.tree)
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = canonical(node.func, aliases)
+            if dn is None:
+                continue
+            if dn == "time.time":
+                yield Violation(
+                    "GL001", f.rel, node.lineno,
+                    "wall-clock time.time() in a replay path — sim/"
+                    "detector state must be a function of seeds and "
+                    "inputs only (use the sim clock, or perf_counter "
+                    "for pure self-timing)")
+            elif dn.startswith("numpy.random.") or dn == "random.seed":
+                last = dn.rsplit(".", 1)[1]
+                if last in _SEEDABLE:
+                    if not node.args and not node.keywords:
+                        yield Violation(
+                            "GL001", f.rel, node.lineno,
+                            f"unseeded {dn}() — replay paths must seed "
+                            f"every generator explicitly")
+                else:
+                    yield Violation(
+                        "GL001", f.rel, node.lineno,
+                        f"module-level RNG stream {dn}() — shared global "
+                        f"state breaks rng-rewind replay; draw from an "
+                        f"explicitly seeded generator instance")
+            elif dn.startswith("random.") and aliases.get("random") == \
+                    "random":
+                last = dn.rsplit(".", 1)[1]
+                if last in _SEEDABLE:
+                    if not node.args and not node.keywords:
+                        yield Violation(
+                            "GL001", f.rel, node.lineno,
+                            f"unseeded {dn}() in a replay path")
+                else:
+                    yield Violation(
+                        "GL001", f.rel, node.lineno,
+                        f"stdlib global RNG {dn}() in a replay path — "
+                        f"use a seeded random.Random or numpy generator")
+
+
+# --------------------------------------------------- GL002 dtype discipline
+
+_FLOAT_CTORS = {"zeros", "ones", "empty", "full"}
+_NP_MODULES = ("numpy", "jax.numpy")
+
+
+def _is_float64_expr(node: ast.AST, aliases: Dict[str, str]) -> bool:
+    dn = canonical(node, aliases)
+    if dn in {f"{m}.float64" for m in _NP_MODULES}:
+        return True
+    if dn == "float":                  # builtin float == f64 for numpy
+        return True
+    return isinstance(node, ast.Constant) and node.value == "float64"
+
+
+@rule("GL002", "float32 dtype discipline in hot modules")
+def gl002(project: Project) -> Iterable[Violation]:
+    """PR 8 hand-fixed float64 upcast leaks that silently doubled the
+    resident detector window (a dtype-defaulting ``np.zeros`` here, a
+    stray ``astype`` there). In modules tagged ``# guardlint: hot`` the
+    fleet-sized arrays are float32 end-to-end by contract (the
+    fleet_score kernel is bit-reproducible only in f32), so this rule
+    bans float64 mentions (``np.float64``, ``astype(float)``,
+    ``dtype="float64"``) and dtype-DEFAULTING float constructors
+    (``np.zeros(shape)`` defaults to f64). Deliberate f64 accumulators
+    carry a ``disable=GL002`` pragma with the reason written down."""
+    for f in project.files:
+        if f.tree is None or not f.hot:
+            continue
+        aliases = build_aliases(f.tree)
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dn = canonical(node.func, aliases)
+            # explicit float64 (or builtin float) anywhere in a call's
+            # arguments: astype(np.float64), dtype=float, "float64"...
+            for sub in list(node.args) + [kw.value for kw in node.keywords]:
+                if _is_float64_expr(sub, aliases):
+                    yield Violation(
+                        "GL002", f.rel, node.lineno,
+                        "float64 dtype in a hot module — the detection/"
+                        "sim hot path is float32 end-to-end (PR 8 leak "
+                        "class); pass np.float32 or justify with a "
+                        "disable=GL002 pragma")
+                    break
+            if dn is None:
+                continue
+            mod, _, last = dn.rpartition(".")
+            if mod in _NP_MODULES and last in _FLOAT_CTORS:
+                dtype_pos = 2 if last == "full" else 1
+                if len(node.args) <= dtype_pos and \
+                        not _has_kw(node, "dtype"):
+                    yield Violation(
+                        "GL002", f.rel, node.lineno,
+                        f"dtype-defaulting {dn}() allocates float64 — "
+                        f"hot-module arrays must state their dtype "
+                        f"(np.float32 for fleet data)")
+
+
+# ------------------------------------------------ GL003 hot-path allocation
+
+_FLEET_ITER_NAMES = {"nodes", "node_ids", "all_nodes", "fleet"}
+_FLEET_SIZE_NAMES = {"n", "n_nodes", "num_nodes", "fleet_size"}
+
+
+def _fleet_sized(it: ast.AST) -> Optional[str]:
+    """Describe ``it`` if it looks like a fleet-sized iterable."""
+    t = _terminal(it)
+    if t in _FLEET_ITER_NAMES:
+        return t
+    if isinstance(it, ast.Call) and _terminal(it.func) == "range":
+        for sub in ast.walk(it):
+            st = _terminal(sub)
+            if st in _FLEET_SIZE_NAMES:
+                return f"range(..{st}..)"
+            if isinstance(sub, ast.Call) and _terminal(sub.func) == "len" \
+                    and sub.args and _terminal(sub.args[0]) in \
+                    (_FLEET_ITER_NAMES | {"node_ids"}):
+                return f"range(len({_terminal(sub.args[0])}))"
+    return None
+
+
+@rule("GL003", "no per-node Python loops in hot modules")
+def gl003(project: Project) -> Iterable[Violation]:
+    """The 8.9x (PR 3) and 100k-node (PR 8) scale-ups came from deleting
+    per-node Python loops: one window must cost a fixed number of numpy
+    reductions, not O(N) interpreter iterations. In ``# guardlint: hot``
+    modules, ``for``/comprehension iteration over fleet-sized iterables
+    (``nodes``, ``node_ids``, ``range(self.n)``, ``range(len(nodes))``)
+    is banned. O(flagged)/O(changed) loops are fine (and don't match);
+    a deliberate O(N) materialization (debug helpers, compat iterators)
+    carries a pragma saying so."""
+    for f in project.files:
+        if f.tree is None or not f.hot:
+            continue
+        for node in ast.walk(f.tree):
+            iters: List[Tuple[ast.AST, int]] = []
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters.append((node.iter, node.lineno))
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters.extend((g.iter, node.lineno)
+                             for g in node.generators)
+            for it, lineno in iters:
+                desc = _fleet_sized(it)
+                if desc:
+                    yield Violation(
+                        "GL003", f.rel, lineno,
+                        f"per-node Python loop over fleet-sized "
+                        f"iterable '{desc}' in a hot module — vectorize "
+                        f"(numpy reduction / gather) or justify with a "
+                        f"disable=GL003 pragma")
+
+
+# --------------------------------------------- GL004 event-taxonomy complete
+
+_JSON_ATOMS = {"int", "float", "str", "bool", "bytes", "None", "object"}
+_JSON_CONTAINERS = {"Tuple", "tuple", "List", "list", "Dict", "dict",
+                    "Optional", "Union", "FrozenSet", "frozenset",
+                    "Sequence", "Mapping"}
+
+
+def _jsonable_annotation(ann: ast.AST) -> bool:
+    if isinstance(ann, ast.Constant):
+        return ann.value is None or ann.value is Ellipsis or \
+            isinstance(ann.value, str)
+    t = _terminal(ann)
+    if t in _JSON_ATOMS or t in _JSON_CONTAINERS:
+        if isinstance(ann, (ast.Name, ast.Attribute)):
+            return True
+    if isinstance(ann, ast.Subscript) and _terminal(ann.value) in \
+            _JSON_CONTAINERS:
+        inner = ann.slice
+        elts = inner.elts if isinstance(inner, ast.Tuple) else [inner]
+        return all(_jsonable_annotation(e) for e in elts)
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        return _jsonable_annotation(ann.left) and \
+            _jsonable_annotation(ann.right)
+    return False
+
+
+def _event_classes(project: Project) \
+        -> List[Tuple[ast.ClassDef, LintFile]]:
+    """Every class transitively subclassing ``GuardEvent`` (by name)."""
+    defs: List[Tuple[ast.ClassDef, LintFile]] = []
+    for f in project.files:
+        if f.tree is None:
+            continue
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.ClassDef):
+                defs.append((node, f))
+    event_names = {"GuardEvent"}
+    changed = True
+    while changed:
+        changed = False
+        for cd, _ in defs:
+            if cd.name in event_names:
+                continue
+            if any(_terminal(b) in event_names for b in cd.bases):
+                event_names.add(cd.name)
+                changed = True
+    return [(cd, f) for cd, f in defs
+            if cd.name in event_names and cd.name != "GuardEvent"]
+
+
+def _registry_members(tree: ast.AST) -> Set[str]:
+    """Class names listed in any module-level ``*EVENT_TYPES`` tuple."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign):
+            targets = [node.target]
+        else:
+            continue
+        if not any(isinstance(t, ast.Name) and t.id.endswith("EVENT_TYPES")
+                   for t in targets):
+            continue
+        if isinstance(node.value, (ast.Tuple, ast.List)):
+            for e in node.value.elts:
+                t = _terminal(e)
+                if t:
+                    out.add(t)
+    return out
+
+
+@rule("GL004", "event-taxonomy completeness")
+def gl004(project: Project) -> Iterable[Violation]:
+    """Every consumer of the control plane — sinks, the fleet log, the
+    benchmarks, the README's operator docs — reads the typed GuardEvent
+    taxonomy. A subclass that forgets its ``kind``, skips the
+    ``EVENT_TYPES`` registry, misses its README taxonomy row, or smuggles
+    a non-JSONL-serializable payload field breaks one of them silently.
+    All four are cross-checked statically for every ``GuardEvent``
+    subclass in the tree."""
+    events = _event_classes(project)
+    kinds: Dict[str, Tuple[str, str, int]] = {}
+    registries: Dict[str, Set[str]] = {}
+    for cd, f in events:
+        if f.rel not in registries:
+            registries[f.rel] = _registry_members(f.tree)
+        kind_value: Optional[str] = None
+        for stmt in cd.body:
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name) and \
+                    stmt.target.id == "kind":
+                if isinstance(stmt.value, ast.Constant) and \
+                        isinstance(stmt.value.value, str):
+                    kind_value = stmt.value.value
+        if kind_value is None:
+            yield Violation(
+                "GL004", f.rel, cd.lineno,
+                f"event class {cd.name} does not declare its own "
+                f"``kind: ClassVar[str]`` wire name")
+        else:
+            prev = kinds.get(kind_value)
+            if prev is not None:
+                yield Violation(
+                    "GL004", f.rel, cd.lineno,
+                    f"event kind {kind_value!r} of {cd.name} collides "
+                    f"with {prev[0]} ({prev[1]}:{prev[2]})")
+            else:
+                kinds[kind_value] = (cd.name, f.rel, cd.lineno)
+            if f"`{kind_value}`" not in (project.readme or ""):
+                yield Violation(
+                    "GL004", f.rel, cd.lineno,
+                    f"event kind `{kind_value}` ({cd.name}) has no row "
+                    f"in the README event-taxonomy table")
+        if cd.name not in registries[f.rel]:
+            yield Violation(
+                "GL004", f.rel, cd.lineno,
+                f"event class {cd.name} is not listed in its module's "
+                f"*EVENT_TYPES registry tuple")
+        for stmt in cd.body:
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name) and \
+                    stmt.target.id != "kind":
+                ann = stmt.annotation
+                if _terminal(ann) == "ClassVar" or (
+                        isinstance(ann, ast.Subscript) and
+                        _terminal(ann.value) == "ClassVar"):
+                    continue
+                if not _jsonable_annotation(ann):
+                    yield Violation(
+                        "GL004", f.rel, stmt.lineno,
+                        f"{cd.name}.{stmt.target.id} is not statically "
+                        f"JSONL-serializable — event payloads must be "
+                        f"int/float/str/bool or tuples/dicts of those "
+                        f"(the JsonlSink writes them verbatim)")
+
+
+# ----------------------------------------------- GL005 census discipline
+
+_CENSUS_CLASSES = {"GlobalSparePool", "FleetController"}
+_POOL_ATTRS = {"_free", "_free_by_home", "_leased", "_queue", "granted_to",
+               "jobs", "ghosts", "pool"}
+_MUTATORS = {"add", "remove", "pop", "popleft", "append", "appendleft",
+             "extend", "insert", "clear", "update", "setdefault",
+             "grant", "note_provisioned", "request", "serve",
+             "register_job"}
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    """``self.<attr>`` (possibly under subscripts) -> attr name."""
+    while isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and \
+            isinstance(node.value, ast.Name) and node.value.id == "self":
+        return node.attr
+    return None
+
+
+def _mutates_pool(fn: ast.FunctionDef) -> Optional[int]:
+    """Line of the first pool-state mutation in ``fn`` (None if pure)."""
+    for node in ast.walk(fn):
+        targets: List[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        elif isinstance(node, ast.Delete):
+            targets = node.targets
+        for t in targets:
+            if _self_attr(t) in _POOL_ATTRS:
+                return node.lineno
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr in _MUTATORS and \
+                _self_attr(node.func.value) in _POOL_ATTRS:
+            return node.lineno
+    return None
+
+
+def _has_census_assert(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "_assert_census":
+            return True
+        if isinstance(node, ast.Assert) and \
+                "census" in ast.dump(node.test).lower():
+            return True
+    return False
+
+
+@rule("GL005", "census assertion in pool-mutating methods")
+def gl005(project: Project) -> Iterable[Violation]:
+    """The fleet bench gates a bit-consistent census: every node is in
+    exactly one place (a job, the free pool, or the ghost ledger). That
+    conservation law survives refactors only because the mutating
+    control-plane entry points assert it on the spot — so every
+    ``GlobalSparePool``/``FleetController`` method that touches pool
+    state (free list, lease table, queue, ghosts, grant counters) must
+    call ``self._assert_census()`` before returning. ``__init__`` is
+    exempt (there is nothing to conserve mid-construction)."""
+    for f in project.files:
+        if f.tree is None:
+            continue
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.ClassDef) or \
+                    node.name not in _CENSUS_CLASSES:
+                continue
+            for stmt in node.body:
+                if not isinstance(stmt, ast.FunctionDef):
+                    continue
+                if stmt.name in {"__init__", "_assert_census"}:
+                    continue
+                mut_line = _mutates_pool(stmt)
+                if mut_line is not None and not _has_census_assert(stmt):
+                    yield Violation(
+                        "GL005", f.rel, stmt.lineno,
+                        f"{node.name}.{stmt.name} mutates pool state "
+                        f"(line {mut_line}) without invoking the census "
+                        f"assertion — call self._assert_census() before "
+                        f"returning")
+
+
+# -------------------------------------------- GL006 swallowed exceptions
+
+def _swallow_only(body: List[ast.stmt]) -> bool:
+    for stmt in body:
+        if isinstance(stmt, (ast.Pass, ast.Continue)):
+            continue
+        if isinstance(stmt, ast.Expr) and \
+                isinstance(stmt.value, ast.Constant):
+            continue                           # docstring / ellipsis
+        return False
+    return True
+
+
+@rule("GL006", "no swallowed exceptions")
+def gl006(project: Project) -> Iterable[Violation]:
+    """PR 6 found the daemon-thread checkpoint writer swallowing its
+    failures, so restores silently loaded STALE state — the exact
+    failure mode Guard exists to catch, reproduced in our own plumbing.
+    Bare ``except:`` is banned outright, and ANY handler whose body only
+    passes/continues is a swallowed exception: surface it (store it for
+    the caller like ``CheckpointManager._write_safe``), log it with the
+    failing payload, or restructure so the exception cannot happen."""
+    for f in project.files:
+        if f.tree is None:
+            continue
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                yield Violation(
+                    "GL006", f.rel, node.lineno,
+                    "bare except: catches SystemExit/KeyboardInterrupt "
+                    "and hides the failure — name the exception type "
+                    "and handle or surface it")
+            elif _swallow_only(node.body):
+                yield Violation(
+                    "GL006", f.rel, node.lineno,
+                    "exception handler swallows the error (body is only "
+                    "pass/continue) — surface it, log it with the "
+                    "failing payload, or restructure (PR 6 stale-"
+                    "restore class)")
+
+
+# --------------------------------------------- GL007 bench-gate manifest
+
+_GATE_NAME_RE = re.compile(r"^(?=[A-Z])(?=[A-Z0-9_]*GATE)[A-Z0-9_]+$")
+
+
+def _gate_constants(tree: ast.AST) -> Dict[str, Tuple[float, int]]:
+    """Module-level numeric GATE constants: name -> (value, line)."""
+    out: Dict[str, Tuple[float, int]] = {}
+    for node in tree.body if isinstance(tree, ast.Module) else []:
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        t = node.targets[0]
+        if not isinstance(t, ast.Name) or not _GATE_NAME_RE.match(t.id):
+            continue
+        v: ast.AST = node.value
+        sign = 1.0
+        if isinstance(v, ast.UnaryOp) and isinstance(v.op, ast.USub):
+            sign, v = -1.0, v.operand
+        if isinstance(v, ast.Constant) and \
+                isinstance(v.value, (int, float)) and \
+                not isinstance(v.value, bool):
+            out[t.id] = (sign * float(v.value), node.lineno)
+    return out
+
+
+@rule("GL007", "bench gates tracked in the manifest")
+def gl007(project: Project) -> Iterable[Violation]:
+    """CI regression gates live as module constants in
+    ``benchmarks/bench_*.py``. A refactor that renames, deletes or
+    quietly relaxes one silently removes a CI guarantee — so every gate
+    constant must appear, with its exact value, in the checked manifest
+    ``benchmarks/gates.json``. Loosening a gate therefore always shows
+    up as a reviewed manifest diff, and a deleted gate leaves a stale
+    manifest row that fails the lint until someone owns the removal."""
+    benches = project.bench_files
+    if not benches:
+        return
+    manifest = project.gate_manifest
+    if manifest is None:
+        has_gates = any(_gate_constants(bf.tree) for bf in benches.values()
+                        if bf.tree is not None)
+        if has_gates:
+            yield Violation(
+                "GL007", "benchmarks/gates.json", 1,
+                f"gate manifest missing/unreadable "
+                f"({project.manifest_error}) but bench modules define "
+                f"CI gate constants")
+        return
+    for fname, bf in benches.items():
+        if bf.tree is None:
+            continue
+        gates = _gate_constants(bf.tree)
+        listed: Dict[str, float] = dict(manifest.get(fname, {}))
+        for name, (value, line) in gates.items():
+            if name not in listed:
+                yield Violation(
+                    "GL007", bf.rel, line,
+                    f"gate constant {name} = {value} is not in "
+                    f"benchmarks/gates.json — register it so it cannot "
+                    f"silently vanish")
+            elif float(listed[name]) != value:
+                yield Violation(
+                    "GL007", bf.rel, line,
+                    f"gate constant {name} = {value} drifted from the "
+                    f"manifest value {listed[name]} — changing a CI "
+                    f"gate requires updating benchmarks/gates.json in "
+                    f"the same change")
+        for name in listed:
+            if name not in gates:
+                yield Violation(
+                    "GL007", "benchmarks/gates.json", 1,
+                    f"manifest lists gate {name} for {fname} but the "
+                    f"constant no longer exists — a CI gate vanished")
+    for fname in manifest:
+        if fname.startswith("__"):          # manifest self-documentation
+            continue
+        if fname not in benches:
+            yield Violation(
+                "GL007", "benchmarks/gates.json", 1,
+                f"manifest lists {fname} but no such bench module "
+                f"exists — a gated benchmark vanished")
+
+
+# ----------------------------------------------- GL008 kernel ref parity
+
+@rule("GL008", "kernel backends ship a ref.py and a golden test")
+def gl008(project: Project) -> Iterable[Violation]:
+    """Every ``src/repro/kernels/<name>/`` backend follows the
+    ops/ref/impl idiom: ``ref.py`` is the plain-NumPy oracle the fused
+    jax/pallas paths are golden-tested against (bit-identical verdicts
+    are the fleet_score contract). A kernel without a ref, or whose ref
+    no test imports, has no enforced parity — exactly how backend drift
+    starts. The rule requires ``ref.py`` next to every ``ops.py`` and at
+    least one ``tests/*.py`` that names the kernel package AND one of
+    the ref module's public functions."""
+    kdir = project.kernels_dir()
+    if kdir is None:
+        return
+    tests = project.tests
+    for name in sorted(os.listdir(kdir)):
+        sub = os.path.join(kdir, name)
+        if not os.path.isdir(sub) or \
+                not os.path.isfile(os.path.join(sub, "ops.py")):
+            continue
+        rel = f"src/repro/kernels/{name}"
+        ref_path = os.path.join(sub, "ref.py")
+        if not os.path.isfile(ref_path):
+            yield Violation(
+                "GL008", f"{rel}/ops.py", 1,
+                f"kernel backend {name} has no ref.py — every backend "
+                f"ships a plain-NumPy oracle for golden testing")
+            continue
+        try:
+            ref_tree = ast.parse(open(ref_path, encoding="utf-8").read())
+        except SyntaxError as e:
+            yield Violation("GL008", f"{rel}/ref.py", e.lineno or 1,
+                            f"ref.py unparseable: {e.msg}")
+            continue
+        ref_names = [n.name for n in ref_tree.body
+                     if isinstance(n, (ast.FunctionDef, ast.ClassDef))
+                     and not n.name.startswith("_")]
+        pkg = f"repro.kernels.{name}"
+        hit = any(pkg in src and any(rn in src for rn in ref_names)
+                  for src in tests.values())
+        if not hit:
+            yield Violation(
+                "GL008", f"{rel}/ref.py", 1,
+                f"no test under tests/ references {pkg} together with a "
+                f"ref.py function ({', '.join(ref_names[:4])}...) — the "
+                f"backend has no enforced golden parity")

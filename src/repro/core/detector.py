@@ -1,3 +1,4 @@
+# guardlint: hot  (fleet-sized arrays live here: float32, no per-node loops)
 """Peer-relative, multi-signal, temporally-filtered straggler detection (§4.2).
 
 The detector never uses absolute thresholds. Every metric is scored against
@@ -137,6 +138,8 @@ class FleetAssessment:
         return self.node(i)
 
     def __iter__(self) -> Iterator[NodeAssessment]:
+        # guardlint: disable=GL003 reason=compat sequence protocol for
+        # old-style consumers; the hot path reads the arrays directly
         for i in range(len(self.node_ids)):
             yield self.node(i)
 

@@ -1,3 +1,4 @@
+# guardlint: hot  (fleet-sized arrays live here: float32, no per-node loops)
 """Telemetry schema, ring buffers and the Collector protocol (§4.1).
 
 Guard consumes fleet telemetry through a single narrow interface — a

@@ -1,3 +1,4 @@
+# guardlint: hot  (fleet-sized arrays live here: float32, no per-node loops)
 """Root-cause classification and routing for flagged nodes.
 
 The what-if engine says *how much* each node delays the job; the

@@ -1,3 +1,4 @@
+# guardlint: hot  (fleet-sized arrays live here: float32, no per-node loops)
 """Per-window, per-node timing decompositions (the diagnosis substrate).
 
 Blame attribution needs more than the detector's step-time metric: it
@@ -110,6 +111,8 @@ class TimingTrace:
         # rolling per-channel window sums (f64 accumulators: adding and
         # later subtracting the same stored f32 row keeps the drift at
         # rounding noise), so ``mean`` is O(N) instead of O(depth * N)
+        # guardlint: disable=GL002 reason=rolling add/subtract accumulator
+        # — f32 sums drift as windows cycle; the stored rows stay f32
         self._sums = {ch: np.zeros(n, np.float64) for ch in CHANNELS}
         self._means = {ch: np.empty(n, np.float32) for ch in CHANNELS}
         self._sums_stale = False
@@ -181,6 +184,8 @@ class TimingTrace:
         until the next ``mean`` of the same channel; copy to retain."""
         if self._sums_stale:
             for ch, buf in self._bufs.items():
+                # guardlint: disable=GL002 reason=recomputing the rolling
+                # f64 accumulator (see _alloc); output means stay f32
                 np.sum(buf[:self._used], axis=0, dtype=np.float64,
                        out=self._sums[ch])
             self._sums_stale = False

@@ -1,3 +1,4 @@
+# guardlint: hot  (fleet-sized arrays live here: float32, no per-node loops)
 """Vectorized what-if counterfactual replay over the collective structure.
 
 The peer-relative detector scores the *measured* per-node step time,
@@ -207,10 +208,10 @@ def whatif(own: np.ndarray, topology: Topology,
     # "slowest OTHER group": top-2 of the group maxima (ties resolve to
     # the shared max, which is exactly right)
     if topology.n_groups == 1:
-        others = np.full(1, -np.inf)
+        others = np.full(1, -np.inf, own.dtype)
     else:
         part = np.partition(gmax, topology.n_groups - 2)
-        g1, g2 = float(part[-1]), float(part[-2])
+        g1, g2 = part[-1], part[-2]     # numpy scalars: keep own's dtype
         others = np.where(gmax == g1, g2, g1)
     new_group = np.maximum(np.maximum(second, ref), others)
     marginal = np.zeros_like(own)

@@ -128,6 +128,25 @@ class FleetController:
             return 0.0
         return max(j.session.control.now() for j in self.jobs.values())
 
+    # -------------------------------------------------------------- census
+
+    def _assert_census(self, in_flight: int = 0) -> None:
+        """The conservation law the fleet bench gates, asserted by every
+        pool-mutating entry point (guardlint GL005): each node ever
+        registered or provisioned is in exactly one place — some job's
+        census, the free pool, or the ghost ledger. ``in_flight`` is the
+        number of nodes legitimately between places at the call site
+        (a synchronous grant is handed to the caller, who registers it
+        into the job census only after ``acquire`` returns)."""
+        live = sum(len(j.session.manager.state) for j in self.jobs.values())
+        expected = sum(j.inventory + j.provisions
+                       for j in self.jobs.values())
+        accounted = live + self.pool.free_count() + len(self.ghosts)
+        assert accounted + in_flight == expected, (
+            f"fleet census drift: live {live} + free "
+            f"{self.pool.free_count()} + ghosts {len(self.ghosts)} + "
+            f"in-flight {in_flight} != expected {expected}")
+
     # -------------------------------------------------------- registration
 
     def register_job(self, job_id: str, session: GuardSession,
@@ -156,6 +175,7 @@ class FleetController:
         mgr.attach_pool(_JobPool(self, job_id))
         session.scheduler.rebind_bench(self.bench)
         session.add_sink(self.log.session_sink(job_id))
+        self._assert_census()
         self.overhead_s += time.perf_counter() - t0
         return job
 
@@ -196,6 +216,9 @@ class FleetController:
             t=now, step=-1, node_id=nid, job=job_id, lease_kind=kind,
             priority=job.priority, provisioned=lease.provisioned,
             transfer=lease.transfer, wait_s=lease.wait_s))
+        # the granted node is between places until the caller's
+        # take_spare registers it into the job census
+        self._assert_census(in_flight=1)
         # materializing capacity is substrate (datacenter) work, not
         # control-plane arbitration — keep it out of the overhead gate
         self.overhead_s += max(time.perf_counter() - t0 - substrate_s, 0.0)
@@ -210,6 +233,7 @@ class FleetController:
         self.log.append(job_id, SpareReclaimed(
             t=now, step=-1, node_id=node_id, job=job_id,
             reason="returned to pool"))
+        self._assert_census()
         self.overhead_s += time.perf_counter() - t0
 
     def request_spare(self, job_id: str, kind: str = "swap"):
@@ -217,8 +241,10 @@ class FleetController:
         arbitrates. Used for planned top-ups and by the contention
         tests; urgent replacement goes through ``acquire``."""
         job = self.jobs[job_id]
-        return self.pool.request(job_id, LeaseKind.from_str(kind),
-                                 job.priority, self.now())
+        req = self.pool.request(job_id, LeaseKind.from_str(kind),
+                                job.priority, self.now())
+        self._assert_census()
+        return req
 
     # -------------------------------------------------------- maintenance
 
@@ -284,6 +310,7 @@ class FleetController:
                             LeaseKind.HANG_EVICT: "hang"}[req.kind],
                 priority=req.priority, provisioned=lease.provisioned,
                 transfer=req.lease.transfer, wait_s=lease.wait_s))
+        self._assert_census()
         sweep0 = 0.0
         if self.healthscan is not None:
             sweep0 = self.healthscan.sweep_wall_s

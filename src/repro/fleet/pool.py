@@ -123,10 +123,28 @@ class GlobalSparePool:
 
     # ------------------------------------------------------------ census
 
+    def _assert_census(self) -> None:
+        """Pool conservation, asserted by every mutating entry point
+        (guardlint GL005): the O(1) per-home counter matches the free
+        list exactly, no node is simultaneously free and leased, and
+        every job with grants is registered."""
+        by_home: Dict[str, int] = {}
+        for (home, _nid) in self._free:
+            by_home[home] = by_home.get(home, 0) + 1
+        recorded = {h: n for h, n in self._free_by_home.items() if n}
+        assert recorded == by_home, \
+            f"pool census drift: counter {recorded} != free list {by_home}"
+        overlap = self._free.keys() & self._leased.keys()
+        assert not overlap, \
+            f"nodes both free and leased: {sorted(overlap)}"
+        assert set(self.granted_to) == set(self.jobs), \
+            "grant accounting for unregistered job"
+
     def register_job(self, job: str) -> None:
         if job not in self.granted_to:
             self.jobs.append(job)
             self.granted_to[job] = 0
+        self._assert_census()
 
     def free_count(self, home: Optional[str] = None) -> int:
         if home is None:
@@ -159,6 +177,7 @@ class GlobalSparePool:
         self._leased.pop(key, None)
         self._free[key] = SpareRecord(node_id, home, float(now))
         self._free_by_home[home] = self._free_by_home.get(home, 0) + 1
+        self._assert_census()
 
     def remove(self, node_id: int, home: str) -> Optional[SpareRecord]:
         """Pull a free node out of the pool without granting it (the
@@ -166,6 +185,7 @@ class GlobalSparePool:
         rec = self._free.pop((home, node_id), None)
         if rec is not None:
             self._free_by_home[home] -= 1
+        self._assert_census()
         return rec
 
     # ------------------------------------------------------------- grants
@@ -195,6 +215,7 @@ class GlobalSparePool:
         lease = Lease(pick.node_id, job, kind, float(now), home=pick.home,
                       wait_s=float(wait_s), transfer=transfer)
         self._note_grant(lease)
+        self._assert_census()
         return lease
 
     def note_provisioned(self, node_id: int, job: str, kind: LeaseKind,
@@ -219,6 +240,7 @@ class GlobalSparePool:
         self.stats.max_wait_s = max(self.stats.max_wait_s, lease.wait_s)
         if lease.wait_s > self.starvation_age_s:
             self.stats.starvation_events += 1
+        self._assert_census()
 
     # -------------------------------------------------------- async queue
 
@@ -229,6 +251,7 @@ class GlobalSparePool:
         self._seq += 1
         req = LeaseRequest(job, kind, int(priority), float(now), self._seq)
         self._queue.append(req)
+        self._assert_census()
         return req
 
     def _below_floor(self, job: str) -> bool:
@@ -268,6 +291,7 @@ class GlobalSparePool:
             best.lease = lease
             self._queue.remove(best)
             served.append(best)
+        self._assert_census()
         return served
 
     # ------------------------------------------------------------ queries

@@ -1,3 +1,4 @@
+# guardlint: hot  (fleet-sized arrays live here: float32, no per-node loops)
 """Fused fleet-score kernel: peer-median, MAD, robust-z and threshold
 verdicts over ``(R, M, N)`` ring-buffer rows in one pass, float32.
 

@@ -1,3 +1,4 @@
+# guardlint: hot  (fleet-sized arrays live here: float32, no per-node loops)
 """Public fleet-score entry point: one call scores R ring-buffer rows.
 
 ``score_rows`` dispatches between three interchangeable backends:

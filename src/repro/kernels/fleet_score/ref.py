@@ -1,3 +1,4 @@
+# guardlint: hot  (fleet-sized arrays live here: float32, no per-node loops)
 """NumPy oracle for the fleet-score kernel: batched peer-relative
 scoring of ring-buffer rows, float32 end-to-end.
 

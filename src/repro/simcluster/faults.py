@@ -252,11 +252,8 @@ class FaultInjector:
 
     def _unregister(self, f: Fault) -> None:
         lst = self._by_node.get(f.node)
-        if lst is not None:
-            try:
-                lst.remove(f)
-            except ValueError:
-                pass
+        if lst is not None and f in lst:
+            lst.remove(f)
         self._kind_count[f.kind][f.node] -= 1
         if f.kind == FaultKind.CONGESTION:
             self._cong_count[f.node] -= 1

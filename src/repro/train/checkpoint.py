@@ -79,6 +79,7 @@ class CheckpointManager:
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._error_ctx: Optional[Tuple[int, int]] = None   # (step, seq)
         self._seq = 0           # unique tmp suffix: re-saves never collide
         os.makedirs(directory, exist_ok=True)
         self._clean_debris()
@@ -115,6 +116,7 @@ class CheckpointManager:
             self._write(step, seq, flat, manifest)
         except BaseException as e:      # surfaced by the next wait()
             self._error = e
+            self._error_ctx = (int(step), int(seq))
 
     def _write(self, step: int, seq: int, flat, manifest) -> None:
         tmp = os.path.join(self.dir, f".tmp-{step}-{seq}")
@@ -154,8 +156,11 @@ class CheckpointManager:
             self._thread = None
         if self._error is not None:
             err, self._error = self._error, None
+            ctx, self._error_ctx = self._error_ctx, None
             if raise_errors:
-                raise RuntimeError("async checkpoint write failed") from err
+                where = f" (step {ctx[0]}, seq {ctx[1]})" if ctx else ""
+                raise RuntimeError(
+                    f"async checkpoint write failed{where}") from err
 
     # ---------------------------------------------------------- restore
 

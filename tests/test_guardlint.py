@@ -1,0 +1,470 @@
+"""guardlint: per-rule caught/pass fixtures, pragma grammar, self-lint.
+
+Each GLxxx rule gets at least one deliberately-seeded violation fixture
+(must be caught) and one allowlisted/clean fixture (must pass), plus the
+meta-policy tests: suppressions without reasons are themselves
+violations, and the repo's own tree lints clean with all 8 rules active.
+"""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.guardlint import RULES, lint_paths
+from repro.analysis.guardlint.__main__ import main as guardlint_main
+from repro.analysis.guardlint.pragmas import parse_pragmas
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+KNOWN = set(RULES)
+
+
+def make_project(tmp_path, files, readme=None, gates=None):
+    """Write a fixture repo and lint its src/ tree."""
+    (tmp_path / "pyproject.toml").write_text("[project]\nname = 'fx'\n")
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    if readme is not None:
+        (tmp_path / "README.md").write_text(readme)
+    if gates is not None:
+        bdir = tmp_path / "benchmarks"
+        bdir.mkdir(exist_ok=True)
+        (bdir / "gates.json").write_text(json.dumps(gates))
+    src_dir = tmp_path / "src"
+    src_dir.mkdir(exist_ok=True)
+    return lint_paths([str(src_dir)], root=str(tmp_path))
+
+
+def hits(result, rule):
+    return [v for v in result.violations if v.rule == rule]
+
+
+# ------------------------------------------------------------ GL001
+
+
+class TestGL001Determinism:
+    def test_catches_unseeded_and_wallclock(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/simcluster/x.py": """
+            import time
+            import numpy as np
+            from time import time as wall
+
+            def f():
+                a = np.random.rand(4)           # module stream
+                g = np.random.default_rng()     # unseeded ctor
+                t = time.time()                 # wall clock
+                u = wall()                      # aliased wall clock
+                return a, g, t, u
+        """})
+        lines = sorted(v.line for v in hits(res, "GL001"))
+        assert len(lines) == 4
+
+    def test_seeded_and_perf_counter_pass(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/diagnose/x.py": """
+            import time
+            import numpy as np
+
+            RNG = np.random.default_rng(1234)
+            LEGACY = np.random.RandomState(7)
+
+            def f():
+                t0 = time.perf_counter()
+                return RNG.normal(), LEGACY.rand(3), t0
+        """})
+        assert not hits(res, "GL001")
+
+    def test_non_replay_packages_exempt(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/train/x.py": """
+            import time
+            STAMP = time.time()
+        """})
+        assert not hits(res, "GL001")
+
+
+# ------------------------------------------------------------ GL002
+
+
+class TestGL002DtypeDiscipline:
+    def test_catches_f64_in_hot_module(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/core/x.py": """
+            # guardlint: hot
+            import numpy as np
+
+            def f(x):
+                a = np.zeros(100)               # dtype-defaulting
+                b = x.astype(np.float64)        # explicit f64
+                c = x.astype(float)             # builtin float == f64
+                return a, b, c
+        """})
+        assert len(hits(res, "GL002")) == 3
+
+    def test_explicit_f32_passes(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/core/x.py": """
+            # guardlint: hot
+            import numpy as np
+
+            def f(x):
+                a = np.zeros(100, np.float32)
+                b = np.full((2, 3), np.nan, dtype=np.float32)
+                return a, b, x.astype(np.float32)
+        """})
+        assert not hits(res, "GL002")
+
+    def test_cold_modules_exempt(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/core/x.py": """
+            import numpy as np
+            SCRATCH = np.zeros(8)
+        """})
+        assert not hits(res, "GL002")
+
+    def test_pragma_with_reason_suppresses(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/core/x.py": """
+            # guardlint: hot
+            import numpy as np
+            # guardlint: disable=GL002 reason=rolling f64 accumulator
+            ACC = np.zeros(8, np.float64)
+        """})
+        assert not hits(res, "GL002")
+        assert any(v.rule == "GL002" for v, _ in res.suppressed)
+
+
+# ------------------------------------------------------------ GL003
+
+
+class TestGL003HotLoops:
+    def test_catches_per_node_loops(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/core/x.py": """
+            # guardlint: hot
+            def f(self, nodes, n):
+                out = []
+                for node in self.nodes:
+                    out.append(node)
+                for i in range(len(nodes)):
+                    out.append(i)
+                vals = [i * 2 for i in range(self.n_nodes)]
+                return out, vals
+        """})
+        assert len(hits(res, "GL003")) == 3
+
+    def test_flagged_sized_loops_pass(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/core/x.py": """
+            # guardlint: hot
+            def f(flagged, changed):
+                out = [x for x in flagged]      # O(flagged), fine
+                for c in changed:
+                    out.append(c)
+                return out
+        """})
+        assert not hits(res, "GL003")
+
+
+# ------------------------------------------------------------ GL004
+
+
+_EVENT_BASE = textwrap.dedent("""
+    import dataclasses
+    from typing import ClassVar, Tuple
+
+    @dataclasses.dataclass(frozen=True)
+    class GuardEvent:
+        kind: ClassVar[str] = "base"
+        t: float = 0.0
+""")
+
+
+def ev_file(extra):
+    """Flush-left event-module fixture: shared base + test-specific part."""
+    return _EVENT_BASE + textwrap.dedent(extra)
+
+
+class TestGL004EventTaxonomy:
+    def test_complete_event_passes(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/guard/ev.py": ev_file("""
+            @dataclasses.dataclass(frozen=True)
+            class NodeZapped(GuardEvent):
+                kind: ClassVar[str] = "node_zapped"
+                node_id: int = -1
+
+            EVENT_TYPES: Tuple[type, ...] = (NodeZapped,)
+        """)}, readme="| `node_zapped` | a node was zapped |\n")
+        assert not res.violations       # parseable AND taxonomy-complete
+
+    def test_catches_missing_kind_registry_and_readme(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/guard/ev.py": ev_file("""
+            @dataclasses.dataclass(frozen=True)
+            class Unkinded(GuardEvent):
+                node_id: int = -1
+
+            @dataclasses.dataclass(frozen=True)
+            class Undocumented(GuardEvent):
+                kind: ClassVar[str] = "undocumented"
+                node_id: int = -1
+
+            EVENT_TYPES: Tuple[type, ...] = (Unkinded,)
+        """)}, readme="nothing here\n")
+        msgs = " ".join(v.message for v in hits(res, "GL004"))
+        assert "does not declare" in msgs          # Unkinded: no kind
+        assert "README" in msgs                    # Undocumented: no row
+        assert "registry" in msgs                  # Undocumented: no entry
+
+    def test_catches_unserializable_payload(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/guard/ev.py": ev_file("""
+            import numpy as np
+
+            @dataclasses.dataclass(frozen=True)
+            class BadPayload(GuardEvent):
+                kind: ClassVar[str] = "bad_payload"
+                arr: np.ndarray = None
+
+            EVENT_TYPES: Tuple[type, ...] = (BadPayload,)
+        """)}, readme="| `bad_payload` | row |\n")
+        assert any("JSONL" in v.message for v in hits(res, "GL004"))
+
+
+# ------------------------------------------------------------ GL005
+
+
+class TestGL005CensusDiscipline:
+    def test_catches_unasserted_mutation(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/fleet/p.py": """
+            class GlobalSparePool:
+                def __init__(self):
+                    self._free = {}
+
+                def add(self, key, rec):
+                    self._free[key] = rec       # no census assert
+        """})
+        assert len(hits(res, "GL005")) == 1
+
+    def test_asserted_mutation_and_readonly_pass(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/fleet/p.py": """
+            class GlobalSparePool:
+                def __init__(self):
+                    self._free = {}
+
+                def _assert_census(self):
+                    assert isinstance(self._free, dict)
+
+                def add(self, key, rec):
+                    self._free[key] = rec
+                    self._assert_census()
+
+                def free_count(self):
+                    return len(self._free)      # read-only: exempt
+        """})
+        assert not hits(res, "GL005")
+
+    def test_other_classes_exempt(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/fleet/p.py": """
+            class SomethingElse:
+                def add(self, key, rec):
+                    self._free[key] = rec
+        """})
+        assert not hits(res, "GL005")
+
+
+# ------------------------------------------------------------ GL006
+
+
+class TestGL006SwallowedExceptions:
+    def test_catches_bare_and_swallowed(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/train/w.py": """
+            def f(x):
+                try:
+                    x()
+                except:
+                    x = None
+                try:
+                    x()
+                except ValueError:
+                    pass
+        """})
+        assert len(hits(res, "GL006")) == 2
+
+    def test_surfaced_handler_passes(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/train/w.py": """
+            import logging
+
+            def f(x, payload):
+                try:
+                    x()
+                except ValueError as e:
+                    logging.error("write failed for %r: %s", payload, e)
+                    raise
+        """})
+        assert not hits(res, "GL006")
+
+
+# ------------------------------------------------------------ GL007
+
+
+_BENCH = """
+    FOO_GATE = 1.5
+    def run():
+        return FOO_GATE
+"""
+
+
+class TestGL007GateManifest:
+    def test_missing_manifest_caught(self, tmp_path):
+        res = make_project(tmp_path, {"benchmarks/bench_a.py": _BENCH})
+        assert any("missing" in v.message for v in hits(res, "GL007"))
+
+    def test_value_drift_caught(self, tmp_path):
+        res = make_project(tmp_path, {"benchmarks/bench_a.py": _BENCH},
+                           gates={"bench_a.py": {"FOO_GATE": 2.0}})
+        assert any("drifted" in v.message for v in hits(res, "GL007"))
+
+    def test_vanished_gate_caught(self, tmp_path):
+        res = make_project(
+            tmp_path, {"benchmarks/bench_a.py": _BENCH},
+            gates={"bench_a.py": {"FOO_GATE": 1.5, "GONE_GATE": 3.0}})
+        assert any("GONE_GATE" in v.message for v in hits(res, "GL007"))
+
+    def test_exact_manifest_passes(self, tmp_path):
+        res = make_project(tmp_path, {"benchmarks/bench_a.py": _BENCH},
+                           gates={"bench_a.py": {"FOO_GATE": 1.5}})
+        assert not hits(res, "GL007")
+
+
+# ------------------------------------------------------------ GL008
+
+
+class TestGL008KernelParity:
+    def test_missing_ref_caught(self, tmp_path):
+        res = make_project(tmp_path, {
+            "src/repro/kernels/mykern/ops.py": "def op(x):\n    return x\n"})
+        assert any("no ref.py" in v.message for v in hits(res, "GL008"))
+
+    def test_untested_ref_caught(self, tmp_path):
+        res = make_project(tmp_path, {
+            "src/repro/kernels/mykern/ops.py": "def op(x):\n    return x\n",
+            "src/repro/kernels/mykern/ref.py":
+                "def op_ref(x):\n    return x\n"})
+        assert any("golden parity" in v.message for v in hits(res, "GL008"))
+
+    def test_ref_with_golden_test_passes(self, tmp_path):
+        res = make_project(tmp_path, {
+            "src/repro/kernels/mykern/ops.py": "def op(x):\n    return x\n",
+            "src/repro/kernels/mykern/ref.py":
+                "def op_ref(x):\n    return x\n",
+            "tests/test_mykern.py": """
+                from repro.kernels.mykern import op, op_ref
+
+                def test_parity():
+                    assert op(1) == op_ref(1)
+            """})
+        assert not hits(res, "GL008")
+
+
+# ------------------------------------------------- pragma grammar / GL000
+
+
+class TestPragmas:
+    def test_hot_tag_with_annotation(self):
+        p = parse_pragmas("# guardlint: hot  (detector window)\nx = 1\n",
+                          KNOWN)
+        assert p.hot and not p.errors
+
+    def test_trailing_disable_applies_to_its_line(self):
+        src = "import numpy as np\nx = 1  " \
+              "# guardlint: disable=GL002 reason=scratch\n"
+        p = parse_pragmas(src, KNOWN)
+        assert p.suppresses("GL002", 2) == "scratch"
+        assert p.suppresses("GL002", 1) is None
+        assert p.suppresses("GL003", 2) is None
+
+    def test_own_line_disable_applies_to_next_code_line(self):
+        src = ("# guardlint: disable=GL002,GL003 reason=compat shim\n"
+               "# more prose\n"
+               "x = 1\n")
+        p = parse_pragmas(src, KNOWN)
+        assert p.suppresses("GL002", 3) == "compat shim"
+        assert p.suppresses("GL003", 3) == "compat shim"
+
+    def test_disable_file_scope(self):
+        src = "# guardlint: disable-file=GL006 reason=generated code\nx=1\n"
+        p = parse_pragmas(src, KNOWN)
+        assert p.suppresses("GL006", 999) == "generated code"
+
+    def test_missing_reason_is_meta_violation(self):
+        p = parse_pragmas("# guardlint: disable=GL006\nx = 1\n", KNOWN)
+        assert p.errors and "reason" in p.errors[0].message
+        assert p.suppresses("GL006", 2) is None
+
+    def test_unknown_rule_is_meta_violation(self):
+        p = parse_pragmas("# guardlint: disable=GL999 reason=x\n", KNOWN)
+        assert p.errors and "GL999" in p.errors[0].message
+
+    def test_pragma_in_string_literal_ignored(self):
+        p = parse_pragmas('s = "# guardlint: disable=GL006 reason=no"\n',
+                          KNOWN)
+        assert not p.errors and p.suppresses("GL006", 1) is None
+
+    def test_reasonless_suppression_fails_the_lint(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/train/w.py": """
+            def f(x):
+                try:
+                    x()
+                except ValueError:  # guardlint: disable=GL006
+                    pass
+        """})
+        assert any(v.rule == "GL000" for v in res.violations)
+        assert hits(res, "GL006")      # and the suppression did NOT apply
+
+    def test_gl000_is_never_suppressible(self, tmp_path):
+        res = make_project(tmp_path, {"src/repro/train/w.py": """
+            # guardlint: disable-file=GL000 reason=nice try
+            x = 1
+        """})
+        assert any(v.rule == "GL000" for v in res.violations)
+
+
+# ------------------------------------------------------------ CLI + self
+
+
+class TestCLI:
+    def test_exit_codes_and_json_report(self, tmp_path, capsys):
+        (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+        bad = tmp_path / "src" / "repro" / "train" / "w.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("try:\n    pass\nexcept:\n    pass\n")
+        report = tmp_path / "report.json"
+        rc = guardlint_main([str(tmp_path / "src"),
+                             "--json", str(report)])
+        assert rc == 1
+        data = json.loads(report.read_text())
+        assert data["ok"] is False and data["counts"]["GL006"] >= 1
+        capsys.readouterr()
+
+        bad.write_text("x = 1\n")
+        rc = guardlint_main([str(tmp_path / "src")])
+        assert rc == 0
+        capsys.readouterr()
+
+    def test_unknown_only_rule_is_usage_error(self, tmp_path, capsys):
+        rc = guardlint_main([str(tmp_path), "--only", "GL042"])
+        assert rc == 2
+        capsys.readouterr()
+
+    def test_list_rules(self, capsys):
+        assert guardlint_main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for rid in sorted(RULES):
+            assert rid in out
+
+
+class TestSelfLint:
+    def test_eight_rules_registered(self):
+        assert len(RULES) == 8
+        assert sorted(RULES) == [f"GL00{i}" for i in range(1, 9)]
+
+    def test_repo_lints_clean(self):
+        res = lint_paths([str(REPO_ROOT / "src")], root=str(REPO_ROOT))
+        assert res.ok, "self-lint violations:\n" + "\n".join(
+            v.render() for v in res.violations)
+        # the mandatory-reason policy: every live suppression documents why
+        for v, reason in res.suppressed:
+            assert reason.strip(), f"reason-less suppression for {v}"

@@ -6,6 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import attention, attention_ref
+from repro.kernels.fleet_score import (median_lastdim_ref, score_rows,
+                                       score_rows_ref)
 from repro.kernels.sweep_burn import burn, burn_flops, burn_ref
 from repro.kernels.wkv6 import wkv6, wkv6_naive
 
@@ -136,3 +138,50 @@ class TestSweepBurn:
         o1 = burn(a, b, iters=16, iters_per_block=8)
         o2 = burn(a, b, iters=16, iters_per_block=8)
         assert np.array_equal(np.asarray(o1), np.asarray(o2))
+
+
+class TestFleetScore:
+    """Golden parity for repro.kernels.fleet_score: the jax and pallas
+    backends must agree with the NumPy oracle (``score_rows_ref``)
+    bit-for-bit on verdict masks — the detector's scalar-vs-batched
+    contract rides on it."""
+
+    def _mats(self, R, M, N):
+        # tight healthy baseline (1.0-1.1) so the planted slowdowns are
+        # unambiguous under the robust-z threshold for any seed draw
+        mats = (rng.rand(R, M, N).astype(np.float32) * 0.1 + 1.0)
+        mats[:, 0, N - 1] *= 1.5          # planted step-time straggler
+        mats[:, 0, 3] *= 1.3
+        return mats
+
+    @pytest.mark.parametrize("n", [5, 8, 64, 129])
+    def test_median_ref_matches_numpy(self, n):
+        x = rng.rand(4, 3, n).astype(np.float32)
+        got = median_lastdim_ref(x)
+        want = np.median(x, axis=-1, keepdims=True).astype(np.float32)
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("backend", ["jax", "pallas"])
+    @pytest.mark.parametrize("R,M,N", [(3, 4, 64), (2, 3, 130)])
+    def test_backends_match_ref(self, backend, R, M, N):
+        mats = self._mats(R, M, N)
+        dirs = [1.0, 1.0, -1.0, 1.0][:M]
+        dev_r, rel_r, con_r = score_rows_ref(mats, dirs, 0)
+        dev_b, rel_b, con_b = score_rows(mats, dirs, 0, backend=backend)
+        np.testing.assert_array_equal(dev_r, dev_b)     # bit-identical
+        np.testing.assert_allclose(rel_r, rel_b, rtol=0, atol=0)
+        np.testing.assert_allclose(con_r, con_b, rtol=0, atol=0)
+
+    def test_planted_straggler_flagged(self):
+        mats = self._mats(2, 3, 32)
+        dev, rel, contrib = score_rows_ref(mats, [1.0, 1.0, 1.0], 0)
+        assert dev[:, 0, 31].all()
+        assert (contrib[:, 31] > 0).all()
+        assert contrib.shape == rel.shape == (2, 32)
+
+    def test_numpy_backend_is_the_ref(self):
+        mats = self._mats(2, 2, 16)
+        a = score_rows(mats, [1.0, 1.0], 0, backend="numpy")
+        b = score_rows_ref(mats, [1.0, 1.0], 0)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
